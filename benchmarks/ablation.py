@@ -1,0 +1,58 @@
+"""Fig.-6 analog: fine-grained optimization ablations.
+
+The paper removes one optimization at a time (noRS / noES / noWS). The
+TPU-native analogs:
+
+  * full     — dense engine, degeneracy order (shared counts pass = the
+               reverse-scanning + lookup-table replacement), distributed
+               rebalancing ON (measured in workload.py; here single-worker)
+  * noES     — input order: no per-level candidate selection (the paper's
+               early-stop exists to make degeneracy ordering affordable;
+               removing the ordering is the algorithmic ablation). Search
+               tree grows -> more node visits.
+  * noRS     — compact engine: per-node gather-based set construction
+               instead of the dense one-pass AND+popcount over the whole
+               adjacency (the closest CPU-style per-element analog).
+  * (noWS    — covered by workload.py on 8 simulated devices.)
+
+Reported: node visits (search-tree size — hardware-independent), wall
+time, and counts (must agree).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import engine_compact as ec
+from repro.core import engine_dense as ed
+from repro.data import dataset_suite
+
+
+def _run(fn):
+    fn()                       # compile
+    t0 = time.perf_counter()
+    st = fn()
+    return time.perf_counter() - t0, st
+
+
+def run(scale: str = "bench") -> list[dict]:
+    rows = []
+    for name, g in dataset_suite(scale).items():
+        t_full, s_full = _run(lambda: ed.enumerate_dense(g, "deg"))
+        t_noes, s_noes = _run(lambda: ed.enumerate_dense(g, "input"))
+        t_nors, s_nors = _run(lambda: ec.enumerate_compact(g, "deg"))
+        assert int(s_full.n_max) == int(s_noes.n_max) == int(s_nors.n_max)
+        rows.append(dict(
+            dataset=name, n_maximal=int(s_full.n_max),
+            full_s=round(t_full, 4), noES_s=round(t_noes, 4),
+            noRS_s=round(t_nors, 4),
+            full_nodes=int(s_full.nodes), noES_nodes=int(s_noes.nodes),
+            noES_slowdown=round(t_noes / max(t_full, 1e-9), 2),
+            noRS_slowdown=round(t_nors / max(t_full, 1e-9), 2),
+            node_ratio=round(int(s_noes.nodes) /
+                             max(int(s_full.nodes), 1), 2)))
+        print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

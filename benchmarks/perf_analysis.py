@@ -1,0 +1,116 @@
+"""§Perf analysis: kernel-adjusted roofline terms for the hillclimb cells.
+
+The dry-run compiles the XLA-level flash attention (a Pallas kernel
+cannot lower for TPU on this CPU-only box). The Pallas flash kernel
+(kernels/flash_attention — validated fwd+bwd vs oracle) keeps the score/
+probability tiles in VMEM, so its deployment deletes exactly the HBM and
+collective rows that live in the flash inner loops. This script performs
+that substitution *mechanically*:
+
+  1. classify HLO cost rows by trip multiplier: rows with rm a multiple
+     of L x nk tiles (the flash inner loops) are attention-internal;
+  2. remove them; add the kernel's analytic traffic (q/o once, k/v per
+     (group x q-tile) fetch, dq/dkv passes, lse/dD rows) and the
+     shard_map backward's per-layer dk/dv psum;
+  3. report the before/after roofline terms.
+
+Everything else in the module (weights, MLP, collectives outside the
+flash loops) keeps its *measured* value.
+
+  PYTHONPATH=src python -m benchmarks.perf_analysis
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, derive
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def _load(cell: str):
+    rec = json.load(open(os.path.join(ART, cell + ".json")))
+    with gzip.open(os.path.join(ART, cell + ".hlo.txt.gz"), "rt") as f:
+        hlo = f.read()
+    return rec, hlo
+
+
+def flash_kernel_traffic(*, L, B_loc, Sq_loc, Sk, KV, G, hd, bq, bk,
+                         w=2):
+    """Per-device HBM bytes/step for the Pallas flash kernels (fwd + dq +
+    dkv passes), training (fwd + bwd)."""
+    q = B_loc * Sq_loc * KV * G * hd * w
+    kv = B_loc * Sk * KV * hd * w          # one of k or v
+    nq = max(Sq_loc // bq, 1)
+    nk = max(Sk // bk, 1)
+    lse = B_loc * KV * G * Sq_loc * 4
+    fwd = q + q + 2 * kv * G * nq + lse              # q,o + k,v refetch
+    dq = 2 * q + 2 * kv * G * nq + 2 * lse           # q,do,dq + k,v + lse,dD
+    dkv = 2 * kv + 2 * kv + 2 * q * nk + 2 * lse     # k,v,dk,dv + q,do
+    return (fwd + dq + dkv) * L
+
+
+def adjust_cell(cell: str, cfg_dims: dict) -> dict:
+    from repro.launch.hlo_stats import module_stats
+    rec, hlo = _load(cell)
+    det: list = []
+    stats = module_stats(hlo, detail=det)
+
+    L = cfg_dims["L"]
+    flash_rm = cfg_dims["flash_rm"]        # rm values inside flash loops
+    removed_hbm = sum(b for b, op, cn, ty, rm in det
+                      if rm in flash_rm and op not in (
+                          "all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"))
+    removed_coll = sum(b for b, op, cn, ty, rm in det
+                       if rm in flash_rm and op in (
+                           "all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+    kern = flash_kernel_traffic(**cfg_dims["kernel"])
+    # backward dk/dv psum over the model axis (shard_map transpose):
+    kv_psum = 2 * cfg_dims["kernel"]["B_loc"] * cfg_dims["kernel"]["Sk"] \
+        * cfg_dims["kernel"]["KV"] * cfg_dims["kernel"]["hd"] * 2 * L
+
+    before = dict(hbm=stats["hbm_bytes"],
+                  coll=stats["collectives"]["total"],
+                  flops=stats["flops"] + stats["conv_flops"])
+    after = dict(hbm=before["hbm"] - removed_hbm + kern,
+                 coll=before["coll"] - removed_coll + kv_psum,
+                 flops=before["flops"])
+    out = dict(cell=cell, removed_hbm=removed_hbm,
+               removed_coll=removed_coll, kernel_hbm=kern,
+               kv_psum=kv_psum)
+    for tag, d in (("before", before), ("after", after)):
+        out[tag] = dict(
+            compute_s=d["flops"] / PEAK_FLOPS,
+            memory_s=d["hbm"] / HBM_BW,
+            collective_s=d["coll"] / LINK_BW)
+        out[tag]["step_s"] = max(out[tag].values()) if False else max(
+            out[tag]["compute_s"], out[tag]["memory_s"],
+            out[tag]["collective_s"])
+    rec2 = dict(rec)
+    nd = rec["n_devices"]
+    mf = derive(rec)["model_flops"]
+    for tag in ("before", "after"):
+        out[tag]["mfu"] = mf / (nd * PEAK_FLOPS * out[tag]["step_s"])
+    return out
+
+
+LLAMA3_TRAIN = dict(
+    L=32,
+    flash_rm={128, 256},                 # 32 layers x {4, 8} kv tiles
+    kernel=dict(L=32, B_loc=16, Sq_loc=256, Sk=4096, KV=8, G=4, hd=128,
+                bq=256, bk=512),
+)
+
+
+def main():
+    res = adjust_cell("llama3-8b__train_4k__pod1", LLAMA3_TRAIN)
+    print(json.dumps(res, indent=1, default=float))
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Distributed MBE with work stealing on simulated devices.
+
+    PYTHONPATH=src python examples/mbe_distributed.py
+
+Re-executes itself with 8 simulated XLA host devices (the paper's
+thread-block grid, scaled down), enumerates a workload-imbalanced
+power-law graph with and without the round-based work-stealing rebalance,
+and prints the per-worker busy-step distribution — the live version of
+the paper's Figure 5.
+"""
+import os
+import subprocess
+import sys
+
+_CHILD = "REPRO_MBE_EXAMPLE_CHILD"
+
+if _CHILD not in os.environ:
+    env = dict(os.environ, **{_CHILD: "1"})
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    raise SystemExit(subprocess.call([sys.executable, __file__], env=env))
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+
+from repro.baselines import count_mbea                  # noqa: E402
+from repro.core import distributed as dd                # noqa: E402
+from repro.core import engine_dense as ed               # noqa: E402
+from repro.data import powerlaw_bipartite               # noqa: E402
+
+g = powerlaw_bipartite(256, 512, m_edges=7000, alpha=1.35, seed=12,
+                       name="marvel-like")
+print(f"[mbe] {g.name}: |U|={g.n_u} |V|={g.n_v} |E|={len(g.edges)} "
+      f"on {jax.device_count()} devices")
+
+oracle = count_mbea(g)
+mesh = jax.make_mesh((8,), ("workers",))
+cfg = ed.make_config(g)
+
+for ws in (False, True):
+    dist = dd.DistConfig(steps_per_round=512, workers_per_device=2,
+                         work_stealing=ws)
+    _, _, driver = dd.make_distributed_runner(g, cfg, mesh, ("workers",),
+                                              dist)
+    state, log = driver()
+    tot = dd.totals(state)
+    assert tot["n_max"] == oracle, (tot["n_max"], oracle)
+    busy = np.stack([r["busy"] for r in log]).sum(0).astype(float)
+    rel = busy / busy.mean()
+    tag = "work-stealing" if ws else "static       "
+    print(f"[{tag}] nMB={tot['n_max']} rounds={len(log)} "
+          f"busy min/med/max = {rel.min():.2f}/{np.median(rel):.2f}/"
+          f"{rel.max():.2f} (x mean)   std={rel.std():.3f}")
+
+print("[mbe] both schedules agree with the serial oracle "
+      "(benchmarks/workload.py sweeps all dataset families for the "
+      "Fig.-5 load-distribution comparison).")

@@ -1,0 +1,55 @@
+"""Quickstart: enumerate maximal bicliques with the cuMBE-on-TPU engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's Figure-1 example graph, runs the dense (TPU-native)
+engine and the serial Algorithm-1 oracle, and shows they agree; then runs
+a bigger power-law graph through the engine with the paper's degeneracy
+candidate ordering and prints the collected bicliques of the small graph.
+"""
+import numpy as np
+
+from repro.baselines import enumerate_mbea, bicliques_to_key_set
+from repro.core import engine_dense as ed
+from repro.core.graph import BipartiteGraph
+from repro.data import powerlaw_bipartite
+
+# --- the paper's Fig. 1 example ------------------------------------------
+# U = {A..E} -> 0..4, V = {F..K} -> 0..5
+U = dict(A=0, B=1, C=2, D=3, E=4)
+V = dict(F=0, G=1, H=2, I=3, J=4, K=5)
+edges = [
+    (U["A"], V["F"]), (U["A"], V["G"]), (U["A"], V["H"]),
+    (U["B"], V["F"]), (U["B"], V["G"]), (U["B"], V["H"]),
+    (U["C"], V["F"]), (U["C"], V["G"]), (U["C"], V["H"]),
+    (U["C"], V["I"]),
+    (U["D"], V["I"]), (U["D"], V["J"]),
+    (U["E"], V["J"]), (U["E"], V["K"]),
+]
+g = BipartiteGraph.from_edges(5, 6, edges, name="fig1")
+
+state = ed.enumerate_dense(g, collect_cap=32)
+print(f"[fig1] engine found {int(state.n_max)} maximal bicliques "
+      f"in {int(state.nodes)} search nodes")
+
+uname = {v: k for k, v in U.items()}
+vname = {v: k for k, v in V.items()}
+for L, R in ed.collected_bicliques(
+        ed.make_config(g, collect_cap=32), state, g.n_u, g.n_v):
+    print("   R={%s}  L={%s}" % (",".join(uname[r] for r in R),
+                                 ",".join(vname[l] for l in L)))
+
+oracle = enumerate_mbea(g)
+assert int(state.n_max) == len(bicliques_to_key_set(oracle))
+print("[fig1] matches the Algorithm-1 oracle\n")
+
+# --- something bigger ------------------------------------------------------
+big = powerlaw_bipartite(192, 384, m_edges=4000, alpha=1.4, seed=7,
+                         name="demo-powerlaw")
+state = ed.enumerate_dense(big)
+print(f"[{big.name}] |U|={big.n_u} |V|={big.n_v} |E|={len(big.edges)}: "
+      f"{int(state.n_max)} maximal bicliques, "
+      f"{int(state.nodes)} nodes, {int(state.steps)} engine steps")
+n_ref = enumerate_mbea(big, collect=False)
+assert int(state.n_max) == n_ref, (int(state.n_max), n_ref)
+print("matches the oracle count — done.")

@@ -1,0 +1,69 @@
+"""End-to-end training example: a ~100M-param qwen3-family model for a few
+hundred steps on local devices, with checkpointing and an injected
+failure + automatic restart (fault tolerance demonstrated, not narrated).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the framework's real driver (repro.launch.train) — the same code path
+a pod launch uses; only the mesh is local.
+"""
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+from repro.launch.train import train
+import repro.configs.qwen3_1_7b as Q
+from repro.models.config import ModelConfig
+
+
+def make_100m() -> ModelConfig:
+    # ~100M params: 12 layers x d512 (8H/4KV) x ff2048, 32k vocab
+    return dataclasses.replace(
+        Q.CONFIG, name="qwen3-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv=4, d_ff=2048, vocab=32_000,
+        attn_chunk_q=256, attn_chunk_k=256, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = make_100m()
+    n = cfg.n_params()
+    print(f"[example] {cfg.name}: {n/1e6:.0f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    # register the reduced config as a smoke override and drive the real
+    # launcher (it accepts any arch id; we monkey-patch the smoke lookup
+    # to our 100M config so the example exercises the public CLI path)
+    import repro.configs as C
+    orig = C.get_smoke
+    C.get_smoke = lambda a: cfg if a == "qwen3-1.7b" else orig(a)
+
+    ckpt = tempfile.mkdtemp(prefix="repro_example_")
+    try:
+        result = train([
+            "--arch", "qwen3-1.7b", "--smoke",
+            "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--lr", "3e-4", "--ckpt-dir", ckpt,
+            "--ckpt-every", "100",
+            "--fail-at", str(args.steps // 2),   # mid-run failure
+        ])
+    finally:
+        C.get_smoke = orig
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+    hist = result["history"]
+    print(f"[example] loss {hist[0][1]:.3f} -> {hist[-1][1]:.3f} "
+          f"({result['restarts']} restart)")
+    assert hist[-1][1] < hist[0][1], "loss should decrease"
+    print("[example] done.")
+
+
+if __name__ == "__main__":
+    main()

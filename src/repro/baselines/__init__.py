@@ -1,0 +1,7 @@
+from repro.baselines.mbea import (  # noqa: F401
+    enumerate_bruteforce,
+    enumerate_mbea,
+    enumerate_parallel,
+    count_mbea,
+    bicliques_to_key_set,
+)

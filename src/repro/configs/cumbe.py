@@ -1,0 +1,41 @@
+"""The paper's own workload config: distributed MBE on the production mesh.
+
+This is the framework's first-class feature (DESIGN.md §1). The "shape"
+analog of an LM workload is a graph-scale class; the dry-run lowers the
+distributed round function (engine while_loop + work-stealing collective)
+for the production meshes exactly like an LM train_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.distributed import DistConfig
+from repro.core.engine_dense import EngineConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MBEWorkload:
+    name: str
+    n_u: int                 # padded |U|
+    n_v: int                 # padded |V|
+    density: float           # edge density (generator parameter)
+    depth: int               # DFS depth bound
+    dist: DistConfig = DistConfig()
+
+    def engine_config(self, impl: str = "jnp") -> EngineConfig:
+        return EngineConfig(n_u=self.n_u, n_v=self.n_v, m_real=self.n_u,
+                            depth=self.depth, impl=impl)
+
+
+# Production-scale MBE cell lowered by the dry-run. |U|=16384 bitset rows x
+# |V|=16384 -> adjacency 16384 x 512 u32 words = 32 MiB resident per device
+# (replicated graph, sharded root tasks) — the paper's Table-I scale class.
+CONFIG = MBEWorkload(
+    name="cumbe-16k", n_u=16_384, n_v=16_384, density=2e-3, depth=64,
+    dist=DistConfig(steps_per_round=4096, workers_per_device=1),
+)
+
+SMOKE = MBEWorkload(
+    name="cumbe-smoke", n_u=64, n_v=64, density=0.1, depth=66,
+    dist=DistConfig(steps_per_round=256, workers_per_device=2),
+)

@@ -1,0 +1,15 @@
+"""qwen3-1.7b [dense] — qk_norm, GQA. [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense",
+    n_layers=28, d_model=2048, n_heads=16, n_kv=8,
+    d_ff=6144, vocab=151936, qk_norm=True, rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv=2,
+    d_ff=128, vocab=256, qk_norm=True,
+    attn_chunk_q=64, attn_chunk_k=64, remat=False,
+)

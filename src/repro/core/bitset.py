@@ -1,0 +1,155 @@
+"""Packed uint32 bitset utilities.
+
+The whole MBE core works on packed bitsets: a set S over a universe of size n
+is a vector of ``ceil(n/32)`` uint32 words. All four MBEA phases reduce to
+bitwise AND + popcount + reductions over these words, which is the TPU-native
+(VPU lane) replacement for cuMBE's per-thread membership gather + lookup
+tables.
+
+Everything here is pure jnp and shape-static so it can live inside
+``lax.while_loop`` bodies and Pallas kernels alike.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# host-side helpers (numpy-only module; re-exported here for convenience)
+from repro.core.bitset_host import (  # noqa: F401
+    WORD, n_words, pack_indices, unpack, full_mask)
+
+_WORD_DT = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# jnp ops (trace-safe)
+# ---------------------------------------------------------------------------
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Per-word population count (uint32 -> int32)."""
+    return jax.lax.population_count(words).astype(jnp.int32)
+
+
+def count(words: jax.Array, axis=-1) -> jax.Array:
+    """Cardinality of a packed bitset (sum of popcounts along ``axis``)."""
+    return jnp.sum(popcount(words), axis=axis)
+
+
+def member(words: jax.Array, i: jax.Array) -> jax.Array:
+    """O(1) membership test: is ``i`` in the packed set? (bool scalar/array).
+
+    This is the TPU analogue of the paper's lookup table: a single word load
+    plus a bit test.
+    """
+    w = words[..., i // WORD]
+    return ((w >> (i % WORD).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+def add(words: jax.Array, i: jax.Array) -> jax.Array:
+    """Return ``words`` with bit ``i`` set."""
+    bit = (jnp.uint32(1) << (i % WORD).astype(jnp.uint32))
+    return words.at[..., i // WORD].set(words[..., i // WORD] | bit)
+
+
+def remove(words: jax.Array, i: jax.Array) -> jax.Array:
+    """Return ``words`` with bit ``i`` cleared."""
+    bit = (jnp.uint32(1) << (i % WORD).astype(jnp.uint32))
+    return words.at[..., i // WORD].set(words[..., i // WORD] & ~bit)
+
+
+def singleton(i: jax.Array, nw: int) -> jax.Array:
+    """Packed bitset {i} with ``nw`` words."""
+    word = (i // WORD).astype(jnp.int32)
+    bit = jnp.uint32(1) << (i % WORD).astype(jnp.uint32)
+    return jnp.where(jnp.arange(nw) == word, bit, jnp.uint32(0))
+
+
+def first_member(words: jax.Array) -> jax.Array:
+    """Index of the lowest set bit, or -1 if empty."""
+    nw = words.shape[-1]
+    nz = words != 0
+    any_set = jnp.any(nz, axis=-1)
+    wi = jnp.argmax(nz, axis=-1)  # first nonzero word
+    w = jnp.take_along_axis(words, wi[..., None], axis=-1)[..., 0]
+    # count trailing zeros of w via popcount((w & -w) - 1)
+    lsb = w & (~w + jnp.uint32(1))
+    tz = popcount(lsb - jnp.uint32(1))
+    idx = wi.astype(jnp.int32) * WORD + tz
+    return jnp.where(any_set, idx, -1)
+
+
+def iota_mask(n_bits_total: int, upto: jax.Array) -> jax.Array:
+    """Packed bitset of [0, upto) over a universe padded to n_bits_total."""
+    nw = n_words(n_bits_total)
+    word_idx = jnp.arange(nw, dtype=jnp.int32)
+    full = jnp.uint32(0xFFFFFFFF)
+    base = word_idx * WORD
+    rem = jnp.clip(upto - base, 0, WORD)
+    # (1 << rem) - 1, careful with rem == 32
+    partial = jnp.where(
+        rem >= WORD, full,
+        (jnp.uint32(1) << rem.astype(jnp.uint32)) - jnp.uint32(1))
+    return partial
+
+
+def to_bool(words: jax.Array, n: int) -> jax.Array:
+    """Expand packed bitset -> (n,) bool vector (trace-safe)."""
+    nw = words.shape[-1]
+    bits = jnp.arange(n)
+    w = words[..., bits // WORD]
+    return ((w >> (bits % WORD).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+
+
+def from_bool(mask: jax.Array) -> jax.Array:
+    """Pack a (..., n) bool vector into (..., ceil(n/32)) uint32 words."""
+    n = mask.shape[-1]
+    nw = n_words(n)
+    pad = nw * WORD - n
+    if pad:
+        mask = jnp.concatenate(
+            [mask, jnp.zeros(mask.shape[:-1] + (pad,), dtype=mask.dtype)],
+            axis=-1)
+    m = mask.reshape(mask.shape[:-1] + (nw, WORD)).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def intersect_count(rows: jax.Array, mask: jax.Array) -> jax.Array:
+    """|row_i AND mask| for every row. rows: (..., m, nw), mask: (..., nw)."""
+    return count(rows & mask[..., None, :], axis=-1)
+
+
+def equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.all(a == b, axis=-1)
+
+
+def is_subset(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a ⊆ b for packed sets."""
+    return jnp.all((a & ~b) == 0, axis=-1)
+
+
+def checksum(words: jax.Array) -> jax.Array:
+    """Order-independent 64-bit-ish hash of a packed set (for cross-engine
+    equality testing without materializing bicliques). Returns uint32."""
+    nw = words.shape[-1]
+    mult = (jnp.arange(nw, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
+            + jnp.uint32(0x85EBCA6B))
+    h = words * mult
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2545F491)
+    h = h ^ (h >> 13)
+    return jnp.sum(h, axis=-1, dtype=jnp.uint32)
+
+
+def pair_checksum(l_words: jax.Array, r_words: jax.Array) -> jax.Array:
+    """uint32 hash of a biclique (L, R) as an (unordered) pair of packed
+    sets. Summed (wrapping) over all bicliques it gives an enumeration
+    fingerprint that is independent of traversal order — the cross-engine
+    equality certificate used by tests and benchmarks."""
+    hl = checksum(l_words)
+    hr = checksum(r_words)
+    x = hl * jnp.uint32(0x85EBCA6B) ^ (hr * jnp.uint32(0xC2B2AE35))
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    return x ^ (x >> 15)

@@ -1,0 +1,208 @@
+"""Distributed MBE: coarse-grained parallelism + round-based work stealing.
+
+cuMBE's scheduling, mapped to SPMD TPU semantics (DESIGN.md §2):
+
+* **coarse-grained parallelism** — first-level subtrees (root tasks in the
+  global degeneracy order) are the unit of work; cuMBE assigns them to
+  thread blocks via an atomic counter on a global candidate set P_g. Here
+  the workers are mesh devices (× an optional vmap'd worker batch per
+  device, standing in for multiple TBs per SM).
+* **k-level work stealing** — a TPU is lockstep-SPMD: an idle device cannot
+  asynchronously steal. The DFS therefore runs in bounded *rounds*
+  (``steps_per_round`` while-loop iterations); at the end of each round all
+  workers hit a collective barrier (the `grid.sync()` analog) where the
+  pending root-task queues are all-gathered and re-dealt round-robin across
+  workers. Thieves are workers that drained their queue mid-round; victims
+  donate their *unstarted* tasks — exactly the paper's semantics with the
+  steal granularity k=1 plus over-decomposition (several tasks per worker
+  per round) standing in for k=2 fine-graining. An in-flight subtree stays
+  on its worker (shipping a DFS stack across ICI costs more than finishing
+  it).
+* the ``noWS`` ablation (benchmarks, paper Fig. 5/6) disables the re-deal:
+  static strided assignment only.
+
+The round function is one jitted ``shard_map``; the host driver loops
+rounds until every worker reports done, recording per-round per-worker
+busy-step counts — the data behind the Fig.-5 load-distribution analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import engine_dense as ed
+from repro.core.graph import BipartiteGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    steps_per_round: int = 4096     # work-stealing barrier period
+    workers_per_device: int = 1     # vmap'd worker batch (TBs per SM analog)
+    work_stealing: bool = True      # False = noWS ablation
+    max_rounds: int = 10_000
+
+
+def _flatten_pending(all_tasks: jax.Array, all_tpos: jax.Array,
+                     all_ntask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(W, T) queues + cursors -> (W*T,) flat pending list + total count."""
+    W, T = all_tasks.shape
+    n_pend = all_ntask - all_tpos                    # (W,)
+    offs = jnp.cumsum(n_pend) - n_pend               # (W,)
+    pos = jnp.arange(T)[None, :]                     # (1, T)
+    src_idx = all_tpos[:, None] + pos                # (W, T)
+    valid = pos < n_pend[:, None]
+    gathered = jnp.take_along_axis(
+        all_tasks, jnp.minimum(src_idx, T - 1), axis=1)
+    dst = jnp.where(valid, offs[:, None] + pos, W * T)
+    flat = jnp.full((W * T,), -1, jnp.int32)
+    flat = flat.at[dst.reshape(-1)].set(gathered.reshape(-1), mode="drop")
+    return flat, jnp.sum(n_pend)
+
+
+def _deal_strided(flat: jax.Array, total: jax.Array, w: jax.Array,
+                  n_workers: int, T: int) -> tuple[jax.Array, jax.Array]:
+    """Worker w takes flat[w::n_workers] — round-robin deal."""
+    j = jnp.arange(T)
+    src = j * n_workers + w
+    take = src < total
+    tasks = jnp.where(take, flat[jnp.minimum(src, flat.shape[0] - 1)], -1)
+    n = jnp.sum(take).astype(jnp.int32)
+    return tasks.astype(jnp.int32), n
+
+
+def context_specs(cfg: ed.EngineConfig) -> ed.GraphContext:
+    """ShapeDtypeStructs for the device-resident graph (dry-run lowering)."""
+    return ed.GraphContext(
+        adj=jax.ShapeDtypeStruct((cfg.n_u, cfg.wv), jnp.uint32),
+        order=jax.ShapeDtypeStruct((cfg.n_u,), jnp.int32),
+        rank=jax.ShapeDtypeStruct((cfg.n_u,), jnp.int32),
+        l_root=jax.ShapeDtypeStruct((cfg.wv,), jnp.uint32),
+        root_counts=jax.ShapeDtypeStruct((cfg.n_u,), jnp.int32))
+
+
+def state_specs(cfg: ed.EngineConfig, n_workers: int) -> ed.DenseState:
+    """ShapeDtypeStructs of the stacked worker state (dim0 = workers)."""
+    s = jax.eval_shape(lambda: ed.init_state(
+        cfg, np.zeros(cfg.m_real, np.int32)))
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_workers,) + l.shape, l.dtype), s)
+
+
+def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
+                  axis_names: tuple[str, ...],
+                  dist: DistConfig = DistConfig()):
+    """The jitted work-stealing round: (ctx, state) -> state.
+
+    Graph context is an explicit argument (replicated over the mesh) so the
+    dry-run can lower against ShapeDtypeStructs — no 32 MiB adjacency
+    constant baked into the HLO.
+    """
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+    wpd = dist.workers_per_device
+    n_workers = n_dev * wpd
+    T = cfg.m_real  # queue capacity: every worker could end up with all roots
+
+    def _per_device(ctx: ed.GraphContext,
+                    s: ed.DenseState) -> ed.DenseState:
+        # s leaves have leading dim = workers_per_device
+        s = jax.vmap(lambda st: ed.run(
+            ctx, cfg, st, max_steps=dist.steps_per_round))(s)
+        if not dist.work_stealing:
+            return s
+        # ---- work-stealing barrier -----------------------------------
+        ax = axis_names if len(axis_names) > 1 else axis_names[0]
+        all_tasks = jax.lax.all_gather(s.tasks, ax, axis=0, tiled=True)
+        all_tpos = jax.lax.all_gather(s.tpos, ax, axis=0, tiled=True)
+        all_ntask = jax.lax.all_gather(s.n_tasks, ax, axis=0, tiled=True)
+        flat, total = _flatten_pending(
+            all_tasks.reshape(n_workers, T),
+            all_tpos.reshape(n_workers),
+            all_ntask.reshape(n_workers))
+        dev_id = jax.lax.axis_index(ax)
+        w_ids = dev_id * wpd + jnp.arange(wpd)
+        new_tasks, new_n = jax.vmap(
+            lambda w: _deal_strided(flat, total, w, n_workers, T))(w_ids)
+        return s._replace(tasks=new_tasks, n_tasks=new_n,
+                          tpos=jnp.zeros((wpd,), jnp.int32))
+
+    spec_leaf = P(axis_names)
+
+    @jax.jit
+    def round_fn(ctx: ed.GraphContext,
+                 state: ed.DenseState) -> ed.DenseState:
+        return jax.shard_map(
+            _per_device, mesh=mesh,
+            in_specs=(P(), spec_leaf), out_specs=spec_leaf,
+            check_vma=False)(ctx, state)
+
+    return round_fn, n_workers, T
+
+
+def make_distributed_runner(
+        g: BipartiteGraph, cfg: ed.EngineConfig, mesh: Mesh,
+        axis_names: tuple[str, ...], dist: DistConfig = DistConfig()):
+    """Build (init_states, round_fn, driver) for the given mesh axes.
+
+    ``axis_names`` lists the mesh axes the worker dimension is sharded over
+    (their total size = number of devices participating).
+    """
+    ctx = ed.make_context(g, cfg)
+    round_fn_core, n_workers, T = make_round_fn(cfg, mesh, axis_names, dist)
+    wpd = dist.workers_per_device
+
+    def init_states() -> ed.DenseState:
+        """Strided initial assignment of the m_real root tasks."""
+        per = []
+        for w in range(n_workers):
+            tasks = np.arange(w, cfg.m_real, n_workers, dtype=np.int32)
+            s = ed.init_state(cfg, tasks)
+            pad = np.full(T, -1, np.int32)
+            pad[: tasks.shape[0]] = tasks
+            s = s._replace(tasks=jnp.asarray(pad))
+            per.append(s)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        sh = NamedSharding(mesh, P(axis_names))  # dim0 over all named axes
+        return jax.tree.map(lambda x: jax.device_put(x, sh), stacked)
+
+    def round_fn(state: ed.DenseState) -> ed.DenseState:
+        return round_fn_core(ctx, state)
+
+    def driver(state: ed.DenseState | None = None, verbose: bool = False):
+        """Run rounds to completion. Returns (final_state, round_log)."""
+        if state is None:
+            state = init_states()
+        log = []
+        prev_steps = np.zeros(n_workers, np.int64)
+        for r in range(dist.max_rounds):
+            state = round_fn(state)
+            steps = np.asarray(state.steps, np.int64)
+            busy = steps - prev_steps
+            prev_steps = steps
+            done = np.asarray((state.lvl < 0) & (state.tpos >= state.n_tasks))
+            log.append(dict(round=r, busy=busy.copy(),
+                            done=int(done.sum()),
+                            n_max=int(np.asarray(state.n_max).sum())))
+            if verbose:
+                print(f"round {r}: done {int(done.sum())}/{n_workers} "
+                      f"nMB={log[-1]['n_max']}")
+            if bool(done.all()):
+                break
+        return state, log
+
+    return init_states, round_fn, driver
+
+
+def totals(state: ed.DenseState) -> dict:
+    """Aggregate counters across the worker dimension."""
+    return dict(
+        n_max=int(np.asarray(state.n_max, np.int64).sum()),
+        cs=int(np.asarray(state.cs, np.uint64).sum() % (1 << 32)),
+        nodes=int(np.asarray(state.nodes, np.int64).sum()),
+        steps=np.asarray(state.steps, np.int64),
+    )

@@ -1,0 +1,420 @@
+"""Dense-bitset MBE engine (TPU-native adaptation of cuMBE).
+
+This is the paper's recursion-free DFS re-expressed for a vector unit:
+
+* cuMBE's **compact array + level pointers** become per-level packed bitmask
+  stacks (``lmask/pmask/qmask/rmask``) inside a ``lax.while_loop`` — all
+  shapes static, zero dynamic allocation, O(|U|+|V|) words per level and
+  O(depth) levels, exactly the paper's space bound.
+* cuMBE's **lookup table** becomes an O(1) bit test.
+* cuMBE's **reverse scanning** (phases C/E share per-candidate
+  |N(v) ∩ L'| counts) becomes ONE dense AND+popcount pass over the whole
+  adjacency (the ``intersect_count`` kernel) whose result serves the
+  maximality check, the maximal expansion AND the paper's Q' filter at no
+  extra cost.
+* cuMBE's **early-stop candidate selection** becomes a fused masked argmin
+  over the same counts pass (degeneracy order, recomputed per level like the
+  paper's per-level re-selection).
+
+The engine is *task-driven*: a worker owns a list of first-level subtrees
+(root candidates), matching cuMBE's coarse-grained decomposition. Task i of
+the global root order sees Q = roots before i and P = roots after i — the
+exact state Algorithm 1 has when popping root i, so a single worker running
+all tasks in order is bit-identical to the serial enumeration, and disjoint
+task lists across workers partition the search space (the distributed
+runner's unit of work stealing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.graph import BipartiteGraph
+from repro.kernels.intersect_count.ops import intersect_count
+
+_INF = jnp.int32(0x7FFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_u: int                    # padded |U| (array dim)
+    n_v: int                    # padded |V|
+    m_real: int                 # real |U| (= number of root tasks)
+    depth: int                  # recursion depth bound (n_u + 2 is safe)
+    collect_cap: int = 1        # biclique output buffer rows
+    order_mode: str = "deg"     # 'deg' (paper ordering, cached counts)
+    #                             | 'deg_nocache' (recompute per node — the
+    #                             paper-faithful two-pass baseline)
+    #                             | 'input' (noES ablation)
+    impl: str = "jnp"           # intersect_count impl ('jnp'|'pallas')
+    max_steps: int = 1 << 30    # safety/round bound on loop iterations
+
+    @property
+    def wu(self) -> int:
+        return bitset.n_words(self.n_u)
+
+    @property
+    def wv(self) -> int:
+        return bitset.n_words(self.n_v)
+
+
+class GraphContext(NamedTuple):
+    """Device-resident graph data shared by all workers."""
+    adj: jax.Array      # (NU, WV) uint32
+    order: jax.Array    # (NU,) int32: root order (degree-ascending), -1 pad
+    rank: jax.Array     # (NU,) int32: rank[v] = position of v in order;
+    #                     padding vertices get rank = 2*NU (never in P/Q)
+    l_root: jax.Array   # (WV,) uint32: all real V vertices
+    root_counts: jax.Array  # (NU,) int32: |N(v) & l_root| = degree — the
+    #                     level-0 entry of the counts cache, free at setup
+
+
+class DenseState(NamedTuple):
+    lmask: jax.Array    # (D, WV) u32
+    cstack: jax.Array   # (D, NU) i32: |N(v) & lmask[lvl]| counts cache —
+    #                     level lvl's selection reads it; the child level
+    #                     inherits the expansion pass (c2) for free, so
+    #                     candidate selection costs ZERO adjacency passes
+    #                     (beyond-paper: the GPU paper re-scans P with
+    #                     early stops every selection)
+    pmask: jax.Array    # (D, WU) u32
+    qmask: jax.Array    # (D, WU) u32
+    rmask: jax.Array    # (D, WU) u32
+    xstack: jax.Array   # (D,) i32
+    lvl: jax.Array      # i32 (-1 = between tasks)
+    forced_x: jax.Array  # i32 (-1 = none): root candidate override
+    tasks: jax.Array    # (T,) i32 indices into global root order
+    n_tasks: jax.Array  # i32
+    tpos: jax.Array     # i32
+    steps: jax.Array    # i32 loop iterations (all branches)
+    nodes: jax.Array    # i32 candidate visits (search-tree nodes)
+    n_max: jax.Array    # i32 maximal bicliques found
+    max_fail: jax.Array  # i32 maximality-check failures
+    cs: jax.Array       # u32 enumeration fingerprint
+    out_n: jax.Array    # i32
+    out_l: jax.Array    # (C, WV) u32
+    out_r: jax.Array    # (C, WU) u32
+
+
+# ---------------------------------------------------------------------------
+# host-side setup
+# ---------------------------------------------------------------------------
+
+def make_context(g: BipartiteGraph, cfg: EngineConfig) -> GraphContext:
+    assert g.n_u <= cfg.n_u and g.n_v <= cfg.n_v
+    adj = np.zeros((cfg.n_u, cfg.wv), dtype=np.uint32)
+    gp = g if (g.n_v == cfg.n_v and g.n_u == cfg.n_u) else None
+    # re-pack for the padded word count
+    src = BipartiteGraph.from_edges(
+        cfg.n_u, cfg.n_v, [tuple(e) for e in g.edges], name=g.name) \
+        if gp is None else g
+    adj[:, :] = src.adj_u
+    deg = np.array([int(bitset.count(jnp.asarray(adj[u])))
+                    for u in range(g.n_u)], dtype=np.int64)
+    order_real = np.argsort(deg, kind="stable").astype(np.int32)
+    order = np.full(cfg.n_u, -1, dtype=np.int32)
+    order[:g.n_u] = order_real
+    rank = np.full(cfg.n_u, 2 * cfg.n_u, dtype=np.int32)
+    rank[order_real] = np.arange(g.n_u, dtype=np.int32)
+    l_root = np.zeros(cfg.wv, dtype=np.uint32)
+    l_root[:] = 0
+    fm = bitset.full_mask(g.n_v)
+    l_root[: fm.shape[0]] = fm
+    rc = np.zeros(cfg.n_u, dtype=np.int32)
+    rc[: g.n_u] = deg.astype(np.int32)
+    return GraphContext(adj=jnp.asarray(adj), order=jnp.asarray(order),
+                        rank=jnp.asarray(rank), l_root=jnp.asarray(l_root),
+                        root_counts=jnp.asarray(rc))
+
+
+def init_state(cfg: EngineConfig, tasks: np.ndarray) -> DenseState:
+    """Fresh worker state with a task list (indices into the root order)."""
+    t = np.full(max(len(tasks), 1), -1, dtype=np.int32)
+    t[: len(tasks)] = np.asarray(tasks, dtype=np.int32)
+    D, WU, WV, C = cfg.depth, cfg.wu, cfg.wv, cfg.collect_cap
+    z32 = jnp.int32(0)
+    return DenseState(
+        lmask=jnp.zeros((D, WV), jnp.uint32),
+        cstack=jnp.zeros((D, cfg.n_u), jnp.int32),
+        pmask=jnp.zeros((D, WU), jnp.uint32),
+        qmask=jnp.zeros((D, WU), jnp.uint32),
+        rmask=jnp.zeros((D, WU), jnp.uint32),
+        xstack=jnp.full((D,), -1, jnp.int32),
+        lvl=jnp.int32(-1), forced_x=jnp.int32(-1),
+        tasks=jnp.asarray(t), n_tasks=jnp.int32(len(tasks)),
+        tpos=z32, steps=z32, nodes=z32, n_max=z32, max_fail=z32,
+        cs=jnp.uint32(0), out_n=z32,
+        out_l=jnp.zeros((C, WV), jnp.uint32),
+        out_r=jnp.zeros((C, WU), jnp.uint32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the three while-loop branches — emitting row DELTAS, not whole states
+#
+# A lax.switch whose branches return the full DenseState makes XLA copy
+# every (depth x N) stack through each branch (measured: 4 x 8.4 MB per
+# engine step on the cumbe-16k config, ~22% of the step's HBM bytes).
+# Each branch writes at most one row per stack (two for pmask), so the
+# branches emit a fixed-schema Delta and the stacks are updated ONCE
+# outside the switch; unmodified stacks flow through the while loop
+# aliased, copy-free. (EXPERIMENTS §Perf iter C3.)
+# ---------------------------------------------------------------------------
+
+class Delta(NamedTuple):
+    l_row: jax.Array    # (WV,) u32   lmask write
+    l_idx: jax.Array
+    l_en: jax.Array
+    c_row: jax.Array    # (NU,) i32   cstack write
+    pa_row: jax.Array   # (WU,) u32   pmask write A (current level)
+    pa_idx: jax.Array
+    pa_en: jax.Array
+    pb_row: jax.Array   # (WU,) u32   pmask write B (child / task init)
+    q_row: jax.Array    # (WU,) u32   qmask write
+    q_idx: jax.Array
+    q_en: jax.Array
+    r_row: jax.Array    # (WU,) u32   rmask write
+    x_val: jax.Array    # xstack scalar write
+    x_idx: jax.Array
+    x_en: jax.Array
+    child: jax.Array    # shared index for l/c/pb/r writes
+    lvl: jax.Array      # new scalar state
+    forced_x: jax.Array
+    tpos: jax.Array
+    nodes_inc: jax.Array
+    n_max_inc: jax.Array
+    max_fail_inc: jax.Array
+    cs_inc: jax.Array
+    ow_l: jax.Array     # (WV,) u32  collect-buffer write
+    ow_r: jax.Array     # (WU,) u32
+    ow_en: jax.Array
+
+
+def _delta_zeros(cfg: EngineConfig, s: DenseState) -> Delta:
+    z = jnp.int32(0)
+    f = jnp.bool_(False)
+    return Delta(
+        l_row=jnp.zeros((cfg.wv,), jnp.uint32), l_idx=z, l_en=f,
+        c_row=jnp.zeros((cfg.n_u,), jnp.int32),
+        pa_row=jnp.zeros((cfg.wu,), jnp.uint32), pa_idx=z, pa_en=f,
+        pb_row=jnp.zeros((cfg.wu,), jnp.uint32),
+        q_row=jnp.zeros((cfg.wu,), jnp.uint32), q_idx=z, q_en=f,
+        r_row=jnp.zeros((cfg.wu,), jnp.uint32),
+        x_val=jnp.int32(-1), x_idx=z, x_en=f, child=z,
+        lvl=s.lvl, forced_x=s.forced_x, tpos=s.tpos,
+        nodes_inc=z, n_max_inc=z, max_fail_inc=z, cs_inc=jnp.uint32(0),
+        ow_l=jnp.zeros((cfg.wv,), jnp.uint32),
+        ow_r=jnp.zeros((cfg.wu,), jnp.uint32), ow_en=f)
+
+
+def _branch_backtrack(g: GraphContext, cfg: EngineConfig,
+                      s: DenseState) -> Delta:
+    nl = s.lvl - 1
+    safe = jnp.maximum(nl, 0)
+    x = s.xstack[safe]
+    q_new = bitset.add(s.qmask[safe], jnp.maximum(x, 0))
+    return _delta_zeros(cfg, s)._replace(
+        q_row=q_new, q_idx=safe, q_en=nl >= 0, lvl=nl)
+
+
+def _branch_init_task(g: GraphContext, cfg: EngineConfig,
+                      s: DenseState) -> Delta:
+    idx = s.tasks[jnp.minimum(s.tpos, s.tasks.shape[0] - 1)]
+    x = g.order[jnp.clip(idx, 0, cfg.n_u - 1)]
+    in_p = (g.rank > idx) & (g.rank < cfg.m_real)
+    in_q = g.rank < idx
+    t = jnp.bool_(True)
+    return _delta_zeros(cfg, s)._replace(
+        l_row=g.l_root, l_idx=jnp.int32(0), l_en=t,
+        c_row=g.root_counts,
+        pb_row=bitset.from_bool(in_p),
+        q_row=bitset.from_bool(in_q), q_idx=jnp.int32(0), q_en=t,
+        r_row=jnp.zeros((cfg.wu,), jnp.uint32),
+        child=jnp.int32(0),
+        lvl=jnp.int32(0), forced_x=x, tpos=s.tpos + 1)
+
+
+def _branch_candidate(g: GraphContext, cfg: EngineConfig,
+                      s: DenseState) -> Delta:
+    lvl = s.lvl
+    L = s.lmask[lvl]
+    pm = s.pmask[lvl]
+    forced = s.forced_x >= 0
+
+    # -- Step 1: candidate selection ------------------------------------
+    if cfg.order_mode == "deg":
+        # counts cache: level lvl holds |N(v) & lmask[lvl]| already
+        c_sel = s.cstack[lvl]
+        active = bitset.to_bool(pm, cfg.n_u)
+        x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)).astype(jnp.int32)
+    elif cfg.order_mode == "deg_nocache":
+        c_sel = intersect_count(g.adj, L, impl=cfg.impl)       # (NU,)
+        active = bitset.to_bool(pm, cfg.n_u)
+        x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)).astype(jnp.int32)
+    else:  # 'input': no ordering heuristic (noES ablation)
+        x_sel = bitset.first_member(pm)
+    x = jnp.where(forced, s.forced_x, x_sel)
+    pm_after = bitset.remove(pm, jnp.maximum(x, 0))
+
+    # -- Step 2: L' construction ----------------------------------------
+    Lp = L & g.adj[x]
+    nLp = bitset.count(Lp)
+    nonempty = nLp > 0
+
+    # -- shared counts pass: |N(v) & L'| for every v ---------------------
+    c2 = intersect_count(g.adj, Lp, impl=cfg.impl)             # (NU,)
+
+    # -- Step 3: maximality check against Q ------------------------------
+    qb = bitset.to_bool(s.qmask[lvl], cfg.n_u)
+    viol = jnp.any(qb & (c2 == nLp)) & nonempty
+    is_max = nonempty & ~viol
+
+    # -- Step 4: maximal expansion over remaining P -----------------------
+    pb = bitset.to_bool(pm_after, cfg.n_u)
+    fullb = pb & (c2 == nLp)
+    partb = pb & (c2 > 0) & (c2 < nLp)
+    Rp = s.rmask[lvl] | bitset.singleton(x, cfg.wu) \
+        | bitset.from_bool(fullb)
+    has_child = is_max & jnp.any(partb)
+
+    # -- descend / finish -------------------------------------------------
+    # after a forced (root-task) candidate, the level-0 P must empty so the
+    # task terminates once its subtree is done (other roots are other tasks)
+    pm_final = jnp.where(forced, jnp.zeros_like(pm_after), pm_after)
+    # paper's Q' filter comes free from the shared counts pass:
+    q_child = s.qmask[lvl] & bitset.from_bool(c2 > 0)
+    nl = jnp.where(has_child, lvl + 1, lvl)
+    child = jnp.minimum(lvl + 1, cfg.depth - 1)
+    # no child: x's subtree is finished -> move x to Q at this level
+    q_lvl = bitset.add(s.qmask[lvl], jnp.maximum(x, 0))
+
+    return _delta_zeros(cfg, s)._replace(
+        l_row=Lp, l_idx=child, l_en=has_child,
+        c_row=c2,
+        pa_row=pm_final, pa_idx=lvl, pa_en=jnp.bool_(True),
+        pb_row=bitset.from_bool(partb),
+        q_row=jnp.where(has_child, q_child, q_lvl),
+        q_idx=jnp.where(has_child, child, lvl), q_en=jnp.bool_(True),
+        r_row=Rp,
+        x_val=x, x_idx=lvl, x_en=has_child, child=child,
+        lvl=nl, forced_x=jnp.int32(-1),
+        nodes_inc=jnp.int32(1),
+        n_max_inc=is_max.astype(jnp.int32),
+        max_fail_inc=(viol & nonempty).astype(jnp.int32),
+        cs_inc=jnp.where(is_max, bitset.pair_checksum(Lp, Rp),
+                         jnp.uint32(0)),
+        ow_l=Lp, ow_r=Rp, ow_en=is_max)
+
+
+def _apply_delta(cfg: EngineConfig, s: DenseState, d: Delta) -> DenseState:
+    def setrow(stack, row, idx, en):
+        i = jnp.clip(idx, 0, stack.shape[0] - 1)
+        return stack.at[i].set(jnp.where(en, row, stack[i]))
+
+    lmask = setrow(s.lmask, d.l_row, d.l_idx, d.l_en)
+    cstack = setrow(s.cstack, d.c_row, d.child, d.l_en | (d.tpos > s.tpos))
+    pmask = setrow(s.pmask, d.pa_row, d.pa_idx, d.pa_en)
+    pmask = setrow(pmask, d.pb_row, d.child, d.l_en | (d.tpos > s.tpos))
+    qmask = setrow(s.qmask, d.q_row, d.q_idx, d.q_en)
+    rmask = setrow(s.rmask, d.r_row, d.child, d.l_en | (d.tpos > s.tpos))
+    xstack = s.xstack.at[jnp.clip(d.x_idx, 0, cfg.depth - 1)].set(
+        jnp.where(d.x_en, d.x_val, s.xstack[jnp.clip(d.x_idx, 0,
+                                                     cfg.depth - 1)]))
+    C = cfg.collect_cap
+    w_idx = jnp.minimum(s.out_n, C - 1)
+    write = d.ow_en & (s.out_n < C)
+    out_l = s.out_l.at[w_idx].set(jnp.where(write, d.ow_l, s.out_l[w_idx]))
+    out_r = s.out_r.at[w_idx].set(jnp.where(write, d.ow_r, s.out_r[w_idx]))
+    return s._replace(
+        lmask=lmask, cstack=cstack, pmask=pmask, qmask=qmask, rmask=rmask,
+        xstack=xstack, lvl=d.lvl, forced_x=d.forced_x, tpos=d.tpos,
+        nodes=s.nodes + d.nodes_inc, n_max=s.n_max + d.n_max_inc,
+        max_fail=s.max_fail + d.max_fail_inc, cs=s.cs + d.cs_inc,
+        out_n=s.out_n + write.astype(jnp.int32),
+        out_l=out_l, out_r=out_r)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _case_id(cfg: EngineConfig, s: DenseState) -> jax.Array:
+    """0 = backtrack, 1 = init next task, 2 = process a candidate."""
+    lvl_safe = jnp.maximum(s.lvl, 0)
+    p_empty = bitset.count(s.pmask[lvl_safe]) == 0
+    return jnp.where(
+        s.lvl < 0, 1,
+        jnp.where(p_empty & (s.forced_x < 0), 0, 2)).astype(jnp.int32)
+
+
+def _done(s: DenseState) -> jax.Array:
+    return (s.lvl < 0) & (s.tpos >= s.n_tasks)
+
+
+def step(g: GraphContext, cfg: EngineConfig, s: DenseState) -> DenseState:
+    s = s._replace(steps=s.steps + 1)
+    delta = jax.lax.switch(
+        _case_id(cfg, s),
+        [lambda st: _branch_backtrack(g, cfg, st),
+         lambda st: _branch_init_task(g, cfg, st),
+         lambda st: _branch_candidate(g, cfg, st)],
+        s)
+    return _apply_delta(cfg, s, delta)
+
+
+def run(g: GraphContext, cfg: EngineConfig, s: DenseState,
+        max_steps: int | None = None) -> DenseState:
+    """Run until all tasks are done or the step budget is exhausted.
+
+    The step budget is what makes the distributed runner's bounded *rounds*
+    (work-stealing barrier points) possible — state is resumable.
+    """
+    budget = cfg.max_steps if max_steps is None else max_steps
+    start = s.steps
+
+    def cond(st):
+        return (~_done(st)) & (st.steps - start < budget)
+
+    return jax.lax.while_loop(cond, lambda st: step(g, cfg, st), s)
+
+
+# ---------------------------------------------------------------------------
+# convenience: single-worker full enumeration (tests / Table-I benchmark)
+# ---------------------------------------------------------------------------
+
+def make_config(g: BipartiteGraph, **kw) -> EngineConfig:
+    return EngineConfig(n_u=g.n_u, n_v=g.n_v, m_real=g.n_u,
+                        depth=g.n_u + 2, **kw)
+
+
+def enumerate_dense(g: BipartiteGraph, order_mode: str = "deg",
+                    collect_cap: int = 1, impl: str = "jnp"):
+    """Full single-worker enumeration. Returns the final DenseState."""
+    cfg = make_config(g, order_mode=order_mode, collect_cap=collect_cap,
+                      impl=impl)
+    ctx = make_context(g, cfg)
+    s0 = init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+    runner = jax.jit(lambda st: run(ctx, cfg, st))
+    out = runner(s0)
+    assert bool(_done(out)), "step budget exhausted"
+    return out
+
+
+def collected_bicliques(cfg: EngineConfig, s: DenseState,
+                        n_u: int, n_v: int) -> list[tuple[tuple, tuple]]:
+    """Decode the collect buffer into (L members, R members) tuples."""
+    n = int(s.out_n)
+    assert n <= cfg.collect_cap, "collect buffer overflowed"
+    out = []
+    ol = np.asarray(s.out_l)
+    orr = np.asarray(s.out_r)
+    for i in range(n):
+        L = tuple(bitset.unpack(ol[i], n_v))
+        R = tuple(bitset.unpack(orr[i], n_u))
+        out.append((L, R))
+    return out

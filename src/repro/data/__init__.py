@@ -1,0 +1,8 @@
+from repro.data.generators import (  # noqa: F401
+    random_bipartite,
+    powerlaw_bipartite,
+    community_bipartite,
+    dense_small,
+    dataset_suite,
+    load_konect,
+)

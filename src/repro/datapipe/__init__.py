@@ -1,0 +1,2 @@
+from repro.datapipe.pipeline import (  # noqa: F401
+    DataConfig, MemmapSource, SyntheticSource, make_pipeline)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp
+oracle); all are validated against their oracle in interpret mode on CPU
+and lower natively on TPU.
+
+  intersect_count  — AND+popcount row reduce: the MBE engine's phases
+                     A/C/E (the paper's reverse-scanning hot spot)
+  fused_select     — counts + masked argmin in one pass: degeneracy-order
+                     candidate selection (the paper's early-stop goal,
+                     achieved structurally)
+  flash_attention  — fwd + custom-vjp bwd flash attention for the LM
+                     stack (GQA, causal tile skipping); the dominant
+                     memory-roofline term of every train/prefill cell
+"""

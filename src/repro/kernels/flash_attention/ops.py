@@ -1,0 +1,98 @@
+"""Dispatch + autodiff wrapper for the Pallas flash attention.
+
+``flash_attention_pallas(q, k, v)`` takes the public (B, S, H, hd) /
+(B, S, KV, hd) layout, packs GQA heads to (B, KV, G, S, hd), pads both
+sequence dims to block multiples (the kernels mask the tail), and hooks
+forward/backward kernels together with jax.custom_vjp — so jax.grad of a
+train step flows through the kernels with s/p tiles never leaving VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (flash_bwd_pallas,
+                                                  flash_fwd_pallas)
+
+
+def _pack(q, k, v):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qp = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    kp = k.transpose(0, 2, 1, 3)
+    vp = v.transpose(0, 2, 1, 3)
+    return qp, kp, vp
+
+
+def _pad_seq(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_pallas(q, k, v, causal=True, block_q=512,
+                           block_k=512, scale=None, interpret=False):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    o, _ = _fwd(q, k, v, causal, block_q, block_k, scale, interpret)
+    return o
+
+
+def _fwd(q, k, v, causal, block_q, block_k, scale, interpret):
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    sc = scale if scale is not None else 1.0 / (hd ** 0.5)
+    qp, kp, vp = _pack(q, k, v)
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    qp = _pad_seq(qp, 3, bq)
+    kp = _pad_seq(kp, 2, bk)
+    vp = _pad_seq(vp, 2, bk)
+    o, lse = flash_fwd_pallas(qp, kp, vp, causal=causal, scale=sc,
+                              sq=Sq, sk=Sk, block_q=bq, block_k=bk,
+                              interpret=interpret)
+    G = H // KV
+    o_out = o[:, :, :, :Sq].transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return o_out, (q, k, v, o, lse)
+
+
+def _fwd_rule(q, k, v, causal, block_q, block_k, scale, interpret):
+    o, res = _fwd(q, k, v, causal, block_q, block_k, scale, interpret)
+    return o, res
+
+
+def _bwd_rule(causal, block_q, block_k, scale, interpret, res, do):
+    q, k, v, o_pad, lse = res
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / (hd ** 0.5)
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+
+    qp, kp, vp = _pack(q, k, v)
+    qp = _pad_seq(qp, 3, bq)
+    kp = _pad_seq(kp, 2, bk)
+    vp = _pad_seq(vp, 2, bk)
+    dop = do.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    dop = _pad_seq(dop, 3, bq)
+    # D = rowsum(do * o): tiny (B,KV,G,Sq) — fine at the XLA level
+    dD = jnp.sum(dop.astype(jnp.float32) * o_pad.astype(jnp.float32),
+                 axis=-1)
+    dq, dk, dv = flash_bwd_pallas(qp, kp, vp, dop, lse, dD, causal=causal,
+                                  scale=sc, sq=Sq, sk=Sk, block_q=bq,
+                                  block_k=bk, interpret=interpret)
+    dq = dq[:, :, :, :Sq].transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    dk = dk[:, :, :Sk].transpose(0, 2, 1, 3)
+    dv = dv[:, :, :Sk].transpose(0, 2, 1, 3)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_pallas.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,1 @@
+from repro.kernels.fused_select.ops import fused_select  # noqa: F401

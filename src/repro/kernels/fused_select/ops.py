@@ -1,0 +1,46 @@
+"""Dispatch wrapper for fused candidate selection (pads, picks impl)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_select.kernel import fused_select_pallas
+from repro.kernels.fused_select.ref import fused_select_ref
+
+_INF = jnp.int32(0x7FFFFFFF)
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_w",
+                                             "interpret"))
+def fused_select(adj: jax.Array, mask: jax.Array, active: jax.Array, *,
+                 impl: str = "auto", block_n: int = 512,
+                 block_w: int = 256, interpret: bool = False
+                 ) -> tuple[jax.Array, jax.Array]:
+    """First active row minimizing popcount(adj & mask); see kernel.py."""
+    if impl == "auto":
+        impl = "pallas" if any(d.platform == "tpu"
+                               for d in jax.devices()) else "jnp"
+    if impl == "jnp":
+        return fused_select_ref(adj, mask, active)
+    assert impl == "pallas", impl
+    n = adj.shape[0]
+    bn = min(block_n, max(8, (n + 7) // 8 * 8))
+    adj_p = _pad_axis(_pad_axis(adj, 0, bn), 1, block_w)
+    mask_p = _pad_axis(mask, 0, block_w)
+    act_p = _pad_axis(active.astype(jnp.int32), 0, bn)  # pad rows inactive
+    idx, val = fused_select_pallas(
+        adj_p, mask_p, act_p, block_n=bn,
+        block_w=min(block_w, adj_p.shape[1]),
+        interpret=interpret or jax.devices()[0].platform != "tpu")
+    return idx, val

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for fused_select."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INF = jnp.int32(0x7FFFFFFF)
+
+
+def fused_select_ref(adj: jax.Array, mask: jax.Array, active: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    counts = jnp.sum(jax.lax.population_count(adj & mask[None, :]),
+                     axis=1).astype(jnp.int32)
+    masked = jnp.where(active > 0, counts, _INF)
+    val = jnp.min(masked)
+    idx = jnp.where(val == _INF, jnp.int32(-1),
+                    jnp.argmin(masked).astype(jnp.int32))
+    return idx, val

@@ -1,0 +1,2 @@
+from repro.kernels.intersect_count.ops import intersect_count  # noqa: F401
+from repro.kernels.intersect_count.ref import intersect_count_ref  # noqa: F401

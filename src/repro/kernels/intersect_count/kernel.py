@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: blocked AND+popcount row reduction.
+
+The MBE hot spot. For a (N, W) uint32 adjacency bitset matrix and a (W,)
+query bitset, computes ``counts[i] = popcount(adj[i] & mask)``.
+
+TPU mapping
+-----------
+* grid = (N/BN, W/BW); the W axis is the innermost (sequential) grid dim so
+  the output block is revisited and accumulated in VMEM — the canonical TPU
+  reduction pattern.
+* BlockSpecs pin a (BN, BW) adjacency tile, a (1, BW) mask tile and the
+  (BN, 1) partial-count tile in VMEM. With the default BN=512, BW=256 the
+  working set is 512*256*4 B = 512 KiB of adjacency per grid step — far under
+  VMEM, chosen so the HBM stream (the kernel is bandwidth-bound: 1 load per
+  word, ~3 VPU ops per word) stays contiguous and lane-aligned
+  (BW a multiple of 128 lanes, BN a multiple of 8 sublanes).
+* popcount uses ``lax.population_count`` (VPU elementwise), summed along the
+  word axis with an int32 accumulate.
+
+Validated against ``ref.py`` in interpret mode (CPU) over a shape/dtype
+sweep; on real TPU hardware the same ``pallas_call`` lowers natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(adj_ref, mask_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = adj_ref[...] & mask_ref[...]          # (BN, BW) uint32
+    pc = jax.lax.population_count(tile).astype(jnp.int32)
+    out_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_w", "interpret"))
+def intersect_count_pallas(adj: jax.Array, mask: jax.Array, *,
+                           block_n: int = 512, block_w: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """adj: (N, W) uint32, mask: (W,) uint32 -> (N,) int32.
+
+    N must be a multiple of block_n and W of block_w (ops.py pads).
+    """
+    n, w = adj.shape
+    assert n % block_n == 0 and w % block_w == 0, (n, w, block_n, block_w)
+    grid = (n // block_n, w // block_w)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_w), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_w), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(adj, mask[None, :])
+    return out[:, 0]

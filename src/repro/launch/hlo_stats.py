@@ -1,0 +1,538 @@
+"""Dry-run profiler: FLOPs / HBM bytes / collective bytes from compiled HLO.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a
+``lax.scan`` over 40 layers is undercounted 40x (verified empirically:
+a 3-layer scan reports exactly one layer of flops). This module re-derives
+the roofline inputs from the post-optimization HLO text with loop
+trip-count scaling:
+
+* **flops** — every ``dot`` contributes 2 * prod(output dims) *
+  prod(lhs contracting dims); ``convolution`` approximated as
+  2 * prod(output) * prod(window dims) (depthwise — matches our only conv
+  use, the Mamba/xLSTM causal conv1d). Scaled by the product of enclosing
+  while-loop trip counts.
+* **bytes** — HBM traffic model ("anchor ops"): compute/data-movement
+  anchors (dot, convolution, reduce, fusion, concatenate, copy, slice /
+  gather / dynamic-slice, dynamic-update-slice, collectives) read their
+  operands and write their output; standalone elementwise/layout ops
+  (add, convert, broadcast, transpose, reshape, ...) are treated as fused
+  into their consumers — the TPU fusion model, where they never
+  round-trip HBM. Two slice-awareness rules prevent the classic L-times
+  overcount on ``lax.scan`` over stacked layer params: a (dynamic-)slice
+  costs its *output* (the bytes actually read), and a fusion operand that
+  is only sliced inside the fusion body costs the slice, not the full
+  stacked array; dynamic-update-slice costs 2x the update (in-place).
+* **collectives** — operand bytes per all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, by type, scaled by
+  trip counts.
+
+Trip counts come from the largest positive integer constant in each while
+loop's condition computation (the canonical `lt(iv, N)` bound; fused
+compares keep the constant in the condition computation). Unknown bounds
+fall back to 1 and are counted in ``unknown_loops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota"}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    args: str        # raw operand list text
+    attrs: str
+    operands: list[str]
+
+
+def _match_paren(s: str, i: int) -> int:
+    """index just past the ')' matching the '(' at s[i]."""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(s)
+
+
+def _parse_instr(line: str) -> Instr | None:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rhs = s[eq + 3:]
+    # type: tuple type -> balanced parens; else first token
+    if rhs.startswith("("):
+        end = _match_paren(rhs, 0)
+        type_str = rhs[:end]
+        rest = rhs[end:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str = rhs[:sp]
+        rest = rhs[sp + 1:]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    aend = _match_paren(rest, par)
+    args = rest[par + 1: aend - 1]
+    attrs = rest[aend:]
+    operands = [m.group(1) for m in
+                re.finditer(r"%([\w\.\-]+)", args)]
+    return Instr(name, type_str, opcode, args, attrs, operands)
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Instr]], str | None]:
+    """-> ({computation: instrs}, entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        hm = _COMP_HDR.match(line.strip())
+        if hm:
+            cur = []
+            comps[hm.group(2)] = cur
+            if hm.group(1):
+                entry = hm.group(2)
+            continue
+        if cur is None or "=" not in line:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.append(ins)
+    return comps, entry
+
+
+def _trip_count(cond_instrs: list[Instr]) -> int | None:
+    best = None
+    for ins in cond_instrs:
+        if ins.opcode == "constant":
+            m = re.fullmatch(r"constant\((-?\d+)\)",
+                             "constant(" + ins.args + ")")
+            if m:
+                v = int(m.group(1))
+                if v > 0 and (best is None or v > best):
+                    best = v
+    return best
+
+
+def module_stats(text: str, detail: list | None = None) -> dict:
+    comps, entry = parse_module(text)
+
+    # classify call edges
+    real_children: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    fused_children: dict[str, list[str]] = defaultdict(list)
+    unknown_loops = 0
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+                trips = None
+                if cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                if trips is None:
+                    trips = 1
+                    unknown_loops += 1
+                if bm:
+                    real_children[cname].append((bm.group(1), trips))
+            elif ins.opcode == "conditional":
+                for sub in re.findall(r"%([\w\.\-]+)", ins.attrs):
+                    if sub in comps:
+                        real_children[cname].append((sub, 1))
+            elif ins.opcode in ("call", "async-start"):
+                m = re.search(r"to_apply=%?([\w\.\-]+)", ins.attrs)
+                if m:
+                    real_children[cname].append((m.group(1), 1))
+            elif ins.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                if m:
+                    fused_children[cname].append(m.group(1))
+
+    # multipliers over 'real' computations (reachable from entry)
+    mult: dict[str, int] = {}
+
+    def walk(comp: str, m: int):
+        if mult.get(comp, 0) >= m:
+            return
+        mult[comp] = m
+        for c, t in real_children.get(comp, []):
+            walk(c, m * t)
+
+    roots = [entry] if entry else list(comps)
+    for r in roots:
+        walk(r, 1)
+
+    # fused bodies inherit their caller's multiplier (flops counting only)
+    fmult: dict[str, int] = dict(mult)
+    changed = True
+    while changed:
+        changed = False
+        for caller, subs in fused_children.items():
+            cm = fmult.get(caller)
+            if cm is None:
+                continue
+            for s in subs:
+                if fmult.get(s, 0) < cm:
+                    fmult[s] = cm
+                    changed = True
+        # fusions nested inside fused computations
+        for caller in list(fmult):
+            for c, t in real_children.get(caller, []):
+                if fmult.get(c, 0) < fmult[caller] * t:
+                    fmult[c] = fmult[caller] * t
+                    changed = True
+
+    types = {c: {i.name: i.type_str for i in instrs}
+             for c, instrs in comps.items()}
+
+    flops = 0
+    conv_flops = 0
+    by_coll: dict[str, int] = defaultdict(int)
+    coll_counts: dict[str, int] = defaultdict(int)
+    hbm_bytes = 0
+
+    # ops that move HBM bytes even standalone; everything elementwise or
+    # layout-only is modeled as fused into a consumer (the TPU model)
+    _anchors = {"dot", "convolution", "reduce", "reduce-window", "sort",
+                "concatenate", "copy", "pad", "reverse", "scatter",
+                "custom-call", "rng", "cholesky", "triangular-solve"}
+    _slicers = {"dynamic-slice", "slice", "gather"}
+
+    # ---- dtype-honest sizing --------------------------------------------
+    # XLA:CPU has no bf16 GEMM: FloatNormalization wraps every bf16 dot in
+    # convert(f32) pairs, and the converts get hoisted across collectives —
+    # so an all-gather that moves bf16 on the TPU target shows up as f32
+    # here. Bill every tensor at the NARROWEST dtype on its producer
+    # convert/copy/bitcast chain (and through single-convert wrapper
+    # fusions): that is the width the TPU program would move.
+    producers: dict[str, dict[str, "Instr"]] = {
+        c: {i.name: i for i in instrs} for c, instrs in comps.items()}
+
+    # body computation -> (parent computation, init tuple instr name)
+    _while_init: dict[str, tuple[str, str]] = {}
+    for c, instrs in comps.items():
+        for i in instrs:
+            if i.opcode == "while" and i.operands:
+                bm = re.search(r"body=%?([\w\.\-]+)", i.attrs)
+                if bm:
+                    _while_init[bm.group(1)] = (c, i.operands[0])
+
+    def _conv_width(type_str: str) -> int:
+        m = _SHAPE_RE.search(type_str)
+        return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+
+    def _n_elems(type_str: str) -> int:
+        n = 1
+        for d in _shape_dims(type_str):
+            n *= d
+        return n
+
+    _chase_memo: dict[tuple[str, str], int] = {}
+
+    def _chase(cname: str, name: str, depth: int = 8) -> int:
+        """Narrowest scalar width the data behind `name` logically has.
+
+        Follows convert/copy/bitcast (and single-convert wrapper fusions);
+        steps THROUGH a dot to its operands: our jax code never requests
+        widened accumulation, so an f32 dot whose operands chase to bf16
+        is CPU FloatNormalization — the TPU program materializes bf16."""
+        key = (cname, name)
+        if key in _chase_memo:
+            return _chase_memo[key]
+        pmap = producers.get(cname, {})
+        w = 8
+        cur = name
+        for _ in range(depth):
+            ins = pmap.get(cur)
+            if ins is None:
+                break
+            w = min(w, _conv_width(ins.type_str))
+            if ins.opcode in ("convert", "copy", "bitcast") and \
+                    ins.operands:
+                cur = ins.operands[0]
+            elif ins.opcode == "dot" and ins.operands:
+                _chase_memo[key] = w  # break cycles
+                ow = max(_chase(cname, o, depth - 1)
+                         for o in ins.operands)
+                w = min(w, max(ow, 2))
+                break
+            elif ins.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                body = comps.get(m.group(1), []) if m else []
+                real = [b for b in body if b.opcode not in
+                        ("parameter", "bitcast")]
+                if real and ins.operands and \
+                        all(b.opcode in ("convert", "copy")
+                            for b in real):
+                    # pure convert/copy wrapper (f32->bf16->f32 round
+                    # trips from CPU FloatNormalization): the narrowest
+                    # width inside IS the logical width
+                    w = min([w] + [_conv_width(b.type_str)
+                                   for b in real])
+                    cur = ins.operands[0]
+                else:
+                    break
+            elif ins.opcode == "get-tuple-element":
+                # while-loop carry: hop from the body parameter to the
+                # loop's init tuple element (converts hoisted out of the
+                # loop are CPU artifacts; the TPU carry keeps bf16)
+                idx_m = re.search(r"index=(\d+)", ins.attrs)
+                src = pmap.get(ins.operands[0]) if ins.operands else None
+                hop = None
+                if idx_m and src is not None and \
+                        src.opcode == "parameter":
+                    hop = _while_init.get(cname)
+                if hop is not None:
+                    p_comp, tuple_name = hop
+                    tup = producers.get(p_comp, {}).get(tuple_name)
+                    idx = int(idx_m.group(1))
+                    if tup is not None and tup.opcode == "tuple" and \
+                            idx < len(tup.operands):
+                        _chase_memo[key] = w
+                        w = min(w, _chase(p_comp, tup.operands[idx],
+                                          depth - 1))
+                    break
+                break
+            else:
+                break
+        _chase_memo[key] = w
+        return w
+
+    def eff_bytes(cname: str, name: str) -> int:
+        """Bytes of operand `name` at its narrowest logical dtype."""
+        t = producers.get(cname, {}).get(name)
+        if t is None:
+            return 0
+        return _n_elems(t.type_str) * min(_conv_width(t.type_str),
+                                          _chase(cname, name))
+
+    def _fusion_bytes(cname: str, fins: "Instr", fname: str) -> int:
+        """HBM cost of one fusion call: per-operand reads + (inner DUS)
+        writes. An operand consumed ONLY by slicing ops inside the body
+        costs the slice outputs (bytes actually touched), not the full
+        array — this is what keeps a lax.scan over stacked layer params
+        from being billed the whole stack every iteration. Operand widths
+        use the parent-side narrow-dtype chase."""
+        body = comps.get(fname, [])
+        tmap_b = types.get(fname, {})
+        params: dict[int, tuple[str, str]] = {}
+        for ins in body:
+            if ins.opcode == "parameter":
+                m = re.fullmatch(r"(\d+)", ins.args.strip())
+                if m:
+                    params[int(m.group(1))] = (ins.name, ins.type_str)
+        total = 0
+        for idx, (pname, ptype) in params.items():
+            opnd = (fins.operands[idx]
+                    if idx < len(fins.operands) else None)
+            width = min(_conv_width(ptype),
+                        _chase(cname, opnd) if opnd else 8)
+            consumers = [i for i in body if pname in i.operands]
+
+            def _touched(c) -> int | None:
+                if c.opcode in _slicers:
+                    return _n_elems(c.type_str)
+                if c.opcode == "dynamic-update-slice" and \
+                        c.operands and c.operands[0] == pname:
+                    # in-place update target: only the slice is written
+                    return 0
+                return None
+
+            costs = [_touched(c) for c in consumers]
+            if consumers and all(c is not None for c in costs):
+                total += sum(costs) * width
+            else:
+                total += _n_elems(ptype) * width
+        for ins in body:
+            if ins.opcode == "dynamic-update-slice" and \
+                    len(ins.operands) >= 2:
+                total += _shape_bytes(tmap_b.get(ins.operands[1], ""))
+        return total
+
+    consumers_of: dict[str, dict[str, list["Instr"]]] = {}
+    for c, instrs in comps.items():
+        cm: dict[str, list] = defaultdict(list)
+        for i in instrs:
+            for o in i.operands:
+                cm[o].append(i)
+        consumers_of[c] = cm
+
+    def eff_out_bytes(cname: str, ins: "Instr") -> int:
+        """Output bytes at logical dtype: an op whose every consumer
+        immediately converts it down (the CPU f32-dot artifact) would be
+        written narrow on the TPU target."""
+        if ins.type_str.startswith("("):
+            return _shape_bytes(ins.type_str)
+        w = _conv_width(ins.type_str)
+        cons = consumers_of.get(cname, {}).get(ins.name, [])
+        if cons:
+            cw = []
+            for cins in cons:
+                if cins.opcode == "convert":
+                    cw.append(_conv_width(cins.type_str))
+                elif cins.opcode == "dot":
+                    # CPU FloatNormalization elides the final bf16
+                    # convert of a chain feeding a promoted dot; the TPU
+                    # program materializes the chain at the dot's logical
+                    # input width (= what its other operands carry)
+                    others = [o for o in cins.operands if o != ins.name]
+                    ow = max([_chase(cname, o) for o in others] + [2])
+                    cw.append(min(w, max(ow, 2)))
+                else:
+                    cw.append(w)
+            w = min(w, max(cw))
+        return _n_elems(ins.type_str) * w
+
+    for cname, instrs in comps.items():
+        fm = fmult.get(cname, 0)
+        rm = mult.get(cname, 0)
+        tmap = types[cname]
+        for ins in instrs:
+            # ---- flops (any computation, fused or not) ----------------
+            if fm and ins.opcode == "dot":
+                out_n = 1
+                for d in _shape_dims(ins.type_str):
+                    out_n *= d
+                cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                               ins.attrs)
+                k = 1
+                if cd and ins.operands:
+                    lhs_dims = _shape_dims(tmap.get(ins.operands[0], ""))
+                    for di in cd.group(1).split(","):
+                        if di and int(di) < len(lhs_dims):
+                            k *= lhs_dims[int(di)]
+                flops += 2 * out_n * k * fm
+            elif fm and ins.opcode == "convolution":
+                out_n = 1
+                for d in _shape_dims(ins.type_str):
+                    out_n *= d
+                win = re.search(r"window=\{[^}]*size=([0-9x]+)", ins.attrs)
+                k = 1
+                if win:
+                    for d in win.group(1).split("x"):
+                        k *= int(d)
+                conv_flops += 2 * out_n * k * fm
+            # ---- HBM bytes + collectives (real computations only) -----
+            if not rm or ins.opcode in _FREE_OPS:
+                continue
+            op = ins.opcode
+            base = next((c for c in _COLLECTIVES
+                         if op in (c, c + "-start")), None)
+            out_b = eff_out_bytes(cname, ins)
+            if base is not None:
+                nb = sum(eff_bytes(cname, o) for o in ins.operands)
+                if nb == 0:
+                    nb = out_b
+                by_coll[base] += nb * rm
+                coll_counts[base] += rm
+                hbm_bytes += (nb + out_b) * rm
+                if detail is not None:
+                    detail.append((nb * rm, base, cname,
+                                   ins.type_str[:48], rm))
+                continue
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.attrs)
+                nb = out_b + (_fusion_bytes(cname, ins, m.group(1))
+                              if m else 0)
+                # scan-output stacking: a fusion whose root updates a
+                # slice of its own parameter in place (lax.scan's ys
+                # buffer) writes only the slice, not the whole buffer —
+                # XLA aliases input/output. Without this, a 4096-step
+                # sLSTM recurrence bills 33 MB x 24576 instead of
+                # 128 KB x 24576.
+                if m:
+                    body = comps.get(m.group(1), [])
+                    root = body[-1] if body else None
+                    if root is not None and \
+                            root.opcode == "dynamic-update-slice" and \
+                            len(root.operands) >= 2:
+                        upd = _shape_bytes(
+                            types.get(m.group(1), {}).get(
+                                root.operands[1], ""))
+                        nb = nb - out_b + 2 * upd
+            elif op in _slicers:
+                nb = 2 * out_b                       # read slice + write
+            elif op == "dynamic-update-slice":
+                upd = (eff_bytes(cname, ins.operands[1])
+                       if len(ins.operands) >= 2 else 0)
+                nb = 2 * upd                         # in-place slice update
+            elif op == "dot":
+                # out width: what the jax-level einsum would materialize
+                ow = min(_conv_width(ins.type_str),
+                         max([_chase(cname, o) for o in ins.operands]
+                             + [2]))
+                nb = _n_elems(ins.type_str) * ow + sum(
+                    eff_bytes(cname, o) for o in ins.operands)
+            elif op in _anchors:
+                nb = out_b + sum(eff_bytes(cname, o)
+                                 for o in ins.operands)
+            else:
+                continue   # elementwise/layout: fuses, no HBM round-trip
+            hbm_bytes += nb * rm
+            if detail is not None and nb * rm > 0:
+                detail.append((nb * rm, op, cname, ins.type_str[:48],
+                               rm))
+
+    coll = dict(by_coll)
+    coll["total"] = sum(by_coll.values())
+    coll["counts"] = dict(coll_counts)
+    coll["unknown_loops"] = unknown_loops
+    return dict(flops=float(flops), conv_flops=float(conv_flops),
+                hbm_bytes=float(hbm_bytes), collectives=coll,
+                n_computations=len(comps))
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Back-compat wrapper: just the collective section."""
+    return module_stats(hlo_text)["collectives"]

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+device query; tests must see the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1) -> Mesh:
+    """Whatever this host has, as (data, model) — used by examples/tests."""
+    n = jax.device_count()
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return {a: int(s) for a, s in zip(mesh.axis_names,
+                                      np.shape(mesh.devices))}

@@ -1,0 +1,1 @@
+from repro.models.config import ModelConfig, ShapeSpec, SHAPES  # noqa: F401

@@ -1,0 +1,119 @@
+"""GQA attention: blockwise (flash) training/prefill path + cached decode.
+
+* ``flash_attention`` — pure-JAX blockwise attention (double scan over Q and
+  KV tiles with running max/sum), so 32k-token prefill never materializes an
+  S x S score matrix. The per-tile body is wrapped in ``jax.checkpoint``:
+  backward recomputes tiles instead of storing them (memory O(S * tiles)
+  instead of O(S^2)). This is the XLA-level flash algorithm; a Pallas
+  MXU-tiled variant is the natural TPU upgrade and the chunk sizes here were
+  chosen MXU-aligned (multiples of 128) so the swap is mechanical.
+* ``decode_attention`` — one new token against a KV cache. The cache's
+  sequence dim may be sharded (long-context flash-decode): the softmax
+  max/sum and the weighted-value contraction then reduce over a sharded
+  axis, which GSPMD lowers to partial reductions + psum — the TPU analog of
+  flash-decode's split-KV scheme.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import constrain
+
+_NEG = -1e30
+
+
+def _tile_update(qc, kc, vc, m, l, acc, qpos, kpos, scale, causal):
+    """One (Q-tile x KV-tile) flash step.
+
+    qc: (B, cq, KV, G, hd); kc/vc: (B, ck, KV, hd);
+    m, l: (B, KV, G, cq); acc: (B, KV, G, cq, hd).
+    """
+    s = jnp.einsum("bqvgd,bcvd->bvgqc", qc, kc) * scale
+    s = s.astype(jnp.float32)
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]            # (cq, ck)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bvgqc,bcvd->bvgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    chunk_q: int = 0, chunk_k: int = 1024,
+                    causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
+
+    Context-parallel flash: Q stays WHOLE (its sequence dim keeps whatever
+    sharding the residual stream has — under sequence parallelism that is
+    the model axis, and the running max/sum/acc carry keeps the exact same
+    layout on every loop iteration, which is what keeps GSPMD from
+    re-laying-out the carry each step); the scan runs over KV tiles only.
+    K/V are small under GQA (KV << H), so gathering them across the SP
+    shards costs far less than gathering Q or the scores. ``chunk_q`` is
+    accepted for API compatibility and ignored.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    ck = min(chunk_k, Sk)
+    pk = (-Sk) % ck
+    if pk:  # padded K positions sit at pos >= Sk and are masked below
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nk = (Sk + pk) // ck
+    scale = 1.0 / (hd ** 0.5)
+
+    q5 = q.reshape(B, Sq, KV, G, hd)
+    kc = k.reshape(B, nk, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, KV, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(Sq)
+
+    tile = functools.partial(_tile_update, scale=scale, causal=causal)
+    tile = jax.checkpoint(tile)
+
+    def inner(carry, ki):
+        kidx, kcur, vcur = ki
+        kpos = kidx * ck + jnp.arange(ck)
+        m, l, acc = carry
+        m, l, acc = tile(q5, kcur, vcur, m, l, acc, qpos, kpos)
+        return (m, l, acc), None
+
+    init = (jnp.full((B, KV, G, Sq), _NEG, jnp.float32),
+            jnp.zeros((B, KV, G, Sq), jnp.float32),
+            jnp.zeros((B, KV, G, Sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(inner, init, (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-20)       # (B,KV,G,Sq,hd)
+    out = out.transpose(0, 3, 1, 2, 4)                 # (B,Sq,KV,G,hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """q: (B, H, hd) one new token; caches (B, S, KV, hd); attends over
+    positions [0, cache_len] (the new token's k/v already written)."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    q5 = q.reshape(B, KV, G, hd)
+    k_cache = constrain(k_cache, "cache_batch", "cache_seq", "act_kv", None)
+    v_cache = constrain(v_cache, "cache_batch", "cache_seq", "act_kv", None)
+    s = jnp.einsum("bvgd,bsvd->bvgs", q5, k_cache).astype(jnp.float32)
+    s = s * scale
+    valid = jnp.arange(S)[None, None, None, :] <= cache_len
+    s = jnp.where(valid, s, _NEG)
+    # softmax over the (possibly sharded) cache sequence dim
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bvgs,bsvd->bvgd",
+                     (p / jnp.maximum(l, 1e-20)).astype(v_cache.dtype),
+                     v_cache)
+    return out.reshape(B, H, hd).astype(q.dtype)

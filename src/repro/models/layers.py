@@ -1,0 +1,116 @@
+"""Shared neural layers (functional, params as flat dicts of arrays).
+
+Parameters live in a flat ``dict[str, jax.Array]`` keyed by '/'-joined
+paths; each model family declares its parameters as a table of
+``ParamSpec(shape, logical_axes, init)`` — a single source of truth from
+which initialization, sharding specs and dry-run ShapeDtypeStructs are all
+derived (see model.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]   # logical axis per dim
+    init: str = "normal"              # normal | zeros | ones
+    scale: float = 1.0                # stddev multiplier for 'normal'
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, jnp.float32)
+        if self.init == "ones":
+            return jnp.ones(self.shape, jnp.float32)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale / math.sqrt(max(fan_in, 1))
+        return std * jax.random.normal(key, self.shape, jnp.float32)
+
+
+def init_params(specs: dict[str, ParamSpec], key: jax.Array
+                ) -> dict[str, jax.Array]:
+    out = {}
+    keys = jax.random.split(key, len(specs))
+    for (name, spec), k in zip(sorted(specs.items()), keys):
+        out[name] = spec.materialize(k)
+    return out
+
+
+def abstract_params(specs: dict[str, ParamSpec]
+                    ) -> dict[str, jax.ShapeDtypeStruct]:
+    return {n: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+            for n, s in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+           ) -> jax.Array:
+    """SwiGLU MLP. x (..., d); w1/w3 (d, f); w2 (f, d)."""
+    h = jnp.einsum("...d,df->...f", x, w1.astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, w3.astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    h = constrain(h, *(("act_batch",) + (None,) * (h.ndim - 2)
+                       + ("act_ff",)))
+    return jnp.einsum("...f,fd->...d", h, w2.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) or (..., H, hd) single-step; pos: (..., S) or
+    scalar positions (int32)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Per-token CE in fp32. labels < 0 are masked. Returns (loss, n_tok).
+
+    The logsumexp reduction runs over the (possibly model-sharded) vocab
+    dim; GSPMD turns it into partial reduce + all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll) / n, n

@@ -1,0 +1,675 @@
+"""Model assembly for all 10 assigned architectures.
+
+One functional decoder substrate, driven by ``ModelConfig.family``:
+
+* dense / moe / vlm / audio — pre-norm GQA transformer blocks (flash
+  attention), SwiGLU or MoE FFN; layers stacked and scanned
+  (``lax.scan`` over stacked params keeps the HLO size O(1) in depth —
+  required for the 132B dry-run to compile).
+* hybrid (zamba2) — Mamba2 (SSD) backbone with ONE weight-shared
+  attention+MLP block applied every ``attn_every`` layers (13 applications,
+  each with its own KV cache at serve time).
+* ssm (xlstm) — mLSTM blocks with an sLSTM block every ``slstm_every``.
+
+Params are a flat ``dict[str, array]``; stacked layer params carry a
+leading layer dim. ``param_specs(cfg)`` is the single source of truth for
+shapes / logical sharding axes; init, dry-run ShapeDtypeStructs and
+NamedShardings all derive from it.
+
+Entry points:
+  forward(cfg, params, batch)          -> (logits, aux)   [train/prefill]
+  decode_step(cfg, params, cache, tok, pos) -> (logits, cache)
+  init_cache(cfg, batch, max_seq)      -> cache pytree
+  cache_logical_axes(cfg)              -> logical axes pytree for the cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec, rms_norm, swiglu, apply_rope
+from repro.models.moe import moe_ffn
+from repro.models.ssm import mamba2_block
+from repro.models.xlstm import mlstm_block, slstm_block
+from repro.sharding.axes import constrain
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig, L: int | None, prefix: str
+                ) -> dict[str, ParamSpec]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    Ld = () if L is None else (L,)
+    Lx = () if L is None else (None,)
+
+    def S(shape, logical, **kw):
+        return ParamSpec(Ld + shape, Lx + logical, **kw)
+
+    out = {
+        f"{prefix}/norm": S((d,), (None,), init="ones"),
+        f"{prefix}/wq": S((d, H * hd), ("p_embed", "p_heads")),
+        f"{prefix}/wk": S((d, KV * hd), ("p_embed", "p_kv")),
+        f"{prefix}/wv": S((d, KV * hd), ("p_embed", "p_kv")),
+        f"{prefix}/wo": S((H * hd, d), ("p_heads", "p_embed")),
+    }
+    if cfg.qk_norm:
+        out[f"{prefix}/q_norm"] = S((hd,), (None,), init="ones")
+        out[f"{prefix}/k_norm"] = S((hd,), (None,), init="ones")
+    return out
+
+
+def _mlp_specs(cfg: ModelConfig, L: int | None, prefix: str
+               ) -> dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    Ld = () if L is None else (L,)
+    Lx = () if L is None else (None,)
+
+    def S(shape, logical, **kw):
+        return ParamSpec(Ld + shape, Lx + logical, **kw)
+
+    return {
+        f"{prefix}/norm": S((d,), (None,), init="ones"),
+        f"{prefix}/w1": S((d, f), ("p_embed", "p_ff")),
+        f"{prefix}/w3": S((d, f), ("p_embed", "p_ff")),
+        f"{prefix}/w2": S((f, d), ("p_ff", "p_embed")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, L: int, prefix: str
+               ) -> dict[str, ParamSpec]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), init="ones"),
+        f"{prefix}/wg": ParamSpec((L, d, E), (None, "p_embed", None)),
+        f"{prefix}/w1": ParamSpec((L, E, d, f),
+                                  (None, "p_expert", "p_embed", None)),
+        f"{prefix}/w3": ParamSpec((L, E, d, f),
+                                  (None, "p_expert", "p_embed", None)),
+        f"{prefix}/w2": ParamSpec((L, E, f, d),
+                                  (None, "p_expert", None, "p_embed")),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig, L: int, prefix: str
+                 ) -> dict[str, ParamSpec]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, K = cfg.ssm_heads, cfg.ssm_conv
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), init="ones"),
+        f"{prefix}/in_proj": ParamSpec(
+            (L, d, 2 * di + 2 * N + H), (None, "p_embed", "p_inner")),
+        f"{prefix}/conv_w": ParamSpec(
+            (L, K, di + 2 * N), (None, None, "p_inner"), scale=0.5),
+        f"{prefix}/a_log": ParamSpec((L, H), (None, None), init="zeros"),
+        f"{prefix}/dt_bias": ParamSpec((L, H), (None, None), init="zeros"),
+        f"{prefix}/d_skip": ParamSpec((L, H), (None, None), init="ones"),
+        f"{prefix}/norm_inner": ParamSpec((L, di), (None, "p_inner"),
+                                          init="ones"),
+        f"{prefix}/out_proj": ParamSpec((L, di, d),
+                                        (None, "p_inner", "p_embed")),
+    }
+
+
+def _mlstm_specs(cfg: ModelConfig, L: int, prefix: str
+                 ) -> dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.mlstm_proj * d
+    H, K = cfg.n_heads, cfg.ssm_conv
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), init="ones"),
+        f"{prefix}/up_proj": ParamSpec((L, d, 2 * di),
+                                       (None, "p_embed", "p_inner")),
+        f"{prefix}/conv_w": ParamSpec((L, K, di), (None, None, "p_inner"),
+                                      scale=0.5),
+        # block-diagonal per-head projections (the xLSTM layout): H blocks
+        # of (P, P) instead of a dense (di, di) — 4x fewer params at H=4
+        f"{prefix}/wq": ParamSpec((L, H, di // H, di // H),
+                                  (None, None, "p_inner", None)),
+        f"{prefix}/wk": ParamSpec((L, H, di // H, di // H),
+                                  (None, None, "p_inner", None)),
+        f"{prefix}/wv": ParamSpec((L, H, di // H, di // H),
+                                  (None, None, "p_inner", None)),
+        f"{prefix}/wi": ParamSpec((L, di, H), (None, "p_inner", None)),
+        f"{prefix}/wf": ParamSpec((L, di, H), (None, "p_inner", None)),
+        f"{prefix}/norm_inner": ParamSpec((L, di), (None, "p_inner"),
+                                          init="ones"),
+        f"{prefix}/down_proj": ParamSpec((L, di, d),
+                                         (None, "p_inner", "p_embed")),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig, L: int, prefix: str
+                 ) -> dict[str, ParamSpec]:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ff = ((4 * d // 3) + 127) // 128 * 128
+    return {
+        f"{prefix}/norm": ParamSpec((L, d), (None, None), init="ones"),
+        f"{prefix}/w_gates": ParamSpec((L, d, H * dh * 4),
+                                       (None, "p_embed", "p_inner")),
+        f"{prefix}/r_gates": ParamSpec((L, H, dh, dh * 4),
+                                       (None, None, None, None),
+                                       scale=0.5),
+        f"{prefix}/ln": ParamSpec((L, d), (None, None), init="ones"),
+        f"{prefix}/up": ParamSpec((L, d, ff), (None, "p_embed", "p_ff")),
+        f"{prefix}/down": ParamSpec((L, ff, d), (None, "p_ff", "p_embed")),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    d, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    specs: dict[str, ParamSpec] = {}
+    if cfg.family == "audio":
+        specs["embed/tok"] = ParamSpec(
+            (cfg.n_codebooks, V, d), (None, "p_vocab", "p_embed"))
+        specs["lm_head/w"] = ParamSpec(
+            (cfg.n_codebooks, d, V), (None, "p_embed", "p_vocab"))
+    else:
+        specs["embed/tok"] = ParamSpec((V, d), ("p_vocab", "p_embed"))
+        specs["lm_head/w"] = ParamSpec((d, V), ("p_embed", "p_vocab"))
+    specs["final_norm/scale"] = ParamSpec((d,), (None,), init="ones")
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        specs.update(_attn_specs(cfg, L, "layers/attn"))
+        specs.update(_mlp_specs(cfg, L, "layers/mlp"))
+    elif cfg.family == "moe":
+        specs.update(_attn_specs(cfg, L, "layers/attn"))
+        specs.update(_moe_specs(cfg, L, "layers/moe"))
+    elif cfg.family == "hybrid":
+        specs.update(_mamba_specs(cfg, L, "layers/mamba"))
+        specs.update(_attn_specs(cfg, None, "shared/attn"))
+        specs.update(_mlp_specs(cfg, None, "shared/mlp"))
+    elif cfg.family == "ssm":
+        n_s = L // cfg.slstm_every if cfg.slstm_every else 0
+        n_m = L - n_s
+        specs.update(_mlstm_specs(cfg, n_m, "mblocks"))
+        if n_s:
+            specs.update(_slstm_specs(cfg, n_s, "sblocks"))
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict[str, tuple]:
+    return {k: v.logical for k, v in param_specs(cfg).items()}
+
+
+# ---------------------------------------------------------------------------
+# blocks (runtime)
+# ---------------------------------------------------------------------------
+
+def _subtree(params: dict, prefix: str) -> dict:
+    pl = prefix + "/"
+    return {k[len(pl):]: v for k, v in params.items() if k.startswith(pl)}
+
+
+def _attn_apply(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array
+                ) -> jax.Array:
+    """Training/prefill attention sub-block (pre-norm residual inside)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    h = rms_norm(x, p["norm"].astype(jnp.float32), cfg.norm_eps)
+    q = jnp.einsum("bsd,dk->bsk", h, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dk->bsk", h, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dk->bsk", h, p["wv"].astype(x.dtype))
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"].astype(jnp.float32), cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"].astype(jnp.float32), cfg.norm_eps)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    # no head constraints here: under sequence/context parallelism the
+    # q seq dim carries the sharding through the flash loop (see
+    # attention.py) — forcing heads-TP as well made GSPMD re-layout the
+    # loop carry every iteration (involuntary full rematerialization).
+    q = constrain(q, "act_batch", "act_seq", None, None)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention_pallas
+        interp = jax.devices()[0].platform != "tpu"
+        o = flash_attention_pallas(q, k, v, True, cfg.attn_chunk_q,
+                                   cfg.attn_chunk_k, None, interp)
+    else:
+        o = flash_attention(q, k, v, chunk_q=cfg.attn_chunk_q,
+                            chunk_k=cfg.attn_chunk_k)
+    o = o.reshape(B, S, H * hd)
+    return jnp.einsum("bsk,kd->bsd", o, p["wo"].astype(x.dtype)), (k, v)
+
+
+def _attn_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 kc: jax.Array, vc: jax.Array, pos: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention. x: (B, d); kc/vc: (B, Smax, KV, hd)."""
+    B, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    h = rms_norm(x, p["norm"].astype(jnp.float32), cfg.norm_eps)
+    q = jnp.einsum("bd,dk->bk", h, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bd,dk->bk", h, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bd,dk->bk", h, p["wv"].astype(x.dtype))
+    q = q.reshape(B, H, hd)
+    k = k.reshape(B, KV, hd)
+    v = v.reshape(B, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"].astype(jnp.float32), cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"].astype(jnp.float32), cfg.norm_eps)
+    posb = jnp.broadcast_to(pos, (B,))
+    q = apply_rope(q[:, None], posb[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], posb[:, None], cfg.rope_theta)[:, 0]
+    kc = jax.lax.dynamic_update_slice(
+        kc, k[:, None].astype(kc.dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(
+        vc, v[:, None].astype(vc.dtype), (0, pos, 0, 0))
+    o = decode_attention(q, kc, vc, pos)
+    out = jnp.einsum("bk,kd->bd", o.reshape(B, H * hd),
+                     p["wo"].astype(x.dtype))
+    return out, kc, vc
+
+
+def _mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = rms_norm(x, p["norm"].astype(jnp.float32), cfg.norm_eps)
+    return swiglu(h, p["w1"], p["w3"], p["w2"])
+
+
+def _moe_apply(cfg: ModelConfig, p: dict, x: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, p["norm"].astype(jnp.float32), cfg.norm_eps)
+    return moe_ffn(h, p["wg"], p["w1"], p["w3"], p["w2"],
+                   top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                   group=cfg.moe_group)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array,
+           dtype) -> jax.Array:
+    emb = params["embed/tok"]
+    if cfg.family == "audio":
+        # tokens: (B, S, n_cb) -> sum of codebook embeddings
+        x = sum(emb[i][tokens[..., i]] for i in range(cfg.n_codebooks))
+    else:
+        x = emb[tokens]
+    return x.astype(dtype)
+
+
+def _lm_head(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    w = params["lm_head/w"]
+    if cfg.family == "audio":
+        logits = jnp.einsum("...d,cdv->...cv", x, w.astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    axes = ("act_batch",) + (None,) * (logits.ndim - 2) + ("act_vocab",)
+    return constrain(logits, *axes)
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            patch_emb: jax.Array | None = None, last_only: bool = False,
+            ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. tokens: (B, S[, n_cb]) int32.
+    For cfg.family == 'vlm', patch_emb (B, n_patch, d_model) is prepended.
+    ``last_only`` computes the LM head on the final position only (prefill:
+    skips the (B,S,V) logits tensor entirely). Returns (logits, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed(cfg, params, tokens, dtype)
+    if cfg.family == "vlm":
+        assert patch_emb is not None
+        x = jnp.concatenate([patch_emb.astype(dtype), x], axis=1)
+    B, S, d = x.shape
+    x = constrain(x, "act_batch", "act_seq", "act_embed")
+    pos = jnp.arange(S)[None, :]
+    aux = jnp.float32(0.0)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        attn_p = _subtree(params, "layers/attn")
+        ff_p = _subtree(params, "layers/moe" if cfg.is_moe
+                        else "layers/mlp")
+
+        def block(x, slices):
+            ap, fp = slices
+            a_out, _ = _attn_apply(cfg, ap, x, pos)
+            x = x + a_out
+            if cfg.is_moe:
+                f_out, a = _moe_apply(cfg, fp, x)
+            else:
+                f_out, a = _mlp_apply(cfg, fp, x), jnp.float32(0.0)
+            return x + f_out, a
+
+        def body(x, slices):
+            x, a = _maybe_remat(cfg, block)(x, slices)
+            return x, a
+
+        x, auxs = jax.lax.scan(body, x, (attn_p, ff_p))
+        aux = jnp.sum(auxs)
+
+    elif cfg.family == "hybrid":
+        x, aux = _zamba_forward(cfg, params, x, pos)
+
+    elif cfg.family == "ssm":
+        x, aux = _xlstm_forward(cfg, params, x)
+
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm/scale"].astype(jnp.float32),
+                 cfg.norm_eps)
+    return _lm_head(cfg, params, x), aux
+
+
+def _shared_block(cfg: ModelConfig, params: dict, x: jax.Array,
+                  pos: jax.Array) -> jax.Array:
+    ap = _subtree(params, "shared/attn")
+    mp = _subtree(params, "shared/mlp")
+    a_out, _ = _attn_apply(cfg, ap, x, pos)
+    x = x + a_out
+    return x + _mlp_apply(cfg, mp, x)
+
+
+def _zamba_forward(cfg: ModelConfig, params: dict, x: jax.Array,
+                   pos: jax.Array):
+    L, k = cfg.n_layers, cfg.attn_every
+    n_groups = L // k
+    rest = L - n_groups * k
+    mp = _subtree(params, "layers/mamba")
+    mp_g = jax.tree.map(
+        lambda a: a[: n_groups * k].reshape((n_groups, k) + a.shape[1:]),
+        mp)
+    mp_r = jax.tree.map(lambda a: a[n_groups * k:], mp)
+
+    def mamba_body(x, pslice):
+        h = rms_norm(x, pslice["norm"].astype(jnp.float32), cfg.norm_eps)
+        out, _ = mamba2_block(h, pslice, cfg)
+        return x + out, None
+
+    mamba_body = _maybe_remat(cfg, mamba_body)
+
+    def group_body(x, pslice):
+        x, _ = jax.lax.scan(mamba_body, x, pslice)
+        x = _maybe_remat(cfg, lambda y: _shared_block(cfg, params, y, pos)
+                         )(x)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, mp_g)
+    if rest:
+        x, _ = jax.lax.scan(mamba_body, x, mp_r)
+    return x, jnp.float32(0.0)
+
+
+def _xlstm_forward(cfg: ModelConfig, params: dict, x: jax.Array):
+    L, se = cfg.n_layers, cfg.slstm_every
+    n_s = L // se if se else 0
+    mp = _subtree(params, "mblocks")
+    sp = _subtree(params, "sblocks") if n_s else None
+
+    def m_body(x, pslice):
+        h = rms_norm(x, pslice["norm"].astype(jnp.float32), cfg.norm_eps)
+        out, _ = mlstm_block(h, pslice, cfg)
+        return x + out, None
+
+    m_body = _maybe_remat(cfg, m_body)
+
+    if not n_s:
+        x, _ = jax.lax.scan(m_body, x, mp)
+        return x, jnp.float32(0.0)
+
+    per = se - 1                      # mLSTMs per group
+    mp_g = jax.tree.map(
+        lambda a: a[: n_s * per].reshape((n_s, per) + a.shape[1:]), mp)
+    mp_rest = jax.tree.map(lambda a: a[n_s * per:], mp)
+
+    def s_body(x, pslice):
+        h = rms_norm(x, pslice["norm"].astype(jnp.float32), cfg.norm_eps)
+        out, _ = slstm_block(h, pslice, cfg)
+        return x + out
+
+    def group_body(x, slices):
+        mslice, sslice = slices
+        x, _ = jax.lax.scan(m_body, x, mslice)
+        x = _maybe_remat(cfg, s_body)(x, sslice)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, (mp_g, sp))
+    n_rest = L - n_s * se
+    if n_rest:
+        x, _ = jax.lax.scan(m_body, x, mp_rest)
+    return x, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Abstract-shape-compatible cache pytree (all zeros when materialized;
+    see ``cache_specs`` for the dry-run variant)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """ShapeDtypeStructs for the decode cache."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S = batch, max_seq
+    KV, hd, L = cfg.n_kv, cfg.hd, cfg.n_layers
+    out: dict[str, Any] = {}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        out["k"] = jax.ShapeDtypeStruct((L, B, S, KV, hd), dt)
+        out["v"] = jax.ShapeDtypeStruct((L, B, S, KV, hd), dt)
+    elif cfg.family == "hybrid":
+        H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        di, K = cfg.d_inner, cfg.ssm_conv
+        n_apps = L // cfg.attn_every
+        out["ssm_h"] = jax.ShapeDtypeStruct((L, B, H, N, P), jnp.float32)
+        out["conv"] = jax.ShapeDtypeStruct((L, B, K - 1, di + 2 * N), dt)
+        out["k"] = jax.ShapeDtypeStruct((n_apps, B, S, KV, hd), dt)
+        out["v"] = jax.ShapeDtypeStruct((n_apps, B, S, KV, hd), dt)
+    elif cfg.family == "ssm":
+        n_s = L // cfg.slstm_every if cfg.slstm_every else 0
+        n_m = L - n_s
+        di = cfg.mlstm_proj * cfg.d_model
+        H = cfg.n_heads
+        P = di // H
+        K = cfg.ssm_conv
+        dh = cfg.d_model // H
+        out["mC"] = jax.ShapeDtypeStruct((n_m, B, H, P, P), jnp.float32)
+        out["mn"] = jax.ShapeDtypeStruct((n_m, B, H, P), jnp.float32)
+        out["mm"] = jax.ShapeDtypeStruct((n_m, B, H), jnp.float32)
+        out["mconv"] = jax.ShapeDtypeStruct((n_m, B, K - 1, di), dt)
+        if n_s:
+            for nm in ("sc", "sn", "sm", "sh"):
+                out[nm] = jax.ShapeDtypeStruct((n_s, B, H, dh), jnp.float32)
+    return out
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    kv_axes = (None, "cache_batch", "cache_seq", "act_kv", None)
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        return {"k": kv_axes, "v": kv_axes}
+    if cfg.family == "hybrid":
+        return {
+            "ssm_h": (None, "cache_batch", "act_inner", None, None),
+            "conv": (None, "cache_batch", None, "act_inner"),
+            "k": kv_axes, "v": kv_axes,
+        }
+    if cfg.family == "ssm":
+        ax = {
+            "mC": (None, "cache_batch", None, "act_inner", None),
+            "mn": (None, "cache_batch", None, "act_inner"),
+            "mm": (None, "cache_batch", None),
+            "mconv": (None, "cache_batch", None, "act_inner"),
+        }
+        if cfg.slstm_every:
+            for nm in ("sc", "sn", "sm", "sh"):
+                ax[nm] = (None, "cache_batch", None, None)
+        return ax
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """One decode step. tokens: (B,) int32 ((B, n_cb) for audio);
+    pos: scalar int32 — the cache slot the new token occupies."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        emb = params["embed/tok"]
+        x = sum(emb[i][tokens[:, i]] for i in range(cfg.n_codebooks))
+    else:
+        x = params["embed/tok"][tokens]
+    x = x.astype(dtype)
+    x = constrain(x, "act_batch", "act_embed")
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        attn_p = _subtree(params, "layers/attn")
+        ff_p = _subtree(params, "layers/moe" if cfg.is_moe
+                        else "layers/mlp")
+
+        def body(x, slices):
+            ap, fp, kc, vc = slices
+            a_out, kc, vc = _attn_decode(cfg, ap, x, kc, vc, pos)
+            x = x + a_out
+            if cfg.is_moe:
+                f_out, _ = _moe_apply(cfg, fp, x[:, None])
+                f_out = f_out[:, 0]
+            else:
+                f_out = _mlp_apply(cfg, fp, x)
+            return x + f_out, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (attn_p, ff_p, cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    elif cfg.family == "hybrid":
+        x, new_cache = _zamba_decode(cfg, params, cache, x, pos)
+
+    elif cfg.family == "ssm":
+        x, new_cache = _xlstm_decode(cfg, params, cache, x)
+
+    x = rms_norm(x, params["final_norm/scale"].astype(jnp.float32),
+                 cfg.norm_eps)
+    return _lm_head(cfg, params, x), new_cache
+
+
+def _zamba_decode(cfg, params, cache, x, pos):
+    L, k = cfg.n_layers, cfg.attn_every
+    n_groups = L // k
+    rest = L - n_groups * k
+    mp = _subtree(params, "layers/mamba")
+    shape_g = lambda a: a[: n_groups * k].reshape((n_groups, k) +
+                                                  a.shape[1:])
+    mp_g = jax.tree.map(shape_g, mp)
+    mp_r = jax.tree.map(lambda a: a[n_groups * k:], mp)
+    ssm_g = shape_g(cache["ssm_h"])
+    conv_g = shape_g(cache["conv"])
+    ssm_r = cache["ssm_h"][n_groups * k:]
+    conv_r = cache["conv"][n_groups * k:]
+
+    def mamba_body(x, slices):
+        pslice, sh, cv = slices
+        h = rms_norm(x, pslice["norm"].astype(jnp.float32), cfg.norm_eps)
+        out, (sh, cv) = mamba2_block(h, pslice, cfg, state=(sh, cv),
+                                     decode=True)
+        return x + out, (sh, cv)
+
+    ap = _subtree(params, "shared/attn")
+    mpp = _subtree(params, "shared/mlp")
+
+    def group_body(x, slices):
+        pslice, sh, cv, kc, vc = slices
+        x, (sh, cv) = jax.lax.scan(mamba_body, x, (pslice, sh, cv))
+        a_out, kc, vc = _attn_decode(cfg, ap, x, kc, vc, pos)
+        x = x + a_out
+        x = x + _mlp_apply(cfg, mpp, x)
+        return x, (sh, cv, kc, vc)
+
+    x, (sh_g, cv_g, k_new, v_new) = jax.lax.scan(
+        group_body, x, (mp_g, ssm_g, conv_g, cache["k"], cache["v"]))
+    if rest:
+        x, (sh_r, cv_r) = jax.lax.scan(mamba_body, x, (mp_r, ssm_r, conv_r))
+    new_cache = dict(cache)
+    flat = lambda a: a.reshape((n_groups * k,) + a.shape[2:])
+    if rest:
+        new_cache["ssm_h"] = jnp.concatenate([flat(sh_g), sh_r], axis=0)
+        new_cache["conv"] = jnp.concatenate([flat(cv_g), cv_r], axis=0)
+    else:
+        new_cache["ssm_h"] = flat(sh_g)
+        new_cache["conv"] = flat(cv_g)
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    return x, new_cache
+
+
+def _xlstm_decode(cfg, params, cache, x):
+    L, se = cfg.n_layers, cfg.slstm_every
+    n_s = L // se if se else 0
+    mp = _subtree(params, "mblocks")
+    new_cache = dict(cache)
+
+    def m_body(x, slices):
+        pslice, C, n, m, cv = slices
+        h = rms_norm(x, pslice["norm"].astype(jnp.float32), cfg.norm_eps)
+        out, ((C, n, m), cv) = mlstm_block(h, pslice, cfg,
+                                           state=((C, n, m), cv),
+                                           decode=True)
+        return x + out, (C, n, m, cv)
+
+    if not n_s:
+        x, (C, n, m, cv) = jax.lax.scan(
+            m_body, x, (mp, cache["mC"], cache["mn"], cache["mm"],
+                        cache["mconv"]))
+        new_cache.update(mC=C, mn=n, mm=m, mconv=cv)
+        return x, new_cache
+
+    per = se - 1
+    sp = _subtree(params, "sblocks")
+    shape_g = lambda a: a[: n_s * per].reshape((n_s, per) + a.shape[1:])
+    mp_g = jax.tree.map(shape_g, mp)
+    mp_rest = jax.tree.map(lambda a: a[n_s * per:], mp)
+    n_rest = L - n_s * se
+
+    def s_body(x, slices):
+        pslice, sc, sn, sm, sh = slices
+        h = rms_norm(x, pslice["norm"].astype(jnp.float32), cfg.norm_eps)
+        out, (sc, sn, sm, sh) = slstm_block(h, pslice, cfg,
+                                            state=(sc, sn, sm, sh),
+                                            decode=True)
+        return x + out, (sc, sn, sm, sh)
+
+    def group_body(x, slices):
+        (mslice, mC, mn, mm, mcv, sslice, sc, sn, sm, sh) = slices
+        x, (mC, mn, mm, mcv) = jax.lax.scan(
+            m_body, x, (mslice, mC, mn, mm, mcv))
+        x, (sc, sn, sm, sh) = s_body(x, (sslice, sc, sn, sm, sh))
+        return x, (mC, mn, mm, mcv, sc, sn, sm, sh)
+
+    gm = lambda a: shape_g(a)
+    x, (mC_g, mn_g, mm_g, mcv_g, sc, sn, sm, sh) = jax.lax.scan(
+        group_body, x,
+        (mp_g, gm(cache["mC"]), gm(cache["mn"]), gm(cache["mm"]),
+         gm(cache["mconv"]), sp, cache["sc"], cache["sn"], cache["sm"],
+         cache["sh"]))
+    flat = lambda a: a.reshape((n_s * per,) + a.shape[2:])
+    if n_rest:
+        x, (mC_r, mn_r, mm_r, mcv_r) = jax.lax.scan(
+            m_body, x, (mp_rest, cache["mC"][n_s * per:],
+                        cache["mn"][n_s * per:], cache["mm"][n_s * per:],
+                        cache["mconv"][n_s * per:]))
+        cat = lambda a, b: jnp.concatenate([flat(a), b], axis=0)
+        new_cache.update(mC=cat(mC_g, mC_r), mn=cat(mn_g, mn_r),
+                         mm=cat(mm_g, mm_r), mconv=cat(mcv_g, mcv_r))
+    else:
+        new_cache.update(mC=flat(mC_g), mn=flat(mn_g), mm=flat(mm_g),
+                         mconv=flat(mcv_g))
+    new_cache.update(sc=sc, sn=sn, sm=sm, sh=sh)
+    return x, new_cache

@@ -1,0 +1,81 @@
+"""Mixture-of-Experts FFN: grouped top-k capacity dispatch, expert-parallel.
+
+Mesh-TF-style dispatch: tokens are split into groups of ``moe_group``; each
+group routes its tokens to per-group expert capacity ``C = ceil(g*k*cf/E)``
+via one-hot dispatch/combine einsums — fully static shapes (the cuMBE
+static-memory discipline applied to MoE; see DESIGN.md §4), so the 132B
+dbrx config lowers and compiles for the production mesh without dynamic
+shapes. Experts are sharded over the ``model`` axis (EP); GSPMD inserts the
+token all-to-alls at the dispatch/undispatch einsums. Tokens overflowing
+capacity are dropped (weight renormalized) — the standard trade.
+
+The router runs in fp32; an auxiliary load-balance loss (Switch-style) is
+returned for the trainer. Workload balance across experts is the same
+max-over-workers makespan the paper's Eq. 1 formalizes for thread blocks —
+`aux_loss` is the knob that keeps the expert "workers" even.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.axes import constrain
+
+
+def moe_ffn(x: jax.Array, wg: jax.Array, w1: jax.Array, w3: jax.Array,
+            w2: jax.Array, *, top_k: int, capacity_factor: float,
+            group: int) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). w g(d,E), w1/w3 (E,d,f), w2 (E,f,d).
+    Returns (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E = wg.shape[1]
+    T = B * S
+    g = min(group, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    k = top_k
+    C = int((g * k * capacity_factor) / E + 1)
+    C = min(C, g * k)
+
+    xg = x.reshape(G, g, d)
+    xg = constrain(xg, "act_group", None, "act_embed")
+
+    logits = jnp.einsum("Gtd,de->Gte", xg.astype(jnp.float32),
+                        wg.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, g, E)
+    gate_v, gate_i = jax.lax.top_k(probs, k)              # (G, g, k)
+    gate_v = gate_v / jnp.maximum(
+        jnp.sum(gate_v, axis=-1, keepdims=True), 1e-9)
+
+    # flatten (token, slot) and compute expert-queue positions
+    oh = jax.nn.one_hot(gate_i.reshape(G, g * k), E,
+                        dtype=jnp.int32)                  # (G, gk, E)
+    pos = jnp.cumsum(oh, axis=1) - oh                     # (G, gk, E)
+    keep = (pos < C) & (oh > 0)
+    posC = jax.nn.one_hot(pos, C, dtype=jnp.bool_)        # (G, gk, E, C)
+    disp = (keep[..., None] & posC)                       # (G, gk, E, C)
+
+    x_slot = jnp.repeat(xg, k, axis=1)                    # (G, gk, d)
+    xd = jnp.einsum("GtEC,Gtd->GECd",
+                    disp.astype(x.dtype), x_slot)         # (G, E, C, d)
+    xd = constrain(xd, "act_group", "act_expert", None, "act_embed")
+
+    h = jnp.einsum("GECd,Edf->GECf", xd, w1.astype(x.dtype))
+    gate = jnp.einsum("GECd,Edf->GECf", xd, w3.astype(x.dtype))
+    h = jax.nn.silu(gate) * h
+    h = constrain(h, "act_group", "act_expert", None, "act_ff")
+    y = jnp.einsum("GECf,Efd->GECd", h, w2.astype(x.dtype))
+
+    comb = disp.astype(jnp.float32) * \
+        gate_v.reshape(G, g * k)[..., None, None]
+    out = jnp.einsum("GtEC,GECd->Gtd", comb.astype(x.dtype), y)
+    # t indexes (token, slot): fold the k slots back per token
+    out = out.reshape(G, g, k, d).sum(axis=2)
+    out = out.reshape(B, S, d)
+
+    # Switch-style load-balance aux loss
+    frac = jnp.mean(oh.reshape(G, g, k, E).sum(2).astype(jnp.float32),
+                    axis=(0, 1))                           # tokens/expert
+    imp = jnp.mean(probs, axis=(0, 1))                     # router mass
+    aux = E * jnp.sum(frac * imp) / k
+    return out, aux

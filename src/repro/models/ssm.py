@@ -1,0 +1,159 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train path + O(1)
+recurrent decode.
+
+Implements the SSD algorithm: within a chunk the recurrence is unrolled as
+a (masked, decay-weighted) attention-like matmul; across chunks a
+``lax.scan`` carries the (H, N, P) state. Training cost is O(S * (Lc + N))
+per head — sub-quadratic, which is what makes the 500k-token cells
+runnable for the hybrid/SSM architectures.
+
+Shapes: B batch, S seq, H ssm heads, P ssm head dim, N state dim.
+B/C projections are shared across heads (n_groups = 1, as in Mamba2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.sharding.axes import constrain
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,D), w (K,D). Returns (y, new_cache)
+    where cache holds the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+K-1, D)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K))
+    new_cache = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(y), new_cache
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, B_: jax.Array, C_: jax.Array,
+                A: jax.Array, D: jax.Array, chunk: int,
+                h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan.
+    x (B,S,H,P), dt (B,S,H) pre-softplus, B_/C_ (B,S,N), A (H,) log,
+    D (H,). Returns (y (B,S,H,P), final state (B,H,N,P))."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Lc = min(chunk, S)
+    assert S % Lc == 0
+    nc = S // Lc
+    delta = jax.nn.softplus(dt.astype(jnp.float32))       # (B,S,H)
+    a_log = delta * (-jnp.exp(A.astype(jnp.float32)))     # log decay <= 0
+    xb = x.astype(jnp.float32) * delta[..., None]         # dt-scaled input
+
+    # chunked views
+    ac = a_log.reshape(Bb, nc, Lc, H)
+    la = jnp.cumsum(ac, axis=2)                           # within-chunk csum
+    la_last = la[:, :, -1:, :]                            # (B,nc,1,H)
+    xc = xb.reshape(Bb, nc, Lc, H, P)
+    Bc = B_.reshape(Bb, nc, Lc, N).astype(jnp.float32)
+    Cc = C_.reshape(Bb, nc, Lc, N).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within Lc) ----
+    cb = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)            # (B,nc,Lc,Lc)
+    dec = la[:, :, :, None, :] - la[:, :, None, :, :]     # (B,nc,Lt,Ls,H)
+    mask = (jnp.arange(Lc)[:, None] >= jnp.arange(Lc)[None, :])
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(dec), 0.0)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", cb, dec, xc)
+
+    # ---- chunk summaries: state contributed by each chunk ----
+    w_in = jnp.exp(la_last - la)                          # (B,nc,Lc,H)
+    h_loc = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bc, w_in, xc)
+    a_tot = jnp.exp(la_last[:, :, 0, :])                  # (B,nc,H)
+
+    # ---- inter-chunk scan ----
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+
+    def scan_fn(h, inp):
+        hl, at = inp                                      # (B,H,N,P),(B,H)
+        h_out = h                                         # state BEFORE chunk
+        h_new = h * at[..., None, None] + hl
+        return h_new, h_out
+
+    h_final, h_before = jax.lax.scan(
+        scan_fn, h0,
+        (h_loc.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)          # (B,nc,H,N,P)
+
+    w_out = jnp.exp(la)                                   # (B,nc,Lc,H)
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp", Cc, w_out, h_before)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :,
+                                                          None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, B_: jax.Array,
+                    C_: jax.Array, A: jax.Array, D: jax.Array,
+                    h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One-token recurrence. x (B,H,P), dt (B,H), B_/C_ (B,N),
+    h (B,H,N,P)."""
+    delta = jax.nn.softplus(dt.astype(jnp.float32))
+    decay = jnp.exp(delta * (-jnp.exp(A.astype(jnp.float32))))  # (B,H)
+    xb = x.astype(jnp.float32) * delta[..., None]
+    h_new = h * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", B_.astype(jnp.float32), xb)
+    y = jnp.einsum("bn,bhnp->bhp", C_.astype(jnp.float32), h_new)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_block(x: jax.Array, p: dict, cfg, *,
+                 state: tuple | None = None, decode: bool = False):
+    """p keys: in_proj (d, 2*di + 2N + H), conv_w (K, di+2N), a_log (H,),
+    d_skip (H,), dt_bias (H,), norm (di,), out_proj (di, d).
+
+    Returns (y, new_state); state = (ssm_h (B,H,N,P), conv_cache).
+    """
+    d = x.shape[-1]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("...d,dk->...k", x, p["in_proj"].astype(x.dtype))
+    z, xin, BC, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * N], -1)
+    conv_in = jnp.concatenate([xin, BC], axis=-1)         # (..., di+2N)
+
+    if decode:
+        ssm_h, conv_cache = state
+        conv_out, conv_cache = _causal_conv(
+            conv_in[:, None], p["conv_w"].astype(x.dtype), conv_cache)
+        conv_out = conv_out[:, 0]
+        xs, B_, C_ = jnp.split(conv_out, [di, di + N], axis=-1)
+        xh = xs.reshape(-1, H, P)
+        y, ssm_h = ssd_decode_step(
+            xh, dt + p["dt_bias"].astype(x.dtype), B_, C_,
+            p["a_log"], p["d_skip"], ssm_h)
+        y = y.reshape(-1, di)
+        z_ = z
+    else:
+        B0 = x.shape[0]
+        conv_out, conv_cache = _causal_conv(
+            conv_in, p["conv_w"].astype(x.dtype),
+            None if state is None else state[1])
+        xs, B_, C_ = jnp.split(conv_out, [di, di + N], axis=-1)
+        xh = xs.reshape(B0, -1, H, P)
+        xh = constrain(xh, "act_batch", None, "act_inner", None)
+        y, ssm_h = ssd_chunked(
+            xh, dt + p["dt_bias"].astype(x.dtype), B_, C_,
+            p["a_log"], p["d_skip"], cfg.ssd_chunk,
+            None if state is None else state[0])
+        y = y.reshape(B0, -1, di)
+        z_ = z
+
+    y = y * jax.nn.silu(z_)
+    y = rms_norm(y, p["norm_inner"].astype(jnp.float32), cfg.norm_eps)
+    out = jnp.einsum("...k,kd->...d", y, p["out_proj"].astype(x.dtype))
+    return out, (ssm_h, conv_cache)

@@ -1,0 +1,232 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan), after Beck et al. 2024.
+
+mLSTM is linear attention with exponential gating: matrix memory
+``C_t = f_t C_{t-1} + i_t v_t k_t^T`` and normalizer ``n_t = f_t n_{t-1} +
+i_t k_t``; read-out ``h = (C q) / max(|n.q|, 1)``. We train it chunkwise
+(same skeleton as the SSD scan in ssm.py: intra-chunk masked matmul +
+inter-chunk state scan), stabilized in log space with a running max
+(the paper's m-state) — so the 500k decode cell is O(1)-state for this
+family too. sLSTM keeps the classic sequential recurrence with exponential
+gating + stabilizer; it is a ``lax.scan`` over time.
+
+Documented simplifications vs. the reference implementation (DESIGN.md §5):
+single projection per q/k/v (no per-head causal conv on q/k — we apply one
+depthwise conv on the shared path), GroupNorm -> RMSNorm per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.ssm import _causal_conv
+from repro.sharding.axes import constrain
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int, state=None):
+    """q,k,v: (B,S,H,P); i_pre,f_pre: (B,S,H) pre-activation gates.
+    Returns (h (B,S,H,P), (C (B,H,P,P), n (B,H,P), m (B,H))).
+
+    Log-space stabilized chunkwise form. P = head dim (matrix memory PxP).
+    """
+    B, S, H, P = q.shape
+    Lc = min(chunk, S)
+    assert S % Lc == 0
+    nc = S // Lc
+    scale = 1.0 / (P ** 0.5)
+
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))   # (B,S,H) <= 0
+    logi = i_pre.astype(jnp.float32)
+
+    lf = logf.reshape(B, nc, Lc, H)
+    li = logi.reshape(B, nc, Lc, H)
+    F = jnp.cumsum(lf, axis=2)                             # within-chunk
+    F_last = F[:, :, -1, :]                                # (B,nc,H)
+    qc = (q.astype(jnp.float32) * scale).reshape(B, nc, Lc, H, P)
+    kc = k.astype(jnp.float32).reshape(B, nc, Lc, H, P)
+    vc = v.astype(jnp.float32).reshape(B, nc, Lc, H, P)
+
+    # per-position source weight (log): contribute i * f-decay to chunk end
+    src = F_last[:, :, None, :] - F + li                   # (B,nc,Lc,H)
+    m_loc = jnp.max(src, axis=2)                           # (B,nc,H)
+
+    # ---- inter-chunk scan over (C, n, m) ----
+    if state is None:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def scan_fn(carry, inp):
+        C, n, m = carry
+        kcur, vcur, src_c, mloc_c, flast_c = inp
+        m_new = jnp.maximum(flast_c + m, mloc_c)           # (B,H)
+        w_old = jnp.exp(flast_c + m - m_new)
+        w_src = jnp.exp(src_c - m_new[:, None, :])         # (B,Lc,H)
+        C_new = C * w_old[..., None, None] + jnp.einsum(
+            "blhp,blhq->bhpq", kcur * w_src[..., None], vcur)
+        n_new = n * w_old[..., None] + jnp.einsum(
+            "blhp,blh->bhp", kcur, w_src)
+        return (C_new, n_new, m_new), (C, n, m)
+
+    (Cf, nf, mf), (C_pre, n_pre, m_pre) = jax.lax.scan(
+        scan_fn, (C0, n0, m0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         src.transpose(1, 0, 2, 3), m_loc.transpose(1, 0, 2),
+         F_last.transpose(1, 0, 2)))
+    C_pre = C_pre.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,P)
+    n_pre = n_pre.transpose(1, 0, 2, 3)                    # (B,nc,H,P)
+    m_pre = m_pre.transpose(1, 0, 2)                       # (B,nc,H)
+
+    # ---- intra-chunk attention-like term ----
+    # pairwise log weight: F_t - F_s + li_s  (s <= t)
+    lw = F[:, :, :, None, :] - F[:, :, None, :, :] + li[:, :, None, :, :]
+    mask = jnp.arange(Lc)[:, None] >= jnp.arange(Lc)[None, :]
+    lw = jnp.where(mask[None, None, :, :, None], lw, -1e30)  # (B,nc,t,s,H)
+    # read-time stabilizer: max over both intra sources and carried state
+    m_read_intra = jnp.max(lw, axis=3)                     # (B,nc,Lc,H)
+    m_carry = F + m_pre[:, :, None, :]                     # (B,nc,Lc,H)
+    m_read = jnp.maximum(m_read_intra, m_carry)
+
+    w_intra = jnp.exp(lw - m_read[:, :, :, None, :])
+    qk = jnp.einsum("bclhp,bcshp->bclsh", qc, kc)
+    h_intra = jnp.einsum("bclsh,bclsh,bcshp->bclhp", qk, w_intra, vc)
+    d_intra = jnp.einsum("bclsh,bclsh->bclh", qk, w_intra)
+
+    w_carry = jnp.exp(m_carry - m_read)                    # (B,nc,Lc,H)
+    h_inter = jnp.einsum("bclhp,bchpq,bclh->bclhq", qc, C_pre, w_carry)
+    d_inter = jnp.einsum("bclhp,bchp,bclh->bclh", qc, n_pre, w_carry)
+
+    denom = jnp.maximum(jnp.abs(d_intra + d_inter),
+                        jnp.exp(-m_read)) + 1e-9
+    h = (h_intra + h_inter) / denom[..., None]
+    return h.reshape(B, S, H, P).astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_decode_step(q, k, v, i_pre, f_pre, state):
+    """One token. q,k,v: (B,H,P); gates (B,H)."""
+    C, n, m = state
+    P = q.shape[-1]
+    scale = 1.0 / (P ** 0.5)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    w_old = jnp.exp(logf + m - m_new)
+    w_in = jnp.exp(logi - m_new)
+    kf = k.astype(jnp.float32) * w_in[..., None]
+    C_new = C * w_old[..., None, None] + jnp.einsum(
+        "bhp,bhq->bhpq", kf, v.astype(jnp.float32))
+    n_new = n * w_old[..., None] + kf
+    qs = q.astype(jnp.float32) * scale
+    h = jnp.einsum("bhp,bhpq->bhq", qs, C_new)
+    d = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qs, n_new)),
+                    jnp.exp(-m_new)) + 1e-9
+    return (h / d[..., None]).astype(q.dtype), (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_block(x, p, cfg, *, state=None, decode=False):
+    """p keys: up_proj (d, 2*di), conv_w (K, di), wq/wk/wv (H, P, P)
+    block-diagonal per head, wi/wf (di, H), norm (di,), down_proj (di, d).
+    """
+    d = x.shape[-1]
+    di = cfg.mlstm_proj * cfg.d_model
+    H = cfg.n_heads
+    P = di // H
+    up = jnp.einsum("...d,dk->...k", x, p["up_proj"].astype(x.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    if decode:
+        mstate, conv_cache = state
+        c, conv_cache = _causal_conv(xm[:, None],
+                                     p["conv_w"].astype(x.dtype),
+                                     conv_cache)
+        c = c[:, 0]
+        B = x.shape[0]
+        ch = c.reshape(B, H, P)
+        xh = xm.reshape(B, H, P)
+        q = jnp.einsum("...hp,hpj->...hj", ch, p["wq"].astype(x.dtype))
+        k = jnp.einsum("...hp,hpj->...hj", ch, p["wk"].astype(x.dtype))
+        v = jnp.einsum("...hp,hpj->...hj", xh, p["wv"].astype(x.dtype))
+        i_pre = jnp.einsum("...k,kh->...h", c, p["wi"].astype(x.dtype))
+        f_pre = jnp.einsum("...k,kh->...h", c, p["wf"].astype(x.dtype))
+        h, mstate = mlstm_decode_step(q, k, v, i_pre, f_pre, mstate)
+        h = h.reshape(B, di)
+    else:
+        B, S = x.shape[0], x.shape[1]
+        c, conv_cache = _causal_conv(
+            xm, p["conv_w"].astype(x.dtype),
+            None if state is None else state[1])
+        ch = c.reshape(B, S, H, P)
+        xh = xm.reshape(B, S, H, P)
+        q = jnp.einsum("...hp,hpj->...hj", ch, p["wq"].astype(x.dtype))
+        k = jnp.einsum("...hp,hpj->...hj", ch, p["wk"].astype(x.dtype))
+        v = jnp.einsum("...hp,hpj->...hj", xh, p["wv"].astype(x.dtype))
+        i_pre = jnp.einsum("...k,kh->...h", c, p["wi"].astype(x.dtype))
+        f_pre = jnp.einsum("...k,kh->...h", c, p["wf"].astype(x.dtype))
+        q = constrain(q, "act_batch", "act_seq", None, None)
+        h, mstate = mlstm_chunked(
+            q, k, v, i_pre, f_pre, cfg.ssd_chunk,
+            None if state is None else state[0])
+        h = h.reshape(B, S, di)
+    h = rms_norm(h, p["norm_inner"].astype(jnp.float32), cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("...k,kd->...d", h, p["down_proj"].astype(x.dtype))
+    return out, (mstate, conv_cache)
+
+
+def slstm_block(x, p, cfg, *, state=None, decode=False):
+    """p keys: w_gates (d, H*dh*4), r_gates (H, dh, dh*4), norm (d,),
+    up (d, ff), down (ff, d) with ff = ceil(4*d/3) rounded to 128.
+
+    Heads H = cfg.n_heads; dh = d / H. The recurrent matrix R is per-head
+    block-diagonal (the paper's structure). Train path is a sequential
+    ``lax.scan`` over time (sLSTM is not parallelizable in time); decode is
+    a single step of the same cell.
+    """
+    d = p["w_gates"].shape[0]
+    H = cfg.n_heads
+    dh = d // H
+    B = x.shape[0]
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = (z, z + 1e-6, z - 1e30, z)
+
+    wg = p["w_gates"]
+    rg = p["r_gates"]
+
+    def step(carry, xt):                     # xt: (B, d)
+        c, n, m, h = carry
+        gx = jnp.einsum("bd,dk->bk", xt, wg.astype(xt.dtype))
+        gr = jnp.einsum("bhe,hek->bhk", h.astype(xt.dtype),
+                        rg.astype(xt.dtype))
+        g = gx.reshape(B, H, dh, 4) + gr.reshape(B, H, dh, 4)
+        gi, gf, gz, go = [g[..., j] for j in range(4)]
+        log_f = jax.nn.log_sigmoid(gf.astype(jnp.float32))
+        log_i = gi.astype(jnp.float32)
+        m_new = jnp.maximum(log_f + m, log_i)
+        wi = jnp.exp(log_i - m_new)
+        wf = jnp.exp(log_f + m - m_new)
+        c_new = wf * c + wi * jnp.tanh(gz.astype(jnp.float32))
+        n_new = wf * n + wi
+        h_new = jax.nn.sigmoid(go.astype(jnp.float32)) * \
+            c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if decode:
+        state, h = step(state, x)
+        y = h.reshape(B, d).astype(x.dtype)
+    else:
+        S = x.shape[1]
+        state, hs = jax.lax.scan(step, state, x.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+
+    y = rms_norm(y, p["ln"].astype(jnp.float32), cfg.norm_eps)
+    ff = jnp.einsum("...d,df->...f", y, p["up"].astype(x.dtype))
+    ff = jax.nn.gelu(ff)
+    out = jnp.einsum("...f,fd->...d", ff, p["down"].astype(x.dtype))
+    return out, state

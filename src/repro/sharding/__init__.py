@@ -1,0 +1,4 @@
+from repro.sharding.axes import (  # noqa: F401
+    Rules, use_rules, constrain, spec_for, current_rules,
+    train_rules, serve_rules, named_sharding,
+)

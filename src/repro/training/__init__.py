@@ -1,0 +1,4 @@
+from repro.training.optimizer import adamw, apply_updates, cosine_schedule  # noqa: F401
+from repro.training.step import (  # noqa: F401
+    loss_fn, make_eval_step, make_prefill_step, make_serve_step,
+    make_train_step)

@@ -1,0 +1,71 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At multi-pod scale the slowest collective is the gradient all-reduce over
+the ``pod`` axis (the FSDP shards are replicated across pods; cross-pod ICI
+is the thinnest pipe). We cut its bytes 4x by quantizing each gradient
+leaf to int8 with a per-leaf fp32 scale before the ``psum`` and carrying
+the quantization error forward into the next step's gradient (error
+feedback / EF-SGD, which keeps SGD-style convergence guarantees).
+
+``quantized_psum`` is written against an *explicit* collective axis, so it
+runs inside ``shard_map`` (the training step exposes the pod axis manually;
+data/model stay GSPMD-auto).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp -> (int8 codes, fp32 scale). Symmetric per-tensor quantization."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _dequantize(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def quantized_psum(grads: Any, axis_name: str, err: Any
+                   ) -> tuple[Any, Any]:
+    """All-reduce ``grads`` over ``axis_name`` in int8 with error feedback.
+
+    err is the per-leaf residual pytree from the previous step (same shapes
+    as grads, fp32). Returns (reduced fp32 grads averaged over the axis,
+    new residuals).
+
+    Wire format per leaf: the collective that actually crosses pod links is
+    an **all-gather of the int8 codes** (+ one fp32 scale each) followed by
+    a local dequantize-and-mean. For p pods that is (p-1) x 1 byte/elem of
+    link traffic vs (p-1)/p x 4 x 2 for a ring all-reduce in fp32 — ~4x
+    fewer bytes, and exact (no second quantization on the reduced value).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def leaf(g, e):
+        g = g.astype(jnp.float32) + e
+        codes, scale = _quantize(g)
+        new_err = g - _dequantize(codes, scale)
+        all_codes = jax.lax.all_gather(codes, axis_name)     # int8 on wire
+        all_scales = jax.lax.all_gather(scale, axis_name)    # (p,) fp32
+        scales = all_scales.reshape((-1,) + (1,) * codes.ndim)
+        reduced = jnp.sum(all_codes.astype(jnp.float32) * scales,
+                          axis=0) / n
+        return reduced, new_err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    red = jax.tree.unflatten(tdef, [r for r, _ in out])
+    new_err = jax.tree.unflatten(tdef, [e for _, e in out])
+    return red, new_err
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,142 @@
+"""Train / eval step builders: loss, grad accumulation, mixed precision.
+
+``make_train_step(cfg, opt, ...)`` returns a pure function
+
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+
+* **mixed precision** — master params and optimizer moments are fp32; the
+  model casts weights to ``cfg.dtype`` (bf16) at use. Loss/softmax in fp32.
+* **gradient accumulation** — ``accum`` microbatches via ``lax.scan`` over a
+  reshaped batch; grads are averaged in fp32. With accum=1 the scan
+  disappears (direct call) so the dry-run HLO stays clean.
+* **MoE aux loss** — router load-balance penalty folded into the loss.
+* **compression hook** — when ``compress_axis`` is set the caller runs this
+  step inside a ``shard_map`` exposing that axis; gradients cross it through
+  ``quantized_psum`` (int8 + error feedback) instead of GSPMD's implicit
+  fp32 all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import softmax_cross_entropy
+from repro.training import compress
+from repro.training.optimizer import Optimizer, apply_updates
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    """Causal-LM loss. batch: tokens (B,S[,CB]) int32, labels like tokens,
+    optional patch_emb (vlm). Labels < 0 are masked out."""
+    logits, aux = M.forward(cfg, params, batch["tokens"],
+                            patch_emb=batch.get("patch_emb"))
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # logits cover patch prefix + text; loss only on text positions
+        logits = logits[:, -labels.shape[1]:]
+    # audio: (B,S,CB) labels vs (B,S,CB,V) logits — CE averages over all
+    # codebook positions exactly like extra sequence positions.
+    loss, n_tok = softmax_cross_entropy(logits, labels)
+    total = loss + 0.01 * aux
+    return total, dict(loss=loss, aux_loss=aux, tokens=n_tok)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *, accum: int = 1,
+                    compress_axis: str | None = None) -> Callable:
+    """Build the jittable train step (see module docstring)."""
+    compute_dt = jnp.dtype(cfg.dtype)
+
+    def cast_params(params):
+        """One explicit cast of the fp32 masters to the compute dtype,
+        BEFORE the layer scan slices them: every FSDP/TP weight
+        all-gather and per-layer dynamic-slice then moves bf16, not fp32
+        (2x less collective + HBM traffic). 1-D scales stay fp32 (the
+        model upcasts them anyway)."""
+        if compute_dt == jnp.float32:
+            return params
+        return {k: (v.astype(compute_dt) if v.ndim >= 2 else v)
+                for k, v in params.items()}
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, cast_params(p), batch),
+            has_aux=True)(params)
+
+    def accumulate(params, batch):
+        if accum == 1:
+            (tot, metrics), g = grads_of(params, batch)
+            return g, metrics
+
+        def micro(b):
+            # split every leading-batch leaf into accum slices
+            return jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), b)
+
+        def body(carry, mb):
+            g_acc, m_acc = carry
+            (tot, metrics), g = grads_of(params, mb)
+            g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                 g_acc, g)
+            m_acc = dict(loss=m_acc["loss"] + metrics["loss"] / accum,
+                         aux_loss=m_acc["aux_loss"]
+                         + metrics["aux_loss"] / accum,
+                         tokens=m_acc["tokens"] + metrics["tokens"])
+            return (g_acc, m_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        m0 = dict(loss=jnp.float32(0), aux_loss=jnp.float32(0),
+                  tokens=jnp.float32(0))
+        (g, metrics), _ = jax.lax.scan(body, (zeros, m0), micro(batch))
+        g = jax.tree.map(lambda x: x / accum, g)
+        return g, metrics
+
+    def train_step(params, opt_state, batch, err=None):
+        g, metrics = accumulate(params, batch)
+        if compress_axis is not None:
+            g, err = compress.quantized_psum(g, compress_axis, err)
+        updates, opt_state, opt_metrics = opt.update(g, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, **opt_metrics)
+        if compress_axis is not None:
+            return params, opt_state, metrics, err
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = loss_fn(cfg, params, batch)
+        return metrics
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps (prefill / decode) — the dry-run lowers these for the
+# inference shapes
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = M.forward(cfg, params, batch["tokens"],
+                              patch_emb=batch.get("patch_emb"),
+                              last_only=True)
+        return logits[:, -1].argmax(-1).astype(jnp.int32)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step: new token against a seq_len KV cache."""
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = M.decode_step(cfg, params, cache, tokens, pos)
+        nxt = logits.argmax(-1).astype(jnp.int32)
+        return nxt, cache
+    return serve_step

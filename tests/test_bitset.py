@@ -1,0 +1,102 @@
+"""Unit + property tests for the packed-bitset substrate."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset
+
+
+@given(st.integers(1, 200), st.data())
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(n, data):
+    members = data.draw(st.sets(st.integers(0, n - 1)))
+    w = bitset.pack_indices(members, n)
+    assert set(bitset.unpack(w, n)) == members
+
+
+@given(st.integers(1, 150), st.data())
+@settings(max_examples=30, deadline=None)
+def test_count_and_member(n, data):
+    members = data.draw(st.sets(st.integers(0, n - 1)))
+    w = jnp.asarray(bitset.pack_indices(members, n))
+    assert int(bitset.count(w)) == len(members)
+    for i in list(members)[:5]:
+        assert bool(bitset.member(w, jnp.int32(i)))
+    for i in range(n):
+        assert bool(bitset.member(w, jnp.int32(i))) == (i in members)
+
+
+@given(st.integers(1, 130), st.data())
+@settings(max_examples=30, deadline=None)
+def test_bool_roundtrip(n, data):
+    members = data.draw(st.sets(st.integers(0, n - 1)))
+    mask = np.zeros(n, bool)
+    for i in members:
+        mask[i] = True
+    w = bitset.from_bool(jnp.asarray(mask))
+    back = bitset.to_bool(w, n)
+    assert (np.asarray(back) == mask).all()
+    assert set(bitset.unpack(np.asarray(w), n)) == members
+
+
+def test_add_remove_singleton():
+    n = 70
+    w = jnp.asarray(bitset.pack_indices([3, 40], n))
+    w = bitset.add(w, jnp.int32(69))
+    assert set(bitset.unpack(np.asarray(w), n)) == {3, 40, 69}
+    w = bitset.remove(w, jnp.int32(40))
+    assert set(bitset.unpack(np.asarray(w), n)) == {3, 69}
+    s = bitset.singleton(jnp.int32(33), bitset.n_words(n))
+    assert bitset.unpack(np.asarray(s), n) == [33]
+
+
+@given(st.integers(1, 100), st.data())
+@settings(max_examples=30, deadline=None)
+def test_first_member(n, data):
+    members = data.draw(st.sets(st.integers(0, n - 1)))
+    w = jnp.asarray(bitset.pack_indices(members, n))
+    fm = int(bitset.first_member(w))
+    assert fm == (min(members) if members else -1)
+
+
+def test_iota_mask():
+    for n in (5, 32, 33, 100):
+        for upto in (0, 1, n // 2, n):
+            w = bitset.iota_mask(n, jnp.int32(upto))
+            got = set(bitset.unpack(np.asarray(w), n))
+            assert got == set(range(upto)), (n, upto)
+
+
+@given(st.integers(1, 90), st.data())
+@settings(max_examples=20, deadline=None)
+def test_subset_equal(n, data):
+    a = data.draw(st.sets(st.integers(0, n - 1)))
+    b = data.draw(st.sets(st.integers(0, n - 1)))
+    wa = jnp.asarray(bitset.pack_indices(a, n))
+    wb = jnp.asarray(bitset.pack_indices(b, n))
+    assert bool(bitset.is_subset(wa, wb)) == a.issubset(b)
+    assert bool(bitset.equal(wa, wb)) == (a == b)
+
+
+def test_checksum_order_independent():
+    n = 64
+    a = bitset.pack_indices([1, 5, 9], n)
+    b = bitset.pack_indices([9, 5, 1], n)
+    assert int(bitset.checksum(jnp.asarray(a))) == \
+        int(bitset.checksum(jnp.asarray(b)))
+    c = bitset.pack_indices([1, 5, 10], n)
+    assert int(bitset.checksum(jnp.asarray(a))) != \
+        int(bitset.checksum(jnp.asarray(c)))
+
+
+def test_intersect_count_matches_python():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 2 ** 32, size=(17, 4), dtype=np.uint32)
+    mask = rng.integers(0, 2 ** 32, size=(4,), dtype=np.uint32)
+    got = np.asarray(bitset.intersect_count(jnp.asarray(rows),
+                                            jnp.asarray(mask)))
+    for i in range(17):
+        exp = bin(int.from_bytes((rows[i] & mask).tobytes(),
+                                 "little")).count("1")
+        assert got[i] == exp

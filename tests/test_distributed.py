@@ -1,0 +1,56 @@
+"""Distributed MBE runner on 8 simulated devices.
+
+Runs in a subprocess so XLA_FLAGS=--xla_force_host_platform_device_count=8
+doesn't leak into the rest of the test session (which must see 1 device).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.data import dataset_suite
+from repro.baselines import enumerate_mbea
+from repro.core import engine_dense as ed
+from repro.core import distributed as dd
+
+suite = dataset_suite("test")
+for name in ("community-tiny", "ucforum-like"):
+    g = suite[name]
+    oracle_n = enumerate_mbea(g, collect=False)
+    ref = ed.enumerate_dense(g)
+    mesh = jax.make_mesh((8,), ("workers",))
+    cfg = ed.make_config(g)
+    for ws in (True, False):
+        for wpd in (1, 2):
+            dist = dd.DistConfig(steps_per_round=16,
+                                 workers_per_device=wpd, work_stealing=ws)
+            init, roundf, driver = dd.make_distributed_runner(
+                g, cfg, mesh, ("workers",), dist)
+            state, log = driver()
+            tot = dd.totals(state)
+            assert tot["n_max"] == oracle_n, (name, ws, wpd, tot)
+            assert tot["cs"] == int(ref.cs), (name, ws, wpd)
+    # work stealing must not lose or duplicate tasks mid-flight either:
+    dist = dd.DistConfig(steps_per_round=3, workers_per_device=1,
+                         work_stealing=True)
+    init, roundf, driver = dd.make_distributed_runner(
+        g, cfg, mesh, ("workers",), dist)
+    state, log = driver()
+    assert dd.totals(state)["n_max"] == oracle_n
+print("DIST-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_runner_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "DIST-OK" in r.stdout
