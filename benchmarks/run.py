@@ -33,12 +33,13 @@ def _write_csv(name: str, rows: list[dict]) -> None:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["table1", "workload", "ablation", "roofline"])
+                    choices=["table1", "workload", "ablation", "roofline",
+                             "serving"])
     ap.add_argument("--scale", default="bench",
                     choices=["test", "bench", "large"])
     args = ap.parse_args()
     todo = [args.only] if args.only else [
-        "table1", "ablation", "workload", "roofline"]
+        "table1", "ablation", "workload", "roofline", "serving"]
 
     for name in todo:
         t0 = time.time()
@@ -60,6 +61,10 @@ def main() -> int:
                 continue
             rows = roofline.run()
             _write_csv("roofline", rows)
+        elif name == "serving":
+            from benchmarks import serving
+            n = 32 if args.scale != "test" else 8
+            _write_csv("serving", serving.run(n_requests=n))
         print(f"===== {name} done in {time.time() - t0:.1f}s =====")
     return 0
 

@@ -24,6 +24,15 @@ cuMBE's scheduling, mapped to SPMD TPU semantics (DESIGN.md §2):
 The round function is one jitted ``shard_map``; the host driver loops
 rounds until every worker reports done, recording per-round per-worker
 busy-step counts — the data behind the Fig.-5 load-distribution analysis.
+
+**Batch axis** — the round function is parameterized over a leading batch
+axis rather than assuming one graph: per-device execution goes through
+``engine_dense.run_batch``, whose ``ctx_batched`` flag selects between one
+replicated graph shared by all workers (this module's default, cuMBE's
+setting) and one graph *per worker lane* (the multi-graph serving layout,
+``repro.serving``).  Work stealing requires the shared-graph layout — root
+task indices are graph-local, so stealing across lanes that hold different
+graphs would be meaningless; ``make_round_fn`` enforces this.
 """
 from __future__ import annotations
 
@@ -38,6 +47,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import engine_dense as ed
 from repro.core.graph import BipartiteGraph
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions: ``jax.shard_map`` (new, ``check_vma``)
+    vs ``jax.experimental.shard_map.shard_map`` (0.4.x, ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,13 +116,25 @@ def state_specs(cfg: ed.EngineConfig, n_workers: int) -> ed.DenseState:
 
 def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
                   axis_names: tuple[str, ...],
-                  dist: DistConfig = DistConfig()):
+                  dist: DistConfig = DistConfig(),
+                  ctx_batched: bool = False):
     """The jitted work-stealing round: (ctx, state) -> state.
 
     Graph context is an explicit argument (replicated over the mesh) so the
     dry-run can lower against ShapeDtypeStructs — no 32 MiB adjacency
     constant baked into the HLO.
+
+    ``ctx_batched=False`` (default): one graph, replicated; every worker
+    lane runs its task slice of that graph and pending tasks are stolen
+    across lanes at the round barrier.  ``ctx_batched=True``: the context
+    leaves carry a leading worker axis (one graph per lane, sharded like
+    the state) — the multi-graph serving layout; work stealing must be off
+    because root-task indices are graph-local.
     """
+    if ctx_batched and dist.work_stealing:
+        raise ValueError("work stealing requires a shared graph context: "
+                         "task indices are graph-local (set "
+                         "work_stealing=False for per-lane graphs)")
     n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
     wpd = dist.workers_per_device
     n_workers = n_dev * wpd
@@ -111,8 +143,8 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
     def _per_device(ctx: ed.GraphContext,
                     s: ed.DenseState) -> ed.DenseState:
         # s leaves have leading dim = workers_per_device
-        s = jax.vmap(lambda st: ed.run(
-            ctx, cfg, st, max_steps=dist.steps_per_round))(s)
+        s = ed.run_batch(ctx, cfg, s, max_steps=dist.steps_per_round,
+                         ctx_batched=ctx_batched)
         if not dist.work_stealing:
             return s
         # ---- work-stealing barrier -----------------------------------
@@ -132,14 +164,14 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
                           tpos=jnp.zeros((wpd,), jnp.int32))
 
     spec_leaf = P(axis_names)
+    ctx_spec = spec_leaf if ctx_batched else P()
 
     @jax.jit
     def round_fn(ctx: ed.GraphContext,
                  state: ed.DenseState) -> ed.DenseState:
-        return jax.shard_map(
+        return shard_map_compat(
             _per_device, mesh=mesh,
-            in_specs=(P(), spec_leaf), out_specs=spec_leaf,
-            check_vma=False)(ctx, state)
+            in_specs=(ctx_spec, spec_leaf), out_specs=spec_leaf)(ctx, state)
 
     return round_fn, n_workers, T
 

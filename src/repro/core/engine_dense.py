@@ -23,6 +23,14 @@ exact state Algorithm 1 has when popping root i, so a single worker running
 all tasks in order is bit-identical to the serial enumeration, and disjoint
 task lists across workers partition the search space (the distributed
 runner's unit of work stealing).
+
+**Serving / batching** (see ``repro.serving``): ``run_batch`` lifts the
+engine over a leading batch axis.  The same compiled loop serves two
+layouts — many workers sharing one graph (the distributed runner's
+per-device worker batch) or one worker per graph across a *shape bucket*
+of different graphs padded to a common ``(n_u, n_v, depth)`` (the batched
+multi-graph serving layer).  Because every shape is static, the compiled
+executable is reusable for any batch of graphs in the same bucket.
 """
 from __future__ import annotations
 
@@ -381,6 +389,32 @@ def run(g: GraphContext, cfg: EngineConfig, s: DenseState,
         return (~_done(st)) & (st.steps - start < budget)
 
     return jax.lax.while_loop(cond, lambda st: step(g, cfg, st), s)
+
+
+def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
+              max_steps: int | None = None,
+              ctx_batched: bool = False) -> DenseState:
+    """``run`` over a leading batch axis of worker states.
+
+    Serving/batching model: every leaf of ``s`` carries a leading axis of
+    size B.  Two layouts share this one code path:
+
+    * ``ctx_batched=False`` — ONE graph, B workers over disjoint task lists
+      (the distributed runner's per-device worker batch, cuMBE's many
+      thread blocks per SM).
+    * ``ctx_batched=True`` — B *different* graphs padded to the same
+      ``(n_u, n_v, depth)`` bucket, one worker each (the serving layer's
+      multi-graph batch: lane b enumerates graph b end-to-end).
+
+    Under ``vmap`` the engine's ``while_loop`` runs until every lane is
+    done, masking finished lanes — one jitted call enumerates the whole
+    batch, and the compiled executable depends only on the bucket shape
+    and ``cfg``, never on the graphs themselves (the serving cache's key).
+    """
+    ax = 0 if ctx_batched else None
+    return jax.vmap(
+        lambda c, st: run(c, cfg, st, max_steps=max_steps),
+        in_axes=(ax, 0))(g, s)
 
 
 # ---------------------------------------------------------------------------

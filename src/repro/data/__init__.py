@@ -5,4 +5,5 @@ from repro.data.generators import (  # noqa: F401
     dense_small,
     dataset_suite,
     load_konect,
+    random_graph_stream,
 )

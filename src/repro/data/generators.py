@@ -134,6 +134,34 @@ def load_konect(path: str, name: str | None = None) -> BipartiteGraph:
     return g.canonical()
 
 
+def random_graph_stream(n_requests: int, seed: int = 0
+                        ) -> list[BipartiteGraph]:
+    """Mixed-size serving request stream cycling the four Table-I structure
+    families at randomized small shapes (the serving layer/benchmark's
+    synthetic traffic model)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        kind = i % 4
+        n_u = int(rng.integers(6, 26))
+        n_v = int(rng.integers(n_u, 3 * n_u + 1))
+        s = int(rng.integers(1 << 30))
+        if kind == 0:
+            g = dense_small(n_u, n_v, p=0.35, seed=s, name=f"req{i}-dense")
+        elif kind == 1:
+            g = random_bipartite(n_u, n_v, p=0.15, seed=s,
+                                 name=f"req{i}-er")
+        elif kind == 2:
+            g = powerlaw_bipartite(n_u, n_v, m_edges=3 * n_u, seed=s,
+                                   name=f"req{i}-pl")
+        else:
+            g = community_bipartite(n_u, n_v, n_comm=3, p_in=0.5,
+                                    p_out_edges=4, seed=s,
+                                    name=f"req{i}-comm")
+        out.append(g)
+    return out
+
+
 def dataset_suite(scale: str = "bench") -> dict[str, BipartiteGraph]:
     """Named synthetic datasets mirroring the paper's Table I families.
 

@@ -1,14 +1,21 @@
-"""Batched serving driver: continuous-batching decode loop.
+"""Batched serving drivers: LM continuous-batching decode loop + the
+batched multi-graph MBE front end.
 
-Real decode steps on local devices (production-mesh serving is proven by
-dryrun.py). The loop implements the serving pattern the inference shapes
-describe: a fixed-slot batch, each slot holding one request's KV state;
-finished requests leave, queued requests take their slot (continuous
-batching with static shapes — the cuMBE static-memory discipline again).
+LM mode: real decode steps on local devices (production-mesh serving is
+proven by dryrun.py). The loop implements the serving pattern the
+inference shapes describe: a fixed-slot batch, each slot holding one
+request's KV state; finished requests leave, queued requests take their
+slot (continuous batching with static shapes — the cuMBE static-memory
+discipline again).
+
+MBE mode (``--mbe``): serves a stream of bipartite graphs through
+``repro.serving`` — shape-bucketed, vmap-batched enumeration with a
+compiled-executable cache (see that package's docstrings for the model).
 
 Usage:
   python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --requests 8 --max-new 32
+  python -m repro.launch.serve --mbe --requests 32 --policy pow2
 """
 from __future__ import annotations
 
@@ -29,9 +36,33 @@ from repro.sharding import axes as A
 from repro.sharding.auto import make_rules
 
 
+def serve_mbe(args) -> dict:
+    """Serve a synthetic mixed-size MBE request stream."""
+    from repro.data.generators import random_graph_stream
+    from repro.serving import BucketPolicy, MBEServer
+    graphs = random_graph_stream(args.requests, seed=args.seed)
+    policy = BucketPolicy(mode=args.policy, max_batch=args.max_batch)
+    server = MBEServer(policy)
+    t0 = time.time()
+    results = server.serve(graphs)
+    dt = time.time() - t0
+    stats = server.stats()
+    n_max = sum(r.n_max for r in results)
+    print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}: "
+          f"{n_max} maximal bicliques, {stats['batches']} batches, "
+          f"{stats['misses']} compiles ({stats['hits']} cache hits), "
+          f"{dt:.2f}s ({args.requests / dt:.1f} graphs/s)")
+    return dict(requests=args.requests, n_max=n_max, wall_s=dt, **stats)
+
+
 def serve(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mbe", action="store_true",
+                    help="serve bipartite graphs (MBE) instead of LM decode")
+    ap.add_argument("--policy", default="pow2",
+                    choices=["pow2", "linear", "exact"])
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
@@ -41,6 +72,11 @@ def serve(argv=None) -> dict:
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.mbe:
+        return serve_mbe(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --mbe is given")
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get_config(args.arch))

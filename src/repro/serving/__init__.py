@@ -1,0 +1,20 @@
+"""Batched multi-graph MBE serving layer.
+
+The inverse batching problem to the paper's: cuMBE decomposes ONE graph
+across many workers; a production service receives MANY (small) graphs
+from many users and must amortize both accelerator occupancy and XLA
+compilation across them.  Three pieces:
+
+* ``buckets``   — shape-bucketing planner: pads requests into a small set
+  of canonical ``(n_u, n_v, depth)`` buckets (enumeration on a padded
+  graph is bit-identical; see ``buckets`` module docstring).
+* ``cache``     — compiled-executable cache keyed on
+  ``(EngineConfig, batch)`` with honest hit/miss (= compile) counters.
+* ``scheduler`` — ``MBEServer``: request queue, per-bucket batch assembly
+  (one graph per vmap lane via ``engine_dense.run_batch``), result demux.
+"""
+from repro.serving.buckets import (BucketPolicy, BucketSpec,  # noqa: F401
+                                   plan_batch_size, plan_bucket)
+from repro.serving.cache import ExecutableCache                # noqa: F401
+from repro.serving.scheduler import (MBEResult, MBEServer,     # noqa: F401
+                                     Request)

@@ -1,0 +1,175 @@
+"""Host-side request queue, batch assembly, and result demux.
+
+``MBEServer`` is the serving front end: users ``submit`` bipartite graphs
+(one request = one whole graph to enumerate), the scheduler groups pending
+requests by their shape bucket, pads each group into fixed-lane batches,
+runs one cached executable per batch (``engine_dense.run_batch`` with a
+per-lane graph context), and demuxes the per-lane engine state back into
+per-request results.
+
+Design points:
+
+* **One graph per lane.**  Lane b of a batch holds graph b's padded
+  context and a worker state whose task list is *all* of graph b's root
+  tasks — the engine's task-driven decomposition is reused unchanged, just
+  vmapped.  Under ``vmap`` the DFS ``while_loop`` runs until the slowest
+  lane finishes (finished lanes are masked); bucketing by shape keeps
+  lane runtimes comparable.
+* **Static everything.**  Batch lane count comes from
+  ``plan_batch_size`` (optionally padded to powers of two), so a month of
+  traffic exercises a handful of executables.  Dummy lanes carry an empty
+  task list (``n_tasks=0``) and an all-zero context: they are born done
+  and cost one loop-condition evaluation.
+* **FIFO within bucket.**  Requests flush in submit order within their
+  bucket; cross-bucket order is bucket-by-bucket (an async admission
+  policy is a ROADMAP item).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine_dense as ed
+from repro.core.graph import BipartiteGraph
+from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_batch_size,
+                                   plan_bucket)
+from repro.serving.cache import ExecutableCache
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    graph: BipartiteGraph       # canonical orientation (|U| <= |V|)
+    bucket: BucketSpec
+    swapped: bool               # True if submit() transposed the graph
+
+
+@dataclasses.dataclass(frozen=True)
+class MBEResult:
+    rid: int
+    name: str
+    n_max: int                  # maximal bicliques found
+    cs: int                     # enumeration fingerprint (order-independent,
+    #                             computed in the canonical orientation)
+    nodes: int                  # search-tree nodes visited
+    steps: int                  # engine loop iterations
+    latency_s: float            # service time of this request's batch
+    bicliques: list | None      # decoded (L ⊆ V, R ⊆ U) tuples when
+    #                             collecting, in the orientation the graph
+    #                             was SUBMITTED in (demux un-swaps if the
+    #                             server canonicalized)
+
+
+def _lane_state(cfg: ed.EngineConfig, n_tasks: int) -> ed.DenseState:
+    """Worker state owning root tasks [0, n_tasks), task queue padded to the
+    bucket-wide capacity ``cfg.n_u`` so every lane has identical shapes."""
+    s = ed.init_state(cfg, np.arange(n_tasks, dtype=np.int32))
+    pad = np.full(cfg.n_u, -1, np.int32)
+    pad[:n_tasks] = np.arange(n_tasks, dtype=np.int32)
+    return s._replace(tasks=jnp.asarray(pad))
+
+
+class MBEServer:
+    """Batched multi-graph MBE serving."""
+
+    def __init__(self, policy: BucketPolicy | None = None,
+                 collect_cap: int = 1, collect: bool = False,
+                 order_mode: str = "deg", impl: str = "jnp"):
+        self.policy = policy or BucketPolicy()
+        self.collect_cap = collect_cap
+        self.collect = collect
+        self.order_mode = order_mode
+        self.impl = impl
+        self.cache = ExecutableCache()
+        self._pending: list[Request] = []
+        self._next_rid = 0
+        self._n_batches = 0
+        self._n_lanes = 0
+        self._n_pad_lanes = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, g: BipartiteGraph) -> int:
+        """Enqueue one graph; returns the request id used to demux.
+
+        The graph is canonicalized (|U| <= |V|) internally for the engine;
+        decoded bicliques are swapped back to the submitted orientation at
+        demux, so callers always get (L ⊆ their V, R ⊆ their U).
+        """
+        gc = g.canonical()
+        assert gc.n_u >= 1, "empty graphs are not servable"
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(
+            Request(rid, gc, plan_bucket(gc, self.policy),
+                    swapped=g.n_u > g.n_v))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _engine_config(self, bucket: BucketSpec) -> ed.EngineConfig:
+        return bucket.engine_config(collect_cap=self.collect_cap,
+                                    order_mode=self.order_mode,
+                                    impl=self.impl)
+
+    def _run_chunk(self, cfg: ed.EngineConfig,
+                   chunk: list[Request]) -> dict[int, MBEResult]:
+        B = plan_batch_size(len(chunk), self.policy)
+        t0 = time.time()
+        ctxs = [ed.make_context(r.graph, cfg) for r in chunk]
+        states = [_lane_state(cfg, r.graph.n_u) for r in chunk]
+        while len(states) < B:                       # dummy (padding) lanes
+            ctxs.append(jax.tree.map(jnp.zeros_like, ctxs[0]))
+            states.append(_lane_state(cfg, 0))
+        ctx = jax.tree.map(lambda *xs: jnp.stack(xs), *ctxs)
+        state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        out = self.cache.get(cfg, B)(ctx, state)
+        done = np.asarray((out.lvl < 0) & (out.tpos >= out.n_tasks))
+        assert done.all(), "serving batch exhausted its step budget"
+        self._n_batches += 1
+        self._n_lanes += B
+        self._n_pad_lanes += B - len(chunk)
+        results = {}
+        latency = time.time() - t0
+        for i, r in enumerate(chunk):
+            lane = jax.tree.map(lambda x, i=i: x[i], out)
+            bic = None
+            if self.collect:
+                bic = ed.collected_bicliques(cfg, lane, r.graph.n_u,
+                                             r.graph.n_v)
+                if r.swapped:   # back to the submitted orientation
+                    bic = [(R, L) for L, R in bic]
+            results[r.rid] = MBEResult(
+                rid=r.rid, name=r.graph.name, n_max=int(lane.n_max),
+                cs=int(lane.cs), nodes=int(lane.nodes),
+                steps=int(lane.steps), latency_s=latency, bicliques=bic)
+        return results
+
+    def flush(self) -> dict[int, MBEResult]:
+        """Serve everything pending; returns {rid: result}."""
+        by_bucket: dict[BucketSpec, list[Request]] = {}
+        for r in self._pending:
+            by_bucket.setdefault(r.bucket, []).append(r)
+        self._pending = []
+        results: dict[int, MBEResult] = {}
+        for bucket in sorted(by_bucket, key=lambda b: (b.n_u, b.n_v)):
+            group = by_bucket[bucket]
+            cfg = self._engine_config(bucket)
+            mb = self.policy.max_batch
+            for i in range(0, len(group), mb):
+                results.update(self._run_chunk(cfg, group[i:i + mb]))
+        return results
+
+    def serve(self, graphs: list[BipartiteGraph]) -> list[MBEResult]:
+        """Submit a whole stream and flush; results in submit order."""
+        rids = [self.submit(g) for g in graphs]
+        res = self.flush()
+        return [res[rid] for rid in rids]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return dict(batches=self._n_batches, lanes=self._n_lanes,
+                    pad_lanes=self._n_pad_lanes,
+                    pending=len(self._pending), **self.cache.stats())

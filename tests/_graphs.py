@@ -1,0 +1,15 @@
+"""Shared random-graph helper for the test modules (single definition of
+the seeded Erdos–Renyi generator the property tests draw from)."""
+import numpy as np
+
+from repro.core.graph import BipartiteGraph
+
+
+def random_graph(n_u, n_v, density, seed, canonical=False):
+    rng = np.random.default_rng(seed)
+    mask = rng.random((n_u, n_v)) < density
+    edges = list(zip(*np.nonzero(mask)))
+    if not edges:
+        edges = [(0, 0)]
+    g = BipartiteGraph.from_edges(n_u, n_v, edges)
+    return g.canonical() if canonical else g

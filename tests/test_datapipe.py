@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.datapipe import (DataConfig, MemmapSource, SyntheticSource,
                             make_pipeline)

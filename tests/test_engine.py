@@ -7,7 +7,8 @@ both engines, plus the Pallas-kernel integration path.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _graphs import random_graph as _random_graph
+from _hyp import given, settings, st
 
 from repro.core import bitset
 from repro.core.graph import BipartiteGraph
@@ -15,15 +16,6 @@ from repro.core import engine_dense as ed
 from repro.core import engine_compact as ec
 from repro.data import dataset_suite
 from repro.baselines import enumerate_mbea, bicliques_to_key_set
-
-
-def _random_graph(n_u, n_v, density, seed):
-    rng = np.random.default_rng(seed)
-    mask = rng.random((n_u, n_v)) < density
-    edges = list(zip(*np.nonzero(mask)))
-    if not edges:
-        edges = [(0, 0)]
-    return BipartiteGraph.from_edges(n_u, n_v, edges)
 
 
 def _oracle_cs(g, oracle):

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.flash_attention.ops import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref

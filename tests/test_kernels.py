@@ -6,7 +6,7 @@ the same pallas_call lowers natively on TPU.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.kernels.intersect_count import intersect_count, intersect_count_ref
 from repro.kernels.intersect_count.ref import intersect_count_gathered_ref

@@ -9,20 +9,12 @@ decomposition reproduces the same count.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _graphs import random_graph as _random_graph
+from _hyp import given, settings, st
 
 from repro.core.graph import BipartiteGraph, validate
 from repro.baselines import (enumerate_bruteforce, enumerate_mbea,
                              enumerate_parallel, bicliques_to_key_set)
-
-
-def _random_graph(n_u, n_v, density, seed):
-    rng = np.random.default_rng(seed)
-    mask = rng.random((n_u, n_v)) < density
-    edges = list(zip(*np.nonzero(mask)))
-    if not edges:
-        edges = [(0, 0)]
-    return BipartiteGraph.from_edges(n_u, n_v, edges)
 
 
 @given(st.integers(1, 9), st.integers(1, 12),

@@ -1,0 +1,170 @@
+"""Batched multi-graph serving layer: planner, cache, scheduler.
+
+* bucket-planner padding correctness: buckets always contain the graph,
+  depth covers the DFS, exact mode is the identity, and enumeration on
+  the padded bucket shape is bit-identical to the exact shape;
+* executable-cache hit/miss accounting;
+* batched-vs-single-graph result equality on a mixed-size request stream
+  (counts, fingerprints, and decoded biclique sets).
+"""
+import functools
+
+import numpy as np
+import pytest
+from _graphs import random_graph
+from _hyp import given, settings, st
+
+from repro.baselines import (bicliques_to_key_set, enumerate_bruteforce,
+                             enumerate_mbea)
+from repro.core import engine_dense as ed
+from repro.data import dataset_suite
+from repro.serving import (BucketPolicy, ExecutableCache, MBEServer,
+                           plan_batch_size, plan_bucket)
+
+_random_graph = functools.partial(random_graph, canonical=True)
+
+
+# ---------------------------------------------------------------------------
+# bucket planner
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 40), st.integers(1, 80),
+       st.sampled_from(["pow2", "linear", "exact"]), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_bucket_contains_graph(n_u, n_v, mode, seed):
+    g = _random_graph(n_u, n_v, 0.3, seed)
+    pol = BucketPolicy(mode=mode)
+    b = plan_bucket(g, pol)
+    assert b.n_u >= g.n_u and b.n_v >= g.n_v
+    assert b.depth >= b.n_u + 2          # DFS stack always covered
+    if mode == "exact":
+        assert (b.n_u, b.n_v) == (g.n_u, g.n_v)
+    # planning is idempotent: a bucket-sized graph maps to itself
+    if mode != "exact":
+        gb = _random_graph(b.n_u, b.n_v, 0.3, seed + 1)
+        b2 = plan_bucket(gb, pol)
+        assert (b2.n_u, b2.n_v) == (b.n_u, b.n_v)
+
+
+def test_bucket_collapses_shapes():
+    """The point of bucketing: nearby shapes share one bucket."""
+    pol = BucketPolicy(mode="pow2")
+    shapes = {(9, 20), (12, 17), (16, 30), (10, 25)}
+    buckets = {plan_bucket(_random_graph(u, v, 0.3, 0), pol)
+               for u, v in shapes}
+    assert len(buckets) == 1
+    assert buckets.pop() == plan_bucket(
+        _random_graph(16, 32, 0.3, 0), pol)
+
+
+def test_padded_bucket_enumeration_identical():
+    """Engine run at the bucket shape == engine run at the exact shape."""
+    g = dataset_suite("test")["ucforum-like"]
+    exact = ed.enumerate_dense(g)
+    bucket = plan_bucket(g, BucketPolicy(mode="pow2"))
+    cfg = bucket.engine_config(collect_cap=1)
+    ctx = ed.make_context(g, cfg)
+    s0 = ed.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+    import jax
+    out = jax.jit(lambda s: ed.run(ctx, cfg, s))(s0)
+    assert int(out.n_max) == int(exact.n_max)
+    assert int(out.cs) == int(exact.cs)
+
+
+def test_plan_batch_size():
+    pol = BucketPolicy(max_batch=8, pad_batch=True)
+    assert plan_batch_size(1, pol) == 1
+    assert plan_batch_size(3, pol) == 4
+    assert plan_batch_size(8, pol) == 8
+    assert plan_batch_size(100, pol) == 8
+    nopad = BucketPolicy(max_batch=8, pad_batch=False)
+    assert plan_batch_size(3, nopad) == 3
+
+
+# ---------------------------------------------------------------------------
+# executable cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_accounting():
+    cache = ExecutableCache()
+    g = dataset_suite("test")["corp-leadership"]
+    bucket = plan_bucket(g, BucketPolicy(mode="pow2"))
+    cfg = bucket.engine_config()
+    f1 = cache.get(cfg, 2)
+    assert cache.stats() == dict(hits=0, misses=1, entries=1)
+    f2 = cache.get(cfg, 2)                      # same key -> hit, same fn
+    assert f2 is f1
+    assert cache.stats() == dict(hits=1, misses=1, entries=1)
+    cache.get(cfg, 4)                           # new batch size -> miss
+    assert cache.stats() == dict(hits=1, misses=2, entries=2)
+    cfg2 = bucket.engine_config(order_mode="input")   # new config -> miss
+    cache.get(cfg2, 2)
+    assert cache.stats() == dict(hits=1, misses=3, entries=3)
+    cache.get(cfg, 2)
+    assert cache.stats() == dict(hits=2, misses=3, entries=3)
+
+
+def test_server_reuses_executables_across_flushes():
+    """Second wave of same-bucket traffic must be all cache hits."""
+    graphs = [_random_graph(10, 14, 0.3, s) for s in range(4)]
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=4))
+    srv.serve(graphs)
+    misses_after_first = srv.cache.misses
+    srv.serve([_random_graph(11, 15, 0.35, s) for s in range(40, 44)])
+    assert srv.cache.misses == misses_after_first
+    assert srv.cache.hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# batched vs single-graph equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["pow2", "linear", "exact"])
+def test_mixed_stream_matches_single_graph_runs(mode):
+    suite = dataset_suite("test")
+    graphs = list(suite.values()) + \
+        [_random_graph(6 + s, 9 + 2 * s, 0.25, s) for s in range(5)]
+    srv = MBEServer(BucketPolicy(mode=mode, max_batch=4),
+                    collect_cap=256, collect=True)
+    results = srv.serve(graphs)
+    assert len(results) == len(graphs)
+    for g, r in zip(graphs, results):
+        single = ed.enumerate_dense(g, collect_cap=256)
+        assert r.n_max == int(single.n_max), (mode, g.name)
+        assert r.cs == int(single.cs), (mode, g.name)
+        cfg = ed.make_config(g, collect_cap=256)
+        ref = bicliques_to_key_set(
+            ed.collected_bicliques(cfg, single, g.n_u, g.n_v))
+        assert bicliques_to_key_set(r.bicliques) == ref, (mode, g.name)
+        # and the oracle agrees on the count
+        assert r.n_max == enumerate_mbea(g, collect=False), (mode, g.name)
+    st_ = srv.stats()
+    assert st_["pending"] == 0
+    assert st_["lanes"] >= len(graphs)
+
+
+def test_swapped_submission_demuxes_in_caller_orientation():
+    """A graph submitted with |U| > |V| is canonicalized internally; the
+    demuxed bicliques must still index the CALLER's sides."""
+    g = random_graph(11, 7, 0.35, 42)            # non-canonical on purpose
+    assert g.n_u > g.n_v
+    truth = bicliques_to_key_set(enumerate_bruteforce(g))
+    srv = MBEServer(BucketPolicy(mode="pow2"), collect_cap=256,
+                    collect=True)
+    r = srv.serve([g])[0]
+    assert r.n_max == len(truth)
+    assert bicliques_to_key_set(r.bicliques) == truth
+    assert r.latency_s > 0
+
+
+def test_dummy_lane_padding_is_inert():
+    """A partial flush pads the batch with empty-task lanes; they must not
+    change any real lane's result."""
+    g = dataset_suite("test")["corp-leadership"]
+    ref = ed.enumerate_dense(g)
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=8, pad_batch=True))
+    res = srv.serve([g, g, g])                   # 3 requests -> 4 lanes
+    assert srv.stats()["pad_lanes"] == 1
+    for r in res:
+        assert r.n_max == int(ref.n_max)
+        assert r.cs == int(ref.cs)

@@ -116,15 +116,15 @@ def test_compression_error_feedback_converges():
 
     import jax
     from jax.sharding import PartitionSpec as P
+    from repro.core.distributed import shard_map_compat
     from repro.training.compress import quantized_psum
 
     def run_once(g, e):
         return quantized_psum({"g": g}, "x", {"g": e})
 
-    run = jax.jit(jax.shard_map(
+    run = jax.jit(shard_map_compat(
         run_once, mesh=jax.make_mesh((1,), ("x",)),
-        in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))
+        in_specs=(P(), P()), out_specs=(P(), P())))
 
     e = jnp.zeros((64,))
     acc_c = np.zeros(64)

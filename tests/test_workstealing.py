@@ -1,0 +1,92 @@
+"""Work-stealing invariants for the distributed runner.
+
+Run in a subprocess (simulated multi-device CPU) so the XLA_FLAGS device
+count doesn't leak into the rest of the session.  Checked:
+
+* ``work_stealing=True`` and the ``noWS`` ablation enumerate identical
+  totals (count AND order-independent fingerprint) — stealing reassigns
+  work, never changes it.
+* every root task is *executed exactly once* across rounds: snapshotting
+  each worker's pending queue at every barrier, the multiset of tasks
+  consumed per round (pending-before minus pending-after) sums to the full
+  root set with multiplicity one — no task is lost at a steal, none runs
+  twice.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+from collections import Counter
+import numpy as np, jax
+from repro.data import dataset_suite
+from repro.baselines import enumerate_mbea
+from repro.core import engine_dense as ed
+from repro.core import distributed as dd
+
+g = dataset_suite("test")["community-tiny"]
+oracle_n = enumerate_mbea(g, collect=False)
+ref = ed.enumerate_dense(g)
+mesh = jax.make_mesh((4,), ("workers",))
+cfg = ed.make_config(g)
+
+
+def pending_multiset(state):
+    tasks = np.asarray(state.tasks)
+    tpos = np.asarray(state.tpos)
+    ntask = np.asarray(state.n_tasks)
+    out = Counter()
+    for w in range(tasks.shape[0]):
+        out.update(tasks[w, tpos[w]:ntask[w]].tolist())
+    return out
+
+
+totals = {}
+for ws in (True, False):
+    dist = dd.DistConfig(steps_per_round=24, workers_per_device=1,
+                         work_stealing=ws)
+    init, roundf, driver = dd.make_distributed_runner(
+        g, cfg, mesh, ("workers",), dist)
+    state = init()
+    executed = Counter()
+    pend = pending_multiset(state)
+    assert sorted(pend.elements()) == list(range(cfg.m_real)), \
+        "initial deal must cover every root exactly once"
+    for r in range(dist.max_rounds):
+        state = roundf(state)
+        after = pending_multiset(state)
+        consumed = pend - after
+        # a steal re-deals PENDING tasks; consumption is monotone
+        assert sum(consumed.values()) == sum(pend.values()) - sum(after.values())
+        executed.update(consumed)
+        pend = after
+        done = np.asarray((state.lvl < 0) & (state.tpos >= state.n_tasks))
+        if bool(done.all()):
+            break
+    assert not pend, f"pending tasks left at completion (ws={ws}): {pend}"
+    assert all(v == 1 for v in executed.values()), \
+        f"task executed != once (ws={ws}): {executed}"
+    assert sorted(executed.elements()) == list(range(cfg.m_real)), \
+        f"executed set != root set (ws={ws})"
+    tot = dd.totals(state)
+    assert tot["n_max"] == oracle_n, (ws, tot["n_max"], oracle_n)
+    assert tot["cs"] == int(ref.cs), (ws,)
+    totals[ws] = (tot["n_max"], tot["cs"])
+
+assert totals[True] == totals[False], totals
+print("WS-INVARIANT-OK")
+"""
+
+
+@pytest.mark.slow
+def test_work_stealing_invariants_4dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "WS-INVARIANT-OK" in r.stdout
