@@ -1,9 +1,11 @@
 """Serving-layer benchmark: throughput vs per-graph latency across bucket
-policies on a mixed-size request stream.
+policies on a mixed-size request stream, plus a skewed-stream comparison of
+whole-batch flush vs continuous lane refill.
 
-Three serving configurations against the one-compile-per-graph baseline
-(a fresh jitted ``engine_dense`` runner per request — what a naive service
-would do, so its compile count equals the request count):
+Part 1 (``run``) — three serving configurations against the
+one-compile-per-graph baseline (a fresh jitted ``engine_dense`` runner per
+request — what a naive service would do, so its compile count equals the
+request count):
 
 * ``exact``  — batching without bucketing: graphs batch only when their
   exact shapes collide.
@@ -17,7 +19,17 @@ bucketed policies compile at least 2x fewer executables than
 one-compile-per-graph (the cache's miss counter is an honest compile
 count; see ``repro.serving.cache``).
 
+Part 2 (``run_skewed``) — one HEAVY graph plus many light ones, all in the
+same pow2 bucket (the serving analog of cuMBE's workload imbalance): under
+whole-batch flush the light lanes of the heavy graph's batch idle until it
+finishes; the continuous scheduler refills them mid-flight from the queue.
+The harness asserts the two modes are result-identical to per-graph runs
+(same ``(n_max, cs)`` per request) and that continuous mode achieves
+STRICTLY higher lane occupancy (busy-steps / total lane-steps) with no new
+executable compiles beyond one round-mode entry per (bucket, batch) pair.
+
   python -m benchmarks.serving --requests 32
+  python -m benchmarks.serving --skewed --requests 12 --steps-per-round 64
 """
 from __future__ import annotations
 
@@ -29,7 +41,8 @@ import jax
 
 from repro.baselines import bicliques_to_key_set
 from repro.core import engine_dense as ed
-from repro.data.generators import random_graph_stream
+from repro.data.generators import (dense_small, random_bipartite,
+                                   random_graph_stream)
 from repro.serving import BucketPolicy, MBEServer
 
 COLLECT_CAP = 4096
@@ -38,18 +51,18 @@ COLLECT_CAP = 4096
 def _baseline(graphs) -> tuple[list, list, float]:
     """One fresh jit per graph: per-request latencies + reference results."""
     refs, lats = [], []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for g in graphs:
-        t1 = time.time()
+        t1 = time.perf_counter()
         cfg = ed.make_config(g, collect_cap=COLLECT_CAP)
         ctx = ed.make_context(g, cfg)
         s0 = ed.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
         out = jax.jit(lambda st, c=ctx, f=cfg: ed.run(c, f, st))(s0)
-        lats.append(time.time() - t1)
+        lats.append(time.perf_counter() - t1)
         refs.append((int(out.n_max), int(out.cs),
                      bicliques_to_key_set(
                          ed.collected_bicliques(cfg, out, g.n_u, g.n_v))))
-    return refs, lats, time.time() - t0
+    return refs, lats, time.perf_counter() - t0
 
 
 def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
@@ -59,16 +72,16 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
                  graphs_per_s=round(n_requests / base_wall, 2),
                  mean_latency_s=round(sum(base_lats) / len(base_lats), 4),
                  compiles=n_requests, cache_hits=0, batches=n_requests,
-                 pad_lanes=0)]
+                 pad_lanes=0, occupancy=1.0, idle_lane_steps=0)]
     print(f"[serving] baseline: {n_requests} graphs, "
           f"{n_requests} compiles, {base_wall:.2f}s")
 
     for mode in ("exact", "linear", "pow2"):
         server = MBEServer(BucketPolicy(mode=mode, max_batch=max_batch),
                            collect_cap=COLLECT_CAP, collect=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         results = server.serve(graphs)
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         st = server.stats()
         # --- byte-identical results, graph by graph -------------------
         for g, r, (ref_n, ref_cs, ref_set) in zip(graphs, results, refs):
@@ -76,17 +89,22 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
             assert r.cs == ref_cs, (mode, g.name)
             assert bicliques_to_key_set(r.bicliques) == ref_set, \
                 (mode, g.name)
-        # per-request service time (its batch's wall), comparable with the
-        # baseline's per-graph timings
-        mean_lat = sum(r.latency_s for r in results) / len(results)
+        # per-request service + compile charge: the baseline timings above
+        # include each request's jit compile, so the comparison column
+        # must too (the scheduler reports the split per request)
+        mean_lat = sum(r.service_s + r.compile_s
+                       for r in results) / len(results)
         row = dict(policy=mode, wall_s=round(wall, 3),
                    graphs_per_s=round(n_requests / wall, 2),
                    mean_latency_s=round(mean_lat, 4),
                    compiles=st["misses"], cache_hits=st["hits"],
-                   batches=st["batches"], pad_lanes=st["pad_lanes"])
+                   batches=st["batches"], pad_lanes=st["pad_lanes"],
+                   occupancy=round(st["occupancy"], 3),
+                   idle_lane_steps=st["idle_lane_steps"])
         rows.append(row)
         print(f"[serving] {mode}: {st['misses']} compiles "
               f"({st['hits']} hits), {st['batches']} batches, "
+              f"occupancy {st['occupancy']:.2f}, "
               f"{wall:.2f}s, results byte-identical to per-graph runs")
         if mode in ("linear", "pow2"):
             assert 2 * st["misses"] <= n_requests, \
@@ -95,17 +113,96 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# skewed stream: flush vs continuous refill
+# ---------------------------------------------------------------------------
+
+def skewed_graph_stream(n_requests: int, seed: int = 0) -> list:
+    """One heavy dense graph + (n-1) light sparse ones, ALL in the same
+    pow2 bucket (16, 32) — the imbalance regime continuous refill targets."""
+    rng = np.random.default_rng(seed)
+    heavy = dense_small(14, 28, p=0.55, seed=seed, name="req0-heavy")
+    out = [heavy]
+    for i in range(1, n_requests):
+        n_u = int(rng.integers(9, 13))
+        n_v = int(rng.integers(17, 29))
+        out.append(random_bipartite(n_u, n_v, p=0.12,
+                                    seed=int(rng.integers(1 << 30)),
+                                    name=f"req{i}-light"))
+    return out
+
+
+def run_skewed(n_requests: int = 12, seed: int = 0, max_batch: int = 4,
+               steps_per_round: int = 64) -> list:
+    graphs = skewed_graph_stream(n_requests, seed=seed)
+    refs = []
+    for g in graphs:
+        out = ed.enumerate_dense(g)
+        refs.append((int(out.n_max), int(out.cs)))
+
+    rows = []
+    occ = {}
+    for label, spr in (("flush", 0), ("continuous", steps_per_round)):
+        server = MBEServer(
+            BucketPolicy(mode="pow2", max_batch=max_batch,
+                         steps_per_round=spr))
+        t0 = time.perf_counter()
+        results = server.serve(graphs)
+        wall = time.perf_counter() - t0
+        st = server.stats()
+        for g, r, (ref_n, ref_cs) in zip(graphs, results, refs):
+            assert (r.n_max, r.cs) == (ref_n, ref_cs), \
+                (label, g.name, (r.n_max, r.cs), (ref_n, ref_cs))
+        occ[label] = st["occupancy"]
+        rows.append(dict(mode=label, steps_per_round=spr,
+                         wall_s=round(wall, 3),
+                         rounds=st["batches"], compiles=st["misses"],
+                         busy_steps=st["busy_steps"],
+                         total_lane_steps=st["total_lane_steps"],
+                         idle_lane_steps=st["idle_lane_steps"],
+                         occupancy=round(st["occupancy"], 3)))
+        print(f"[serving-skewed] {label}: occupancy {st['occupancy']:.3f} "
+              f"({st['busy_steps']}/{st['total_lane_steps']} lane-steps, "
+              f"{st['idle_lane_steps']} idle), {st['misses']} compiles, "
+              f"{st['batches']} rounds, results identical to per-graph runs")
+        if label == "continuous":
+            # one bucket, one lane count -> exactly one round-mode compile
+            assert st["misses"] == st["entries"] == 1, \
+                f"continuous mode leaked executables: {st}"
+    assert occ["continuous"] > occ["flush"], \
+        (f"mid-flight refill failed to lift occupancy: "
+         f"{occ['continuous']:.3f} <= {occ['flush']:.3f}")
+    print(f"[serving-skewed] refill lifts occupancy "
+          f"{occ['flush']:.3f} -> {occ['continuous']:.3f}")
+    return rows
+
+
+def _print_table(rows: list) -> None:
+    keys = list(rows[0])
+    print("\n" + "  ".join(f"{k:>16}" for k in keys))
+    for r in rows:
+        print("  ".join(f"{str(r[k]):>16}" for k in keys))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="lanes per batch (default: 8, or 4 with --skewed)")
+    ap.add_argument("--skewed", action="store_true",
+                    help="skewed-stream flush-vs-continuous comparison "
+                         "instead of the bucket-policy sweep")
+    ap.add_argument("--steps-per-round", type=int, default=64)
     args = ap.parse_args()
-    rows = run(args.requests, seed=args.seed, max_batch=args.max_batch)
-    keys = list(rows[0])
-    print("\n" + "  ".join(f"{k:>14}" for k in keys))
-    for r in rows:
-        print("  ".join(f"{str(r[k]):>14}" for k in keys))
+    if args.skewed:
+        rows = run_skewed(args.requests, seed=args.seed,
+                          max_batch=args.max_batch or 4,
+                          steps_per_round=args.steps_per_round)
+    else:
+        rows = run(args.requests, seed=args.seed,
+                   max_batch=args.max_batch or 8)
+    _print_table(rows)
     return 0
 
 

@@ -122,8 +122,11 @@ def make_context(g: BipartiteGraph, cfg: EngineConfig) -> GraphContext:
         cfg.n_u, cfg.n_v, [tuple(e) for e in g.edges], name=g.name) \
         if gp is None else g
     adj[:, :] = src.adj_u
-    deg = np.array([int(bitset.count(jnp.asarray(adj[u])))
-                    for u in range(g.n_u)], dtype=np.int64)
+    # Host-side vectorized degree: one popcount pass over the packed rows
+    # (a per-row jnp round-trip here costs O(n_u) device dispatches per
+    # admitted graph — a real per-request cost on the serving path).
+    deg = np.unpackbits(adj[: g.n_u].view(np.uint8), axis=1) \
+        .sum(axis=1, dtype=np.int64)
     order_real = np.argsort(deg, kind="stable").astype(np.int32)
     order = np.full(cfg.n_u, -1, dtype=np.int32)
     order[:g.n_u] = order_real
@@ -415,6 +418,40 @@ def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
     return jax.vmap(
         lambda c, st: run(c, cfg, st, max_steps=max_steps),
         in_axes=(ax, 0))(g, s)
+
+
+def replace_lane(batch_state: DenseState, batch_ctx: GraphContext, i: int,
+                 lane_state: DenseState, lane_ctx: GraphContext
+                 ) -> tuple[DenseState, GraphContext]:
+    """Row surgery on a batched (state, context) pair: install one lane's
+    fresh ``DenseState``/``GraphContext`` into row ``i``, leaving every
+    other lane's rows untouched.
+
+    This is the serving layer's mid-flight refill primitive (the slot model
+    applied to graph lanes): a lane that finished its graph between bounded
+    rounds is re-initialized in place with a queued same-bucket graph, so
+    the SAME compiled ``run_batch`` executable keeps all lanes busy across
+    an arbitrary-length request stream — the serving-side analog of cuMBE's
+    work stealing for vmap-lane imbalance.
+    """
+    def put(b, lane):
+        return b.at[i].set(lane)
+    return (jax.tree.map(put, batch_state, lane_state),
+            jax.tree.map(put, batch_ctx, lane_ctx))
+
+
+def replace_lanes(batch_state: DenseState, batch_ctx: GraphContext,
+                  idx, lane_states: DenseState, lane_ctxs: GraphContext
+                  ) -> tuple[DenseState, GraphContext]:
+    """Vectorized ``replace_lane``: install ``len(idx)`` lanes (leading
+    axis of every ``lane_states``/``lane_ctxs`` leaf) with ONE scatter per
+    leaf, instead of one full-batch copy per lane — the refill hot path."""
+    ii = jnp.asarray(idx, dtype=jnp.int32)
+
+    def put(b, lanes):
+        return b.at[ii].set(lanes)
+    return (jax.tree.map(put, batch_state, lane_states),
+            jax.tree.map(put, batch_ctx, lane_ctxs))
 
 
 # ---------------------------------------------------------------------------

@@ -11,11 +11,16 @@ discipline again).
 MBE mode (``--mbe``): serves a stream of bipartite graphs through
 ``repro.serving`` — shape-bucketed, vmap-batched enumeration with a
 compiled-executable cache (see that package's docstrings for the model).
+``--continuous`` switches the scheduler into bounded-round slot mode
+(``--steps-per-round`` engine steps per round): finished lanes are demuxed
+and refilled mid-flight from the pending queue, lifting lane occupancy on
+skewed streams — the same slot model the LM decode loop below uses.
 
 Usage:
   python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --requests 8 --max-new 32
   python -m repro.launch.serve --mbe --requests 32 --policy pow2
+  python -m repro.launch.serve --mbe --continuous --steps-per-round 64
 """
 from __future__ import annotations
 
@@ -41,16 +46,21 @@ def serve_mbe(args) -> dict:
     from repro.data.generators import random_graph_stream
     from repro.serving import BucketPolicy, MBEServer
     graphs = random_graph_stream(args.requests, seed=args.seed)
-    policy = BucketPolicy(mode=args.policy, max_batch=args.max_batch)
+    spr = args.steps_per_round if args.continuous else 0
+    policy = BucketPolicy(mode=args.policy, max_batch=args.max_batch,
+                          steps_per_round=spr)
     server = MBEServer(policy)
-    t0 = time.time()
+    t0 = time.perf_counter()
     results = server.serve(graphs)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     stats = server.stats()
     n_max = sum(r.n_max for r in results)
-    print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}: "
-          f"{n_max} maximal bicliques, {stats['batches']} batches, "
+    mode = f"continuous(r={spr})" if args.continuous else "flush"
+    print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
+          f"{mode}: {n_max} maximal bicliques, "
+          f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
+          f"occupancy {stats['occupancy']:.2f}, "
           f"{dt:.2f}s ({args.requests / dt:.1f} graphs/s)")
     return dict(requests=args.requests, n_max=n_max, wall_s=dt, **stats)
 
@@ -62,6 +72,11 @@ def serve(argv=None) -> dict:
     ap.add_argument("--policy", default="pow2",
                     choices=["pow2", "linear", "exact"])
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="MBE: bounded-round slot scheduling with "
+                         "mid-flight lane refill")
+    ap.add_argument("--steps-per-round", type=int, default=64,
+                    help="MBE continuous mode: engine steps per round")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)

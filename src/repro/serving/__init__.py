@@ -1,4 +1,4 @@
-"""Batched multi-graph MBE serving layer.
+"""Continuous-batching multi-graph MBE serving layer.
 
 The inverse batching problem to the paper's: cuMBE decomposes ONE graph
 across many workers; a production service receives MANY (small) graphs
@@ -7,14 +7,19 @@ compilation across them.  Three pieces:
 
 * ``buckets``   — shape-bucketing planner: pads requests into a small set
   of canonical ``(n_u, n_v, depth)`` buckets (enumeration on a padded
-  graph is bit-identical; see ``buckets`` module docstring).
+  graph is bit-identical; see ``buckets`` module docstring) and plans
+  power-of-two lane counts.
 * ``cache``     — compiled-executable cache keyed on
-  ``(EngineConfig, batch)`` with honest hit/miss (= compile) counters.
-* ``scheduler`` — ``MBEServer``: request queue, per-bucket batch assembly
-  (one graph per vmap lane via ``engine_dense.run_batch``), result demux.
+  ``(EngineConfig, batch, round_budget)`` with honest hit/miss (= compile)
+  counters and self-timed compilation (``compile_s``).
+* ``scheduler`` — ``MBEServer``: slot-based continuous scheduler.  Per
+  bucket, a live lane pool runs in bounded rounds; finished lanes are
+  demuxed immediately and refilled in place from the pending queue
+  (``admit``/``poll``/``drain``, with ``flush``/``serve`` kept as
+  whole-queue wrappers).  See the module docstring for the slot model.
 """
 from repro.serving.buckets import (BucketPolicy, BucketSpec,  # noqa: F401
                                    plan_batch_size, plan_bucket)
-from repro.serving.cache import ExecutableCache                # noqa: F401
+from repro.serving.cache import CacheEntry, ExecutableCache    # noqa: F401
 from repro.serving.scheduler import (MBEResult, MBEServer,     # noqa: F401
                                      Request)

@@ -41,6 +41,20 @@ class BucketPolicy:
     max_batch: int = 8        # graphs per batched engine call
     pad_batch: bool = True    # round the batch dim up to a power of two so
     #                           partial flushes reuse full-batch executables
+    steps_per_round: int = 0  # continuous-scheduler round budget: 0 runs
+    #                           each lane pool to completion per round
+    #                           (whole-batch flush semantics); > 0 bounds
+    #                           every engine call so finished lanes can be
+    #                           refilled mid-flight from the pending queue
+
+    @property
+    def lane_cap(self) -> int:
+        """Largest usable lane count.  With ``pad_batch`` every planned
+        batch size must be a power of two (that is the executable-reuse
+        promise), so a non-power-of-two ``max_batch`` is rounded DOWN to
+        the previous power of two rather than minted as its own size."""
+        return _prev_pow2(self.max_batch) if self.pad_batch \
+            else self.max_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +71,10 @@ class BucketSpec:
 
 def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
+def _prev_pow2(n: int) -> int:
+    return 1 << (n.bit_length() - 1) if n >= 1 else 1
 
 
 def _round_up(n: int, step: int) -> int:
@@ -82,6 +100,12 @@ def plan_bucket(g: BipartiteGraph, policy: BucketPolicy) -> BucketSpec:
 
 
 def plan_batch_size(n_pending: int, policy: BucketPolicy) -> int:
-    """Lane count for a flush of ``n_pending`` same-bucket graphs."""
-    b = min(n_pending, policy.max_batch)
-    return min(_next_pow2(b), policy.max_batch) if policy.pad_batch else b
+    """Lane count for a pool serving ``n_pending`` same-bucket graphs.
+
+    With ``pad_batch`` the result is ALWAYS a power of two capped at
+    ``policy.lane_cap`` — a non-power-of-two ``max_batch`` (e.g. 6) must
+    not leak extra batch sizes like {1, 2, 4, 6} into the executable
+    cache, which would defeat the reuse promise padding exists to keep.
+    """
+    b = min(n_pending, policy.lane_cap)
+    return min(_next_pow2(b), policy.lane_cap) if policy.pad_batch else b

@@ -1,10 +1,26 @@
 """Compiled-executable cache for the serving layer.
 
-One cache entry per ``(EngineConfig, batch_size)``: each entry owns its own
-``jax.jit`` wrapper around ``engine_dense.run_batch`` with every shape
-pinned, so entry creation corresponds 1:1 to an XLA compilation on first
-call and the hit/miss counters are an honest compile count (``jax.jit``'s
-internal per-shape cache never silently recompiles behind a "hit").
+One cache entry per ``(EngineConfig, batch_size, round_budget)``: each entry
+owns its own ``jax.jit`` wrapper around ``engine_dense.run_batch`` with
+every shape pinned, so entry creation corresponds 1:1 to an XLA compilation
+on first call and the hit/miss counters are an honest compile count
+(``jax.jit``'s internal per-shape cache never silently recompiles behind a
+"hit").
+
+Two entry flavours share the cache:
+
+* **drain entries** (``round_budget=None``) run a batch to completion —
+  the whole-batch flush path.
+* **round entries** (``round_budget=k``) bound every call to ``k`` engine
+  steps per lane, so the continuous scheduler can demux finished lanes and
+  refill them between rounds.  Because the budget is part of the key, a
+  continuous stream costs exactly ONE round-mode compile per
+  ``(bucket, batch)`` pair, no matter how many rounds it runs.
+
+Entries also time their own XLA compilation: the first call AOT-lowers and
+compiles (``jit.lower(...).compile()``) with ``time.perf_counter`` around
+it, so schedulers can report ``compile_s`` separately instead of folding a
+first-call compile into some unlucky request's service latency.
 
 This is what turns shape bucketing into throughput: a mixed stream of
 requests collapses onto a handful of entries, amortizing compilation
@@ -12,11 +28,39 @@ across every graph that ever lands in the same bucket.
 """
 from __future__ import annotations
 
-from typing import Callable
+import time
 
 import jax
 
 from repro.core import engine_dense as ed
+
+
+class CacheEntry:
+    """One batched enumeration executable, lazily AOT-compiled.
+
+    Calling the entry the first time lowers + compiles the jitted function
+    (timed into ``compile_s``), then runs the compiled executable; later
+    calls go straight to the compiled object.  ``compile_s`` stays 0.0
+    until the first call and is never charged twice.
+    """
+
+    __slots__ = ("_jit", "_compiled", "compile_s")
+
+    def __init__(self, fn):
+        self._jit = fn
+        self._compiled = None
+        self.compile_s = 0.0
+
+    @property
+    def compiled(self) -> bool:
+        return self._compiled is not None
+
+    def __call__(self, ctx: ed.GraphContext, s: ed.DenseState) -> ed.DenseState:
+        if self._compiled is None:
+            t0 = time.perf_counter()
+            self._compiled = self._jit.lower(ctx, s).compile()
+            self.compile_s = time.perf_counter() - t0
+        return self._compiled(ctx, s)
 
 
 class ExecutableCache:
@@ -25,22 +69,32 @@ class ExecutableCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, cfg: ed.EngineConfig, batch: int) -> Callable:
+    def get_round(self, cfg: ed.EngineConfig, batch: int,
+                  max_steps: int | None = None) -> CacheEntry:
         """Batched enumeration executable: (ctx, state) -> state, where all
-        leaves carry a leading axis of size ``batch``."""
-        key = (cfg, batch)
-        fn = self._entries.get(key)
-        if fn is not None:
+        leaves carry a leading axis of size ``batch``.  ``max_steps`` bounds
+        every lane to that many engine steps per call (None = run to
+        completion); it is baked into the executable, hence part of the
+        cache key."""
+        key = (cfg, batch, max_steps)
+        entry = self._entries.get(key)
+        if entry is not None:
             self.hits += 1
-            return fn
+            return entry
         self.misses += 1
 
         @jax.jit
         def fn(ctx: ed.GraphContext, s: ed.DenseState) -> ed.DenseState:
-            return ed.run_batch(ctx, cfg, s, ctx_batched=True)
+            return ed.run_batch(ctx, cfg, s, max_steps=max_steps,
+                                ctx_batched=True)
 
-        self._entries[key] = fn
-        return fn
+        entry = CacheEntry(fn)
+        self._entries[key] = entry
+        return entry
+
+    def get(self, cfg: ed.EngineConfig, batch: int) -> CacheEntry:
+        """Run-to-completion executable (drain entry)."""
+        return self.get_round(cfg, batch, None)
 
     def stats(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,

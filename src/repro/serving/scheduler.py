@@ -1,31 +1,75 @@
-"""Host-side request queue, batch assembly, and result demux.
+"""Continuous-batching MBE scheduler: slot admission + mid-flight refill.
 
-``MBEServer`` is the serving front end: users ``submit`` bipartite graphs
-(one request = one whole graph to enumerate), the scheduler groups pending
-requests by their shape bucket, pads each group into fixed-lane batches,
-runs one cached executable per batch (``engine_dense.run_batch`` with a
-per-lane graph context), and demuxes the per-lane engine state back into
-per-request results.
+``MBEServer`` is the serving front end: users ``submit``/``admit``
+bipartite graphs (one request = one whole graph to enumerate) and the
+scheduler serves them through per-bucket **lane pools** — the LM serving
+loop's slot model applied to graph lanes.
+
+The slot model
+--------------
+
+Each shape bucket with work owns one live *lane pool*: a batched
+``DenseState``/``GraphContext`` pair of ``B`` vmap lanes driven by ONE
+cached ``run_batch`` executable.  The pool advances in bounded **rounds**
+(``run_batch(max_steps=policy.steps_per_round)``); after every round,
+
+1. lanes whose graph finished are **demuxed** into results immediately,
+2. freed lanes are **refilled in place** from the bucket's pending queue
+   (``engine_dense.replace_lane`` row surgery — no reshape, no recompile),
+3. the next round runs with the same executable.
+
+Under ``vmap`` a finished lane otherwise idles until the slowest lane in
+its batch completes — exactly the workload imbalance cuMBE's work stealing
+exists to fix, transplanted to the serving layer: refill keeps every lane
+busy across an arbitrary-length stream instead of paying one whole-batch
+barrier per flush chunk.  ``steps_per_round == 0`` degenerates to
+whole-batch semantics (each round runs the pool to completion), which is
+the drain/flush baseline the benchmark compares against.
+
+Scheduling APIs:
+
+* ``admit(g)``  — enqueue one graph, stamping its queueing clock.
+* ``poll()``    — one scheduling round over every bucket with work:
+  create/refill pools, run one bounded round each, demux completions.
+  Returns the results that completed during this poll.
+* ``drain()``   — poll until no pending requests and no live lanes.
+* ``flush()`` / ``serve()`` — thin wrappers over ``drain()`` for the
+  original whole-queue callers; ``submit`` is an alias of ``admit``.
+
+Requests leave the pending queue only when they are physically placed
+into a lane, so an exception mid-drain (e.g. a lane exceeding
+``max_graph_steps``) cannot lose queued-but-unserved requests.
+
+Accounting: per-request ``queue_s`` (admit -> lane placement) and
+``service_s`` (execution wall while resident, excluding compilation) are
+measured with ``time.perf_counter``; XLA compile time is reported
+separately as ``compile_s`` (the executable cache times its own
+compilation).  Pool-level occupancy is tracked in steps: ``busy_steps``
+(per-lane engine steps actually advanced) over ``total_lane_steps``
+(lanes x the per-round critical path) — the refill mechanism's win shows
+up as this ratio.
 
 Design points:
 
-* **One graph per lane.**  Lane b of a batch holds graph b's padded
+* **One graph per lane.**  Lane b of a pool holds graph b's padded
   context and a worker state whose task list is *all* of graph b's root
-  tasks — the engine's task-driven decomposition is reused unchanged, just
-  vmapped.  Under ``vmap`` the DFS ``while_loop`` runs until the slowest
-  lane finishes (finished lanes are masked); bucketing by shape keeps
-  lane runtimes comparable.
-* **Static everything.**  Batch lane count comes from
-  ``plan_batch_size`` (optionally padded to powers of two), so a month of
-  traffic exercises a handful of executables.  Dummy lanes carry an empty
-  task list (``n_tasks=0``) and an all-zero context: they are born done
-  and cost one loop-condition evaluation.
-* **FIFO within bucket.**  Requests flush in submit order within their
-  bucket; cross-bucket order is bucket-by-bucket (an async admission
-  policy is a ROADMAP item).
+  tasks — the engine's task-driven decomposition is reused unchanged,
+  just vmapped.  Lane results are independent of what the other lanes
+  run, so refill is result-identical to whole-batch flush.
+* **Static everything.**  Pool lane count comes from ``plan_batch_size``
+  (always a power of two capped at ``policy.lane_cap`` when padding), so
+  a month of traffic exercises a handful of executables.  Idle lanes
+  carry an empty task list (``n_tasks=0``) and an all-zero context: they
+  are born done and cost one loop-condition evaluation.  A pool sized for
+  a trickle grows when a burst arrives: live lanes migrate row-by-row
+  into a wider pool (pow2, so the wider executable would exist anyway)
+  and resume mid-DFS.
+* **FIFO within bucket.**  Requests are admitted into lanes in submit
+  order within their bucket; buckets are scheduled in sorted shape order.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -46,6 +90,7 @@ class Request:
     graph: BipartiteGraph       # canonical orientation (|U| <= |V|)
     bucket: BucketSpec
     swapped: bool               # True if submit() transposed the graph
+    t_admit: float = 0.0        # perf_counter stamp at admission
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,11 +102,23 @@ class MBEResult:
     #                             computed in the canonical orientation)
     nodes: int                  # search-tree nodes visited
     steps: int                  # engine loop iterations
-    latency_s: float            # service time of this request's batch
+    latency_s: float            # queue_s + service_s + compile_s: the sum
+    #                             of the request's attributed components
+    #                             (host gaps between rounds and other
+    #                             buckets' rounds are not attributed)
     bicliques: list | None      # decoded (L ⊆ V, R ⊆ U) tuples when
     #                             collecting, in the orientation the graph
     #                             was SUBMITTED in (demux un-swaps if the
     #                             server canonicalized)
+    truncated: bool = False     # collecting AND n_max exceeded the collect
+    #                             buffer: the bicliques list is
+    #                             honest-but-short (always False when the
+    #                             server is not collecting)
+    queue_s: float = 0.0        # admit -> lane placement
+    service_s: float = 0.0      # execution wall while resident in a lane
+    #                             (compilation excluded)
+    compile_s: float = 0.0      # XLA compile time incurred while resident
+    #                             (0.0 when the executable was cached)
 
 
 def _lane_state(cfg: ed.EngineConfig, n_tasks: int) -> ed.DenseState:
@@ -73,26 +130,181 @@ def _lane_state(cfg: ed.EngineConfig, n_tasks: int) -> ed.DenseState:
     return s._replace(tasks=jnp.asarray(pad))
 
 
+def _dummy_context(cfg: ed.EngineConfig) -> ed.GraphContext:
+    """All-zero context for idle lanes (paired with ``_lane_state(cfg, 0)``
+    the lane is born done and never reads it)."""
+    return ed.GraphContext(
+        adj=jnp.zeros((cfg.n_u, cfg.wv), jnp.uint32),
+        order=jnp.zeros((cfg.n_u,), jnp.int32),
+        rank=jnp.zeros((cfg.n_u,), jnp.int32),
+        l_root=jnp.zeros((cfg.wv,), jnp.uint32),
+        root_counts=jnp.zeros((cfg.n_u,), jnp.int32))
+
+
+class _LanePool:
+    """Live batch of ``B`` lanes for one bucket, advanced in bounded rounds.
+
+    Owns the batched (state, ctx) pytrees plus per-slot host bookkeeping:
+    which request occupies each lane and its latency accumulators.
+    """
+
+    def __init__(self, server: "MBEServer", bucket: BucketSpec, n_lanes: int):
+        self.bucket = bucket
+        self.cfg = server._engine_config(bucket)
+        self.B = n_lanes
+        dummy_s = _lane_state(self.cfg, 0)
+        dummy_c = _dummy_context(self.cfg)
+        self.state = jax.tree.map(
+            lambda x: jnp.stack([x] * n_lanes), dummy_s)
+        self.ctx = jax.tree.map(
+            lambda x: jnp.stack([x] * n_lanes), dummy_c)
+        self.reqs: list[Request | None] = [None] * n_lanes
+        self._queue_s = [0.0] * n_lanes
+        self._service_s = [0.0] * n_lanes
+        self._compile_s = [0.0] * n_lanes
+
+    # ------------------------------------------------------------------
+    def n_live(self) -> int:
+        return sum(r is not None for r in self.reqs)
+
+    def refill(self, queue: collections.deque, server: "MBEServer") -> int:
+        """Place queued requests into free lanes (one batched row scatter,
+        not one full-pool copy per lane)."""
+        idx, states, ctxs = [], [], []
+        for i in range(self.B):
+            if self.reqs[i] is not None or not queue:
+                continue
+            r = queue.popleft()
+            idx.append(i)
+            ctxs.append(ed.make_context(r.graph, self.cfg))
+            states.append(_lane_state(self.cfg, r.graph.n_u))
+            self.reqs[i] = r
+            self._queue_s[i] = time.perf_counter() - r.t_admit
+            self._service_s[i] = 0.0
+            self._compile_s[i] = 0.0
+        if idx:
+            self.state, self.ctx = ed.replace_lanes(
+                self.state, self.ctx, idx,
+                jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+                jax.tree.map(lambda *xs: jnp.stack(xs), *ctxs))
+        return len(idx)
+
+    def run_round(self, server: "MBEServer") -> None:
+        """One bounded engine round over all lanes; occupancy accounting."""
+        spr = server.policy.steps_per_round
+        budget = spr if spr > 0 else None
+        if budget is None and server.max_graph_steps is not None:
+            # unbounded rounds must still honour the per-graph step cap,
+            # or a runaway lane would never return control to raise
+            budget = server.max_graph_steps
+        entry = server.cache.get_round(self.cfg, self.B, budget)
+        before = np.asarray(self.state.steps)
+        was_compiled = entry.compiled
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(entry(self.ctx, self.state))
+        wall = time.perf_counter() - t0
+        self.state = out
+        compile_s = 0.0 if was_compiled else entry.compile_s
+        exec_s = max(wall - compile_s, 0.0)
+        adv = np.asarray(out.steps) - before            # per-lane steps
+        busy = int(adv.sum())
+        crit = int(adv.max()) if self.B else 0          # round critical path
+        server._n_rounds += 1
+        server._busy_steps += busy
+        server._total_lane_steps += self.B * crit
+        for i, r in enumerate(self.reqs):
+            if r is None:
+                continue
+            self._service_s[i] += exec_s
+            self._compile_s[i] += compile_s
+
+    def enforce_step_cap(self, server: "MBEServer") -> None:
+        """Evict-then-raise for lanes that blew ``max_graph_steps``.
+
+        Called AFTER demux, so results computed in the offending round are
+        already delivered; eviction (dummy state surgery) frees the slot
+        and keeps the server serviceable, so queued and in-flight requests
+        are never lost to a runaway graph."""
+        cap = server.max_graph_steps
+        if cap is None:
+            return
+        done = self._done_mask()
+        steps = np.asarray(self.state.steps)
+        dead = [i for i, r in enumerate(self.reqs)
+                if r is not None and not done[i] and int(steps[i]) >= cap]
+        if not dead:
+            return
+        names = [f"request {self.reqs[i].rid} ({self.reqs[i].graph.name})"
+                 for i in dead]
+        for i in dead:
+            self.state, self.ctx = ed.replace_lane(
+                self.state, self.ctx, i, _lane_state(self.cfg, 0),
+                _dummy_context(self.cfg))
+            self.reqs[i] = None
+        raise RuntimeError(
+            f"{'; '.join(names)} exceeded max_graph_steps={cap} without "
+            f"finishing; evicted (other requests remain servable)")
+
+    def _done_mask(self) -> np.ndarray:
+        return np.asarray((self.state.lvl < 0)
+                          & (self.state.tpos >= self.state.n_tasks))
+
+    def demux(self, server: "MBEServer") -> dict[int, "MBEResult"]:
+        """Decode every finished lane into a result and free its slot."""
+        done = self._done_mask()
+        results: dict[int, MBEResult] = {}
+        for i, r in enumerate(self.reqs):
+            if r is None or not done[i]:
+                continue
+            lane = jax.tree.map(lambda x, i=i: x[i], self.state)
+            bic = None
+            if server.collect:
+                bic = ed.collected_bicliques(self.cfg, lane, r.graph.n_u,
+                                             r.graph.n_v)
+                if r.swapped:   # back to the submitted orientation
+                    bic = [(R, L) for L, R in bic]
+            results[r.rid] = MBEResult(
+                rid=r.rid, name=r.graph.name, n_max=int(lane.n_max),
+                cs=int(lane.cs), nodes=int(lane.nodes),
+                steps=int(lane.steps),
+                latency_s=(self._queue_s[i] + self._service_s[i]
+                           + self._compile_s[i]),
+                bicliques=bic,
+                truncated=server.collect
+                and int(lane.n_max) > int(lane.out_n),
+                queue_s=self._queue_s[i],
+                service_s=self._service_s[i],
+                compile_s=self._compile_s[i])
+            self.reqs[i] = None
+        return results
+
+
 class MBEServer:
-    """Batched multi-graph MBE serving."""
+    """Continuous-batching multi-graph MBE serving."""
 
     def __init__(self, policy: BucketPolicy | None = None,
                  collect_cap: int = 1, collect: bool = False,
-                 order_mode: str = "deg", impl: str = "jnp"):
+                 order_mode: str = "deg", impl: str = "jnp",
+                 max_graph_steps: int | None = None):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
         self.order_mode = order_mode
         self.impl = impl
+        self.max_graph_steps = max_graph_steps
         self.cache = ExecutableCache()
-        self._pending: list[Request] = []
+        self._queues: dict[BucketSpec, collections.deque] = {}
+        self._pools: dict[BucketSpec, _LanePool] = {}
+        self._completed: dict[int, MBEResult] = {}
         self._next_rid = 0
-        self._n_batches = 0
+        self._n_rounds = 0
         self._n_lanes = 0
         self._n_pad_lanes = 0
+        self._busy_steps = 0
+        self._total_lane_steps = 0
 
     # ------------------------------------------------------------------
-    def submit(self, g: BipartiteGraph) -> int:
+    def admit(self, g: BipartiteGraph) -> int:
         """Enqueue one graph; returns the request id used to demux.
 
         The graph is canonicalized (|U| <= |V|) internally for the engine;
@@ -100,13 +312,17 @@ class MBEServer:
         demux, so callers always get (L ⊆ their V, R ⊆ their U).
         """
         gc = g.canonical()
-        assert gc.n_u >= 1, "empty graphs are not servable"
+        if gc.n_u < 1:
+            raise ValueError("empty graphs are not servable")
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(
-            Request(rid, gc, plan_bucket(gc, self.policy),
-                    swapped=g.n_u > g.n_v))
+        req = Request(rid, gc, plan_bucket(gc, self.policy),
+                      swapped=g.n_u > g.n_v, t_admit=time.perf_counter())
+        self._queues.setdefault(req.bucket, collections.deque()).append(req)
         return rid
+
+    # legacy name; identical semantics
+    submit = admit
 
     # ------------------------------------------------------------------
     def _engine_config(self, bucket: BucketSpec) -> ed.EngineConfig:
@@ -114,62 +330,107 @@ class MBEServer:
                                     order_mode=self.order_mode,
                                     impl=self.impl)
 
-    def _run_chunk(self, cfg: ed.EngineConfig,
-                   chunk: list[Request]) -> dict[int, MBEResult]:
-        B = plan_batch_size(len(chunk), self.policy)
-        t0 = time.time()
-        ctxs = [ed.make_context(r.graph, cfg) for r in chunk]
-        states = [_lane_state(cfg, r.graph.n_u) for r in chunk]
-        while len(states) < B:                       # dummy (padding) lanes
-            ctxs.append(jax.tree.map(jnp.zeros_like, ctxs[0]))
-            states.append(_lane_state(cfg, 0))
-        ctx = jax.tree.map(lambda *xs: jnp.stack(xs), *ctxs)
-        state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-        out = self.cache.get(cfg, B)(ctx, state)
-        done = np.asarray((out.lvl < 0) & (out.tpos >= out.n_tasks))
-        assert done.all(), "serving batch exhausted its step budget"
-        self._n_batches += 1
-        self._n_lanes += B
-        self._n_pad_lanes += B - len(chunk)
-        results = {}
-        latency = time.time() - t0
-        for i, r in enumerate(chunk):
-            lane = jax.tree.map(lambda x, i=i: x[i], out)
-            bic = None
-            if self.collect:
-                bic = ed.collected_bicliques(cfg, lane, r.graph.n_u,
-                                             r.graph.n_v)
-                if r.swapped:   # back to the submitted orientation
-                    bic = [(R, L) for L, R in bic]
-            results[r.rid] = MBEResult(
-                rid=r.rid, name=r.graph.name, n_max=int(lane.n_max),
-                cs=int(lane.cs), nodes=int(lane.nodes),
-                steps=int(lane.steps), latency_s=latency, bicliques=bic)
-        return results
+    def _buckets_with_work(self) -> list[BucketSpec]:
+        live = {b for b, q in self._queues.items() if q} \
+            | {b for b, p in self._pools.items() if p.n_live()}
+        return sorted(live, key=lambda b: (b.n_u, b.n_v))
+
+    def _ensure_pool(self, bucket: BucketSpec) -> _LanePool:
+        pool = self._pools.get(bucket)
+        backlog = len(self._queues.get(bucket, ()))
+        if pool is None:
+            pool = _LanePool(self, bucket,
+                             plan_batch_size(backlog, self.policy))
+            self._pools[bucket] = pool
+        else:
+            # a pool sized for a trickle must not serialize a later burst:
+            # when the backlog justifies more lanes, migrate the live rows
+            # into a wider pool (replace_lane surgery — in-flight DFS
+            # state resumes unchanged, so results are unaffected)
+            desired = plan_batch_size(pool.n_live() + backlog, self.policy)
+            if desired > pool.B:
+                pool = self._grow_pool(bucket, pool, desired)
+        return pool
+
+    def _grow_pool(self, bucket: BucketSpec, old: _LanePool,
+                   n_lanes: int) -> _LanePool:
+        new = _LanePool(self, bucket, n_lanes)
+        live = [i for i, r in enumerate(old.reqs) if r is not None]
+        if live:
+            ii = np.asarray(live)
+            new.state, new.ctx = ed.replace_lanes(
+                new.state, new.ctx, np.arange(len(live)),
+                jax.tree.map(lambda x: x[ii], old.state),
+                jax.tree.map(lambda x: x[ii], old.ctx))
+            for j, i in enumerate(live):
+                new.reqs[j] = old.reqs[i]
+                new._queue_s[j] = old._queue_s[i]
+                new._service_s[j] = old._service_s[i]
+                new._compile_s[j] = old._compile_s[i]
+        self._pools[bucket] = new
+        return new
+
+    def _poll_once(self) -> None:
+        """One scheduling round: for every bucket with work, refill free
+        lanes from its queue, run one bounded round, demux completions
+        into the stash, then enforce the step cap (evict-then-raise).
+        Demuxing BEFORE the cap check — and stashing rather than
+        returning — means a raise can never lose a computed result."""
+        for bucket in self._buckets_with_work():
+            queue = self._queues.setdefault(bucket, collections.deque())
+            pool = self._ensure_pool(bucket)
+            placed = pool.refill(queue, self)
+            self._n_lanes += placed
+            if pool.n_live() == 0:
+                del self._pools[bucket]
+                continue
+            self._n_pad_lanes += pool.B - pool.n_live()
+            pool.run_round(self)
+            self._completed.update(pool.demux(self))
+            pool.enforce_step_cap(self)
+            if pool.n_live() == 0 and not queue:
+                del self._pools[bucket]    # fully drained; next wave may
+                #                            plan a different lane count
+
+    def _take_completed(self) -> dict[int, MBEResult]:
+        out, self._completed = self._completed, {}
+        return out
+
+    def poll(self) -> dict[int, MBEResult]:
+        """One scheduling round; returns {rid: result} for requests that
+        finished (including any stashed by an earlier round that raised)."""
+        self._poll_once()
+        return self._take_completed()
+
+    def drain(self) -> dict[int, MBEResult]:
+        """Serve everything pending; returns {rid: result}.  After a
+        step-cap RuntimeError, calling ``drain`` again serves the
+        surviving requests and returns any stashed results."""
+        while self._buckets_with_work():
+            self._poll_once()
+        return self._take_completed()
 
     def flush(self) -> dict[int, MBEResult]:
-        """Serve everything pending; returns {rid: result}."""
-        by_bucket: dict[BucketSpec, list[Request]] = {}
-        for r in self._pending:
-            by_bucket.setdefault(r.bucket, []).append(r)
-        self._pending = []
-        results: dict[int, MBEResult] = {}
-        for bucket in sorted(by_bucket, key=lambda b: (b.n_u, b.n_v)):
-            group = by_bucket[bucket]
-            cfg = self._engine_config(bucket)
-            mb = self.policy.max_batch
-            for i in range(0, len(group), mb):
-                results.update(self._run_chunk(cfg, group[i:i + mb]))
-        return results
+        """Legacy whole-queue entry point (thin wrapper over ``drain``)."""
+        return self.drain()
 
     def serve(self, graphs: list[BipartiteGraph]) -> list[MBEResult]:
-        """Submit a whole stream and flush; results in submit order."""
-        rids = [self.submit(g) for g in graphs]
-        res = self.flush()
+        """Submit a whole stream and drain; results in submit order."""
+        rids = [self.admit(g) for g in graphs]
+        res = self.drain()
         return [res[rid] for rid in rids]
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
-        return dict(batches=self._n_batches, lanes=self._n_lanes,
+        total = self._total_lane_steps
+        return dict(batches=self._n_rounds, lanes=self._n_lanes,
                     pad_lanes=self._n_pad_lanes,
-                    pending=len(self._pending), **self.cache.stats())
+                    pending=sum(len(q) for q in self._queues.values()),
+                    in_flight=sum(p.n_live() for p in self._pools.values()),
+                    busy_steps=self._busy_steps,
+                    total_lane_steps=total,
+                    # idle slack: padding lanes AND real lanes waiting on
+                    # the round's critical path (vmap imbalance)
+                    idle_lane_steps=total - self._busy_steps,
+                    occupancy=(self._busy_steps / total) if total else 0.0,
+                    **self.cache.stats())

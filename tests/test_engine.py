@@ -122,3 +122,29 @@ def test_padded_graph_same_result():
     out = jax.jit(lambda s: ed.run(ctx, cfg, s))(s0)
     assert int(out.n_max) == int(base.n_max)
     assert int(out.cs) == int(base.cs)
+
+
+def test_make_context_vectorized_degrees_match_reference():
+    """The host-side degree pass is NumPy-vectorized (one popcount sweep,
+    zero device round-trips); ordering, ranks, and the counts-cache seed
+    must match the per-row jnp reference exactly, including ties (stable
+    argsort) and padded buckets."""
+    for n_u, n_v, pad_u, pad_v, seed in [(12, 10, 0, 0, 0),
+                                         (9, 17, 7, 15, 1),
+                                         (20, 36, 12, 28, 2),
+                                         (1, 1, 3, 31, 3),
+                                         (16, 33, 0, 31, 4)]:
+        g = _random_graph(n_u, n_v, 0.3, seed, canonical=False)
+        cfg = ed.EngineConfig(n_u=g.n_u + pad_u, n_v=g.n_v + pad_v,
+                              m_real=g.n_u, depth=g.n_u + 2)
+        ctx = ed.make_context(g, cfg)
+        adj = np.asarray(ctx.adj)
+        ref_deg = np.array([int(bitset.count(jnp.asarray(adj[u])))
+                            for u in range(g.n_u)], dtype=np.int64)
+        ref_order = np.argsort(ref_deg, kind="stable").astype(np.int32)
+        assert np.array_equal(np.asarray(ctx.order)[:g.n_u], ref_order)
+        assert np.array_equal(np.asarray(ctx.root_counts)[:g.n_u], ref_deg)
+        assert (np.asarray(ctx.order)[g.n_u:] == -1).all()
+        rank = np.asarray(ctx.rank)
+        assert np.array_equal(rank[ref_order], np.arange(g.n_u))
+        assert (rank[g.n_u:] == 2 * cfg.n_u).all()

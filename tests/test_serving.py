@@ -5,7 +5,11 @@
   the padded bucket shape is bit-identical to the exact shape;
 * executable-cache hit/miss accounting;
 * batched-vs-single-graph result equality on a mixed-size request stream
-  (counts, fingerprints, and decoded biclique sets).
+  (counts, fingerprints, and decoded biclique sets);
+* continuous-batching scheduler: admit/poll/drain, mid-flight lane refill
+  result identity, occupancy lift on a skewed stream, latency/compile
+  accounting, truncation flag, and queue preservation under a poisoned
+  in-flight batch.
 """
 import functools
 
@@ -17,6 +21,7 @@ from _hyp import given, settings, st
 from repro.baselines import (bicliques_to_key_set, enumerate_bruteforce,
                              enumerate_mbea)
 from repro.core import engine_dense as ed
+from repro.core.graph import BipartiteGraph
 from repro.data import dataset_suite
 from repro.serving import (BucketPolicy, ExecutableCache, MBEServer,
                            plan_batch_size, plan_bucket)
@@ -79,6 +84,34 @@ def test_plan_batch_size():
     assert plan_batch_size(100, pol) == 8
     nopad = BucketPolicy(max_batch=8, pad_batch=False)
     assert plan_batch_size(3, nopad) == 3
+
+
+def test_plan_batch_size_non_pow2_max_batch():
+    """A non-power-of-two ``max_batch`` with padding must NOT mint batch
+    sizes like {1, 2, 4, 6}: every planned size is a power of two capped
+    at the previous power of two (the executable-reuse promise)."""
+    pol = BucketPolicy(max_batch=6, pad_batch=True)
+    assert pol.lane_cap == 4
+    sizes = {plan_batch_size(n, pol) for n in range(1, 25)}
+    assert sizes == {1, 2, 4}
+    for b in sizes:
+        assert b & (b - 1) == 0 and b <= pol.max_batch
+    # no padding -> the cap is honoured verbatim
+    nopad = BucketPolicy(max_batch=6, pad_batch=False)
+    assert plan_batch_size(5, nopad) == 5
+    assert plan_batch_size(9, nopad) == 6
+
+
+def test_non_pow2_max_batch_server_end_to_end():
+    """Serving through a max_batch=6 policy keeps every cached executable
+    at a power-of-two lane count — and still returns correct results."""
+    graphs = [_random_graph(9, 13, 0.3, s) for s in range(6)]
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=6))
+    results = srv.serve(graphs)
+    for g, r in zip(graphs, results):
+        assert r.n_max == int(ed.enumerate_dense(g).n_max)
+    for (_cfg, batch, _budget) in srv.cache._entries:
+        assert batch & (batch - 1) == 0 and batch <= 6
 
 
 # ---------------------------------------------------------------------------
@@ -168,3 +201,209 @@ def test_dummy_lane_padding_is_inert():
     for r in res:
         assert r.n_max == int(ref.n_max)
         assert r.cs == int(ref.cs)
+
+
+# ---------------------------------------------------------------------------
+# continuous scheduler: slot admission + mid-flight lane refill
+# ---------------------------------------------------------------------------
+
+def _mixed_stream(n):
+    suite = dataset_suite("test")
+    out = list(suite.values())
+    s = 0
+    while len(out) < n:
+        out.append(_random_graph(5 + s % 14, 8 + (2 * s) % 25, 0.25, s))
+        s += 1
+    return out[:n]
+
+
+def test_continuous_mode_identical_to_flush_on_mixed_stream():
+    """Bounded rounds + mid-flight refill must be result-identical to
+    whole-batch flush on a 48-graph mixed stream: same (n_max, cs) per
+    request and bicliques decoded in the submitted orientation."""
+    graphs = _mixed_stream(48)
+    flush = MBEServer(BucketPolicy(mode="pow2", max_batch=4),
+                      collect_cap=128, collect=True)
+    cont = MBEServer(BucketPolicy(mode="pow2", max_batch=4,
+                                  steps_per_round=24),
+                     collect_cap=128, collect=True)
+    rf = flush.serve(graphs)
+    rc = cont.serve(graphs)
+    assert len(rc) == len(graphs)
+    for g, a, b in zip(graphs, rf, rc):
+        assert (a.n_max, a.cs) == (b.n_max, b.cs), g.name
+        assert bicliques_to_key_set(a.bicliques) == \
+            bicliques_to_key_set(b.bicliques), g.name
+    # every continuous executable is a round-mode entry: one per
+    # (bucket, batch) pair, with the round budget in the key
+    st_ = cont.stats()
+    assert st_["misses"] == st_["entries"]
+    assert st_["pending"] == 0 and st_["in_flight"] == 0
+    for (_cfg, _batch, budget) in cont.cache._entries:
+        assert budget == 24
+
+
+def test_refill_lifts_occupancy_on_skewed_stream():
+    """One heavy + many light same-bucket graphs: refilling finished lanes
+    mid-flight must yield strictly higher busy/total lane-step occupancy
+    than whole-batch flush, at identical results."""
+    from repro.data.generators import dense_small
+    heavy = dense_small(14, 28, p=0.55, seed=3, name="heavy")
+    lights = [_random_graph(10, 20, 0.1, s) for s in range(7)]
+    graphs = [heavy] + lights
+    occ, res = {}, {}
+    for label, spr in (("flush", 0), ("continuous", 16)):
+        srv = MBEServer(BucketPolicy(mode="pow2", max_batch=4,
+                                     steps_per_round=spr))
+        res[label] = srv.serve(graphs)
+        st_ = srv.stats()
+        occ[label] = st_["occupancy"]
+        assert st_["busy_steps"] + st_["idle_lane_steps"] == \
+            st_["total_lane_steps"]
+    for a, b in zip(res["flush"], res["continuous"]):
+        assert (a.n_max, a.cs) == (b.n_max, b.cs)
+    assert occ["continuous"] > occ["flush"]
+
+
+def test_admit_poll_drain_incremental():
+    """poll() advances one bounded round; results dribble out and drain()
+    finishes the rest.  Requests admitted mid-stream join the live pool."""
+    from repro.data.generators import dense_small
+    heavy = dense_small(14, 28, p=0.55, seed=3, name="heavy")
+    light = _random_graph(10, 20, 0.1, 0)
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=2,
+                                 steps_per_round=8))
+    rid_h = srv.admit(heavy)
+    rid_l = srv.admit(light)
+    got = {}
+    got.update(srv.poll())                      # heavy cannot finish in 8
+    assert rid_h not in got
+    rid_l2 = srv.admit(_random_graph(9, 19, 0.1, 1))   # mid-flight admit
+    for _ in range(400):
+        got.update(srv.poll())
+        if len(got) == 3:
+            break
+    assert set(got) == {rid_h, rid_l, rid_l2}
+    assert srv.stats()["pending"] == 0 and srv.stats()["in_flight"] == 0
+    assert got[rid_h].n_max == int(ed.enumerate_dense(heavy).n_max)
+    assert got[rid_l].n_max == int(ed.enumerate_dense(light).n_max)
+    # drain on an idle server is a no-op
+    assert srv.drain() == {}
+
+
+def test_pool_grows_for_burst_after_trickle():
+    """A pool created for a single request must widen (migrating the live
+    lane mid-DFS) when a burst of same-bucket graphs lands behind it,
+    instead of serializing the backlog one lane at a time."""
+    from repro.data.generators import dense_small
+    heavy = dense_small(14, 28, p=0.55, seed=3, name="heavy")
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=8,
+                                 steps_per_round=8))
+    rid_h = srv.admit(heavy)
+    srv.poll()                                   # creates a 1-lane pool
+    burst = [_random_graph(10, 20, 0.1, s) for s in range(7)]
+    rids = [srv.admit(g) for g in burst]
+    got = srv.drain()
+    batches = {b for (_c, b, _s) in srv.cache._entries}
+    assert max(batches) == 8                     # pool widened for the burst
+    assert got[rid_h].n_max == int(ed.enumerate_dense(heavy).n_max)
+    for g, rid in zip(burst, rids):
+        assert got[rid].n_max == int(ed.enumerate_dense(g).n_max)
+        assert got[rid].cs == int(ed.enumerate_dense(g).cs)
+
+
+def test_truncated_false_when_not_collecting():
+    """truncated flags a short bicliques list; with collect=False there is
+    no list, so it must stay False even when n_max exceeds the buffer."""
+    g = dataset_suite("test")["corp-leadership"]
+    srv = MBEServer(BucketPolicy(mode="pow2"), collect_cap=1, collect=False)
+    r = srv.serve([g])[0]
+    assert r.n_max > 1 and r.bicliques is None
+    assert not r.truncated
+
+
+def test_poisoned_chunk_preserves_other_buckets_requests():
+    """An in-flight batch blowing its step budget must NOT lose the other
+    buckets' queued requests (the old flush() cleared the whole pending
+    list up front)."""
+    poison = _random_graph(4, 12, 0.5, 7)        # bucket (4, 16), runs first
+    others = [_random_graph(12, 20, 0.3, s) for s in range(3)]  # (16, 32)
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=4,
+                                 steps_per_round=4),
+                    max_graph_steps=4)
+    srv.submit(poison)
+    for g in others:
+        srv.submit(g)
+    with pytest.raises(RuntimeError, match="max_graph_steps"):
+        srv.flush()
+    st_ = srv.stats()
+    assert st_["pending"] == len(others)         # unserved requests survive
+    assert st_["in_flight"] == 0                 # the poisoned lane evicted
+
+
+def test_completed_results_survive_step_cap_eviction():
+    """A lane finishing in the SAME round another lane blows the step cap
+    must not lose its computed result: demux happens before the cap check
+    and results are stashed across the raise; the runaway is evicted so
+    the server stays serviceable."""
+    from repro.data.generators import dense_small
+    runaway = dense_small(14, 28, p=0.55, seed=3, name="runaway")
+    light = _random_graph(9, 17, 0.08, 1)        # finishes within one round
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=2,
+                                 steps_per_round=64),
+                    max_graph_steps=64)
+    rid_r = srv.admit(runaway)
+    rid_l = srv.admit(light)
+    with pytest.raises(RuntimeError, match="max_graph_steps"):
+        srv.drain()
+    assert srv.stats()["in_flight"] == 0         # runaway evicted
+    got = srv.poll()                             # stashed result delivered
+    assert set(got) == {rid_l}
+    assert rid_r not in got
+    assert got[rid_l].n_max == int(ed.enumerate_dense(light).n_max)
+
+
+def test_truncated_flag_on_collect_overflow():
+    """More maximal bicliques than collect_cap: the result must say so
+    instead of quietly returning a short list."""
+    g = dataset_suite("test")["corp-leadership"]
+    n_true = int(ed.enumerate_dense(g).n_max)
+    assert n_true > 1                            # engineered to overflow
+    srv = MBEServer(BucketPolicy(mode="pow2"), collect_cap=1, collect=True)
+    r = srv.serve([g])[0]
+    assert r.truncated
+    assert r.n_max == n_true                     # count is still exact
+    assert len(r.bicliques) == 1                 # buffer-capped
+    big = MBEServer(BucketPolicy(mode="pow2"), collect_cap=256,
+                    collect=True)
+    r2 = big.serve([g])[0]
+    assert not r2.truncated
+    assert len(r2.bicliques) == n_true
+
+
+def test_submit_empty_graph_raises_value_error():
+    """Unservable graphs raise ValueError (a bare assert vanishes under
+    ``python -O``)."""
+    srv = MBEServer()
+    with pytest.raises(ValueError, match="not servable"):
+        srv.submit(BipartiteGraph.from_edges(0, 0, []))
+    assert srv.stats()["pending"] == 0
+
+
+def test_latency_and_compile_accounting():
+    """perf_counter latencies: compile time is reported separately, not
+    folded into service latency; cached second-wave requests pay zero."""
+    graphs = [_random_graph(10, 14, 0.3, s) for s in range(2)]
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=2))
+    first = srv.serve(graphs)
+    for r in first:
+        assert r.compile_s > 0                   # first wave compiled
+        assert r.service_s > 0
+        assert r.queue_s >= 0
+        assert abs(r.latency_s
+                   - (r.queue_s + r.service_s + r.compile_s)) < 1e-9
+    # same bucket, same lane count -> cache hit, zero compile charged
+    second = srv.serve([_random_graph(10, 14, 0.3, s) for s in (9, 10)])
+    for r in second:
+        assert r.compile_s == 0.0
+        assert r.service_s > 0
