@@ -1,6 +1,7 @@
 """Serving-layer benchmark: throughput vs per-graph latency across bucket
-policies on a mixed-size request stream, plus a skewed-stream comparison of
-whole-batch flush vs continuous lane refill.
+policies on a mixed-size request stream, a skewed-stream comparison of
+whole-batch flush vs continuous lane refill, and a mixed big+small stream
+served across a multi-device host mesh through the pluggable executors.
 
 Part 1 (``run``) — three serving configurations against the
 one-compile-per-graph baseline (a fresh jitted ``engine_dense`` runner per
@@ -28,12 +29,29 @@ The harness asserts the two modes are result-identical to per-graph runs
 STRICTLY higher lane occupancy (busy-steps / total lane-steps) with no new
 executable compiles beyond one round-mode entry per (bucket, batch) pair.
 
+Part 3 (``run_mixed_mesh``) — ONE heavy graph above the big-graph routing
+threshold plus >= 16 small graphs, served through ``ShardedExecutor`` (lane
+pools sharded over every visible device) with the heavy request routed to
+the work-stealing big-graph lane.  The harness asserts the mesh-served
+results are byte-identical to ``LocalExecutor`` and to per-graph runs
+(same biclique sets, counts, and fingerprints), and reports per-worker
+busy-step occupancy for the big lane — asserting the heavy graph's root
+tasks actually spread across >= 2 workers.  Run it on a forced host mesh:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m benchmarks.serving --mixed-mesh --big-graph-threshold 16
+
+``--json out.json`` (any mode) writes the result rows plus a summary
+(requests / wall_s / occupancy / compiles) as a machine-readable artifact
+— CI uploads it per run to seed the perf trajectory.
+
   python -m benchmarks.serving --requests 32
   python -m benchmarks.serving --skewed --requests 12 --steps-per-round 64
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -43,7 +61,8 @@ from repro.baselines import bicliques_to_key_set
 from repro.core import engine_dense as ed
 from repro.data.generators import (dense_small, random_bipartite,
                                    random_graph_stream)
-from repro.serving import BucketPolicy, MBEServer
+from repro.serving import (BucketPolicy, LocalExecutor, MBEServer,
+                           ShardedExecutor)
 
 COLLECT_CAP = 4096
 
@@ -177,6 +196,117 @@ def run_skewed(n_requests: int = 12, seed: int = 0, max_batch: int = 4,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# mixed big+small stream across a multi-device host mesh
+# ---------------------------------------------------------------------------
+
+def mixed_mesh_stream(n_small: int, threshold: int, seed: int = 0) -> list:
+    """ONE heavy graph at/above the routing threshold + ``n_small`` light
+    graphs strictly below it (so exactly one request routes big)."""
+    if threshold < 9:
+        raise SystemExit(
+            f"--big-graph-threshold must be >= 9 for the mixed-mesh "
+            f"stream (small graphs draw n_u from [6, threshold-2)); "
+            f"got {threshold}")
+    rng = np.random.default_rng(seed)
+    heavy = dense_small(threshold + 2, 2 * threshold + 4, p=0.5, seed=seed,
+                        name="req0-heavy")
+    assert heavy.n_u >= threshold
+    out = [heavy]
+    for i in range(1, n_small + 1):
+        n_u = int(rng.integers(6, threshold - 2))
+        n_v = int(rng.integers(n_u, 2 * n_u + 8))
+        out.append(random_bipartite(n_u, n_v, p=0.18,
+                                    seed=int(rng.integers(1 << 30)),
+                                    name=f"req{i}-small"))
+    assert all(g.n_u < threshold for g in out[1:])
+    return out
+
+
+def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
+                   steps_per_round: int = 32, threshold: int = 16) -> list:
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        print(f"[serving-mesh] WARNING: only {n_dev} visible device(s); "
+              f"force a host mesh with XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8 (running anyway "
+              f"— the big lane still over-decomposes via vmap workers)")
+    graphs = mixed_mesh_stream(n_small, threshold, seed=seed)
+    refs = []
+    for g in graphs:
+        out = ed.enumerate_dense(g, collect_cap=COLLECT_CAP)
+        assert int(out.n_max) <= COLLECT_CAP, g.name
+        cfg = ed.make_config(g, collect_cap=COLLECT_CAP)
+        refs.append((int(out.n_max), int(out.cs),
+                     bicliques_to_key_set(
+                         ed.collected_bicliques(cfg, out, g.n_u, g.n_v))))
+
+    from repro.sharding.axes import mbe_serve_mesh
+    pol = BucketPolicy(mode="pow2", max_batch=max_batch,
+                       steps_per_round=steps_per_round,
+                       big_graph_threshold=threshold)
+    # total big-lane stealing workers >= 8 regardless of mesh width, so
+    # the spread assertion is meaningful even on narrow hosts
+    wpd = max(1, 8 // n_dev)
+    executors = [
+        ("local", LocalExecutor(big_workers=8)),
+        ("sharded", ShardedExecutor(mbe_serve_mesh(),
+                                    big_workers_per_device=wpd)),
+    ]
+    rows = []
+    for label, ex in executors:
+        srv = MBEServer(pol, collect_cap=COLLECT_CAP, collect=True,
+                        executor=ex)
+        t0 = time.perf_counter()
+        results = srv.serve(graphs)
+        wall = time.perf_counter() - t0
+        st = srv.stats()
+        # --- byte-identical to per-graph runs, graph by graph ---------
+        for g, r, (ref_n, ref_cs, ref_set) in zip(graphs, results, refs):
+            assert (r.n_max, r.cs) == (ref_n, ref_cs), (label, g.name)
+            assert bicliques_to_key_set(r.bicliques) == ref_set, \
+                (label, g.name)
+        busy = np.array(st["big_busy_per_worker"], dtype=np.int64)
+        spread = int((busy > 0).sum())
+        assert spread >= 2, \
+            f"{label}: heavy graph's root tasks not spread: {busy}"
+        rows.append(dict(executor=label, devices=n_dev,
+                         requests=len(graphs), wall_s=round(wall, 3),
+                         rounds=st["batches"], compiles=st["misses"],
+                         occupancy=round(st["occupancy"], 3),
+                         big_workers=len(busy), big_workers_busy=spread,
+                         big_busy_per_worker=busy.tolist()))
+        print(f"[serving-mesh] {label} ({n_dev} dev): occupancy "
+              f"{st['occupancy']:.3f}, {st['misses']} compiles, "
+              f"{wall:.2f}s; heavy graph busy-steps/worker {busy.tolist()}"
+              f" ({spread}/{len(busy)} workers busy) — results "
+              f"byte-identical to per-graph runs")
+    routed_big = sum(1 for e in srv.routing_log
+                     if e["event"] == "route" and e["route"] == "big")
+    assert routed_big == 1, f"expected exactly 1 big route, {routed_big}"
+    print(f"[serving-mesh] sharded == local == per-graph on "
+          f"{len(graphs)} requests (1 routed big, {n_small} small)")
+    return rows
+
+
+def _write_json(path: str, mode: str, rows: list, requests: int) -> None:
+    """Machine-readable bench artifact: rows + a flat summary of the
+    headline series (the last row = the configuration under test)."""
+    head = rows[-1]
+    summary = dict(
+        mode=mode,
+        requests=requests,
+        wall_s=head.get("wall_s"),
+        occupancy=head.get("occupancy"),
+        compiles=head.get("compiles"),
+        graphs_per_s=head.get("graphs_per_s"),
+    )
+    with open(path, "w") as f:
+        json.dump(dict(benchmark="serving", mode=mode, summary=summary,
+                       rows=rows), f, indent=2, sort_keys=True)
+    print(f"[serving] wrote {path}")
+
+
 def _print_table(rows: list) -> None:
     keys = list(rows[0])
     print("\n" + "  ".join(f"{k:>16}" for k in keys))
@@ -193,16 +323,39 @@ def main() -> int:
     ap.add_argument("--skewed", action="store_true",
                     help="skewed-stream flush-vs-continuous comparison "
                          "instead of the bucket-policy sweep")
+    ap.add_argument("--mixed-mesh", action="store_true",
+                    help="mixed big+small stream across the host mesh: "
+                         "ShardedExecutor + big-graph work-stealing lane "
+                         "vs LocalExecutor vs per-graph runs")
+    ap.add_argument("--big-graph-threshold", type=int, default=16,
+                    help="mixed-mesh mode: routing threshold (root tasks)")
     ap.add_argument("--steps-per-round", type=int, default=64)
+    ap.add_argument("--json", type=str, default=None, metavar="OUT",
+                    help="write rows + summary (requests/wall_s/occupancy/"
+                         "compiles) as a machine-readable JSON artifact")
     args = ap.parse_args()
-    if args.skewed:
+    if args.mixed_mesh:
+        mode = "mixed-mesh"
+        n_small = max(args.requests - 1, 16)     # >= 16 small + 1 heavy
+        rows = run_mixed_mesh(n_small, seed=args.seed,
+                              max_batch=args.max_batch or 8,
+                              steps_per_round=args.steps_per_round,
+                              threshold=args.big_graph_threshold)
+        requests = n_small + 1
+    elif args.skewed:
+        mode = "skewed"
         rows = run_skewed(args.requests, seed=args.seed,
                           max_batch=args.max_batch or 4,
                           steps_per_round=args.steps_per_round)
+        requests = args.requests
     else:
+        mode = "policies"
         rows = run(args.requests, seed=args.seed,
                    max_batch=args.max_batch or 8)
+        requests = args.requests
     _print_table(rows)
+    if args.json:
+        _write_json(args.json, mode, rows, requests)
     return 0
 
 

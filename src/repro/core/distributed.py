@@ -117,7 +117,8 @@ def state_specs(cfg: ed.EngineConfig, n_workers: int) -> ed.DenseState:
 def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
                   axis_names: tuple[str, ...],
                   dist: DistConfig = DistConfig(),
-                  ctx_batched: bool = False):
+                  ctx_batched: bool = False,
+                  with_telemetry: bool = False):
     """The jitted work-stealing round: (ctx, state) -> state.
 
     Graph context is an explicit argument (replicated over the mesh) so the
@@ -130,6 +131,19 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
     leaves carry a leading worker axis (one graph per lane, sharded like
     the state) — the multi-graph serving layout; work stealing must be off
     because root-task indices are graph-local.
+
+    ``with_telemetry=True`` changes the signature to
+    ``(ctx, state) -> (state, telemetry)`` where telemetry is a dict of
+    per-worker ``(W,)`` arrays computed in-graph:
+
+    * ``busy_steps`` — engine steps each worker actually advanced this
+      round (its slice of the round's work, the Fig.-5 load data), and
+    * ``pending``    — unstarted root tasks left in each worker's queue
+      AFTER the steal re-deal (what a scheduler needs to decide whether
+      the lane is starving or saturated).
+
+    The serving executors consume the telemetry form; the classic driver
+    keeps the bare-state form for backward compatibility.
     """
     if ctx_batched and dist.work_stealing:
         raise ValueError("work stealing requires a shared graph context: "
@@ -140,38 +154,42 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
     n_workers = n_dev * wpd
     T = cfg.m_real  # queue capacity: every worker could end up with all roots
 
-    def _per_device(ctx: ed.GraphContext,
-                    s: ed.DenseState) -> ed.DenseState:
+    def _per_device(ctx: ed.GraphContext, s: ed.DenseState):
         # s leaves have leading dim = workers_per_device
+        steps_before = s.steps
         s = ed.run_batch(ctx, cfg, s, max_steps=dist.steps_per_round,
                          ctx_batched=ctx_batched)
-        if not dist.work_stealing:
+        busy = s.steps - steps_before                    # (wpd,)
+        if dist.work_stealing:
+            # ---- work-stealing barrier -------------------------------
+            ax = axis_names if len(axis_names) > 1 else axis_names[0]
+            all_tasks = jax.lax.all_gather(s.tasks, ax, axis=0, tiled=True)
+            all_tpos = jax.lax.all_gather(s.tpos, ax, axis=0, tiled=True)
+            all_ntask = jax.lax.all_gather(s.n_tasks, ax, axis=0, tiled=True)
+            flat, total = _flatten_pending(
+                all_tasks.reshape(n_workers, T),
+                all_tpos.reshape(n_workers),
+                all_ntask.reshape(n_workers))
+            dev_id = jax.lax.axis_index(ax)
+            w_ids = dev_id * wpd + jnp.arange(wpd)
+            new_tasks, new_n = jax.vmap(
+                lambda w: _deal_strided(flat, total, w, n_workers, T))(w_ids)
+            s = s._replace(tasks=new_tasks, n_tasks=new_n,
+                           tpos=jnp.zeros((wpd,), jnp.int32))
+        if not with_telemetry:
             return s
-        # ---- work-stealing barrier -----------------------------------
-        ax = axis_names if len(axis_names) > 1 else axis_names[0]
-        all_tasks = jax.lax.all_gather(s.tasks, ax, axis=0, tiled=True)
-        all_tpos = jax.lax.all_gather(s.tpos, ax, axis=0, tiled=True)
-        all_ntask = jax.lax.all_gather(s.n_tasks, ax, axis=0, tiled=True)
-        flat, total = _flatten_pending(
-            all_tasks.reshape(n_workers, T),
-            all_tpos.reshape(n_workers),
-            all_ntask.reshape(n_workers))
-        dev_id = jax.lax.axis_index(ax)
-        w_ids = dev_id * wpd + jnp.arange(wpd)
-        new_tasks, new_n = jax.vmap(
-            lambda w: _deal_strided(flat, total, w, n_workers, T))(w_ids)
-        return s._replace(tasks=new_tasks, n_tasks=new_n,
-                          tpos=jnp.zeros((wpd,), jnp.int32))
+        telem = dict(busy_steps=busy, pending=s.n_tasks - s.tpos)
+        return s, telem
 
     spec_leaf = P(axis_names)
     ctx_spec = spec_leaf if ctx_batched else P()
+    out_spec = (spec_leaf, spec_leaf) if with_telemetry else spec_leaf
 
     @jax.jit
-    def round_fn(ctx: ed.GraphContext,
-                 state: ed.DenseState) -> ed.DenseState:
+    def round_fn(ctx: ed.GraphContext, state: ed.DenseState):
         return shard_map_compat(
             _per_device, mesh=mesh,
-            in_specs=(ctx_spec, spec_leaf), out_specs=spec_leaf)(ctx, state)
+            in_specs=(ctx_spec, spec_leaf), out_specs=out_spec)(ctx, state)
 
     return round_fn, n_workers, T
 

@@ -421,8 +421,8 @@ def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
 
 
 def replace_lane(batch_state: DenseState, batch_ctx: GraphContext, i: int,
-                 lane_state: DenseState, lane_ctx: GraphContext
-                 ) -> tuple[DenseState, GraphContext]:
+                 lane_state: DenseState, lane_ctx: GraphContext,
+                 sharding=None) -> tuple[DenseState, GraphContext]:
     """Row surgery on a batched (state, context) pair: install one lane's
     fresh ``DenseState``/``GraphContext`` into row ``i``, leaving every
     other lane's rows untouched.
@@ -433,23 +433,34 @@ def replace_lane(batch_state: DenseState, batch_ctx: GraphContext, i: int,
     the SAME compiled ``run_batch`` executable keeps all lanes busy across
     an arbitrary-length request stream — the serving-side analog of cuMBE's
     work stealing for vmap-lane imbalance.
+
+    ``sharding`` (a ``jax.sharding.Sharding``) re-pins every output leaf,
+    for pools whose lane axis lives on a device mesh: the eager scatter
+    does not promise to preserve the input's named sharding, so without
+    the re-pin a surgically-edited pool would silently de-shard and the
+    next round's ``shard_map`` would pay a full reshard.  The ``device_put``
+    allocates fresh buffers (donation-safe: the pre-surgery pool is never
+    aliased into the round executable's donated inputs).
     """
     def put(b, lane):
-        return b.at[i].set(lane)
+        out = b.at[i].set(lane)
+        return out if sharding is None else jax.device_put(out, sharding)
     return (jax.tree.map(put, batch_state, lane_state),
             jax.tree.map(put, batch_ctx, lane_ctx))
 
 
 def replace_lanes(batch_state: DenseState, batch_ctx: GraphContext,
-                  idx, lane_states: DenseState, lane_ctxs: GraphContext
-                  ) -> tuple[DenseState, GraphContext]:
+                  idx, lane_states: DenseState, lane_ctxs: GraphContext,
+                  sharding=None) -> tuple[DenseState, GraphContext]:
     """Vectorized ``replace_lane``: install ``len(idx)`` lanes (leading
     axis of every ``lane_states``/``lane_ctxs`` leaf) with ONE scatter per
-    leaf, instead of one full-batch copy per lane — the refill hot path."""
+    leaf, instead of one full-batch copy per lane — the refill hot path.
+    ``sharding`` re-pins output leaves as in ``replace_lane``."""
     ii = jnp.asarray(idx, dtype=jnp.int32)
 
     def put(b, lanes):
-        return b.at[ii].set(lanes)
+        out = b.at[ii].set(lanes)
+        return out if sharding is None else jax.device_put(out, sharding)
     return (jax.tree.map(put, batch_state, lane_states),
             jax.tree.map(put, batch_ctx, lane_ctxs))
 

@@ -16,11 +16,21 @@ compiled-executable cache (see that package's docstrings for the model).
 and refilled mid-flight from the pending queue, lifting lane occupancy on
 skewed streams — the same slot model the LM decode loop below uses.
 
+Execution backends: ``--mesh N`` serves through ``ShardedExecutor`` on a
+1-D serving mesh over N host devices (force host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``); the default is
+the single-device ``LocalExecutor``.  ``--big-graph-threshold K`` routes
+requests with >= K root tasks to the work-stealing big-graph lane.  Every
+request's routing decision and every pool's lane placement is printed
+(``[route]``/``[pool]`` lines) so operators can see why a request queued
+where it did.
+
 Usage:
   python -m repro.launch.serve --arch qwen3-1.7b --smoke \
       --requests 8 --max-new 32
   python -m repro.launch.serve --mbe --requests 32 --policy pow2
   python -m repro.launch.serve --mbe --continuous --steps-per-round 64
+  python -m repro.launch.serve --mbe --mesh 8 --big-graph-threshold 16
 """
 from __future__ import annotations
 
@@ -41,22 +51,46 @@ from repro.sharding import axes as A
 from repro.sharding.auto import make_rules
 
 
+def _print_routing(server) -> None:
+    """Per-request routing decisions + per-bucket placements, so operators
+    can see which executor served what, with how many lanes, where."""
+    for e in server.routing_log:
+        if e["event"] == "route":
+            print(f"[route] rid={e['rid']} {e['graph']}: -> {e['route']} "
+                  f"(bucket {e['bucket']}, executor={e['executor']}) — "
+                  f"{e['reason']}")
+        elif e["event"] in ("pool", "pool-grow"):
+            grew = (f" (grown from {e['was']})"
+                    if e["event"] == "pool-grow" else "")
+            print(f"[pool]  bucket {e['bucket']}: {e['lanes']} lanes on "
+                  f"{e['placement']}{grew}")
+        elif e["event"] == "big-lane":
+            print(f"[big]   rid={e['rid']} {e['graph']}: {e['placement']}")
+
+
 def serve_mbe(args) -> dict:
     """Serve a synthetic mixed-size MBE request stream."""
     from repro.data.generators import random_graph_stream
-    from repro.serving import BucketPolicy, MBEServer
+    from repro.serving import BucketPolicy, MBEServer, ShardedExecutor
     graphs = random_graph_stream(args.requests, seed=args.seed)
     spr = args.steps_per_round if args.continuous else 0
     policy = BucketPolicy(mode=args.policy, max_batch=args.max_batch,
-                          steps_per_round=spr)
-    server = MBEServer(policy)
+                          steps_per_round=spr,
+                          big_graph_threshold=args.big_graph_threshold)
+    executor = None
+    if args.mesh:
+        from repro.sharding.axes import mbe_serve_mesh
+        executor = ShardedExecutor(mbe_serve_mesh(args.mesh))
+    server = MBEServer(policy, executor=executor)
     t0 = time.perf_counter()
     results = server.serve(graphs)
     dt = time.perf_counter() - t0
     stats = server.stats()
     n_max = sum(r.n_max for r in results)
     mode = f"continuous(r={spr})" if args.continuous else "flush"
+    _print_routing(server)
     print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
+          f"executor={stats['executor']}, "
           f"{mode}: {n_max} maximal bicliques, "
           f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
@@ -77,6 +111,12 @@ def serve(argv=None) -> dict:
                          "mid-flight lane refill")
     ap.add_argument("--steps-per-round", type=int, default=64,
                     help="MBE continuous mode: engine steps per round")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="MBE: serve through ShardedExecutor on a 1-D "
+                         "mesh over N host devices (0 = LocalExecutor)")
+    ap.add_argument("--big-graph-threshold", type=int, default=None,
+                    help="MBE: route graphs with >= K root tasks to the "
+                         "work-stealing big-graph lane")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)

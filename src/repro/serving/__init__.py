@@ -3,23 +3,36 @@
 The inverse batching problem to the paper's: cuMBE decomposes ONE graph
 across many workers; a production service receives MANY (small) graphs
 from many users and must amortize both accelerator occupancy and XLA
-compilation across them.  Three pieces:
+compilation across them.  Four pieces:
 
 * ``buckets``   — shape-bucketing planner: pads requests into a small set
   of canonical ``(n_u, n_v, depth)`` buckets (enumeration on a padded
-  graph is bit-identical; see ``buckets`` module docstring) and plans
-  power-of-two lane counts.
-* ``cache``     — compiled-executable cache keyed on
-  ``(EngineConfig, batch, round_budget)`` with honest hit/miss (= compile)
-  counters and self-timed compilation (``compile_s``).
+  graph is bit-identical; see ``buckets`` module docstring), plans
+  power-of-two lane counts, and routes oversized requests
+  (``plan_route``/``BucketPolicy.big_graph_threshold``) to the
+  work-stealing big-graph lane.
+* ``cache``     — LRU-bounded compiled-executable cache keyed per backend
+  (``(EngineConfig | backend-qualified key, batch, round_budget)``) with
+  honest hit/miss (= compile) counters, eviction counting, and self-timed
+  compilation (``compile_s``).
+* ``executor``  — pluggable execution backends behind one ``Executor``
+  interface: ``LocalExecutor`` (single-device vmap lane pools),
+  ``ShardedExecutor`` (lane pools sharded over a serving mesh, one host
+  poll advances every device in lockstep), and the ``BigGraphLane``
+  (cuMBE's shared-graph work-stealing layout for routed-big requests).
 * ``scheduler`` — ``MBEServer``: slot-based continuous scheduler.  Per
   bucket, a live lane pool runs in bounded rounds; finished lanes are
   demuxed immediately and refilled in place from the pending queue
   (``admit``/``poll``/``drain``, with ``flush``/``serve`` kept as
-  whole-queue wrappers).  See the module docstring for the slot model.
+  whole-queue wrappers).  All execution is delegated through the
+  ``Executor`` interface; routing decisions land in ``routing_log``.
 """
 from repro.serving.buckets import (BucketPolicy, BucketSpec,  # noqa: F401
-                                   plan_batch_size, plan_bucket)
+                                   plan_batch_size, plan_bucket,
+                                   plan_route)
 from repro.serving.cache import CacheEntry, ExecutableCache    # noqa: F401
+from repro.serving.executor import (BigGraphLane, Executor,    # noqa: F401
+                                    LanePool, LocalExecutor,
+                                    RoundTelemetry, ShardedExecutor)
 from repro.serving.scheduler import (MBEResult, MBEServer,     # noqa: F401
                                      Request)

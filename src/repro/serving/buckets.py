@@ -46,6 +46,16 @@ class BucketPolicy:
     #                           (whole-batch flush semantics); > 0 bounds
     #                           every engine call so finished lanes can be
     #                           refilled mid-flight from the pending queue
+    big_graph_threshold: int | None = None
+    #                           routing: a (canonical) graph with n_u >=
+    #                           threshold root tasks is NOT placed in a
+    #                           vmap lane — one lane would serialize the
+    #                           whole subtree forest behind the bucket's
+    #                           round barrier.  It routes to the dedicated
+    #                           big-graph lane instead: cuMBE's shared-graph
+    #                           decomposition (root tasks spread over every
+    #                           mesh worker, work stealing at round
+    #                           barriers).  None disables big-graph routing.
 
     @property
     def lane_cap(self) -> int:
@@ -97,6 +107,24 @@ def plan_bucket(g: BipartiteGraph, policy: BucketPolicy) -> BucketSpec:
     # be a bucket constant (not the graph's), or it would leak the request
     # shape back into the executable key.
     return BucketSpec(n_u=nu, n_v=nv, depth=nu + 2)
+
+
+def plan_route(g: BipartiteGraph, policy: BucketPolicy) -> str:
+    """Route a (canonical-orientation) request: ``"lane"`` places it in a
+    bucket lane pool (one graph per vmap lane), ``"big"`` sends it to the
+    work-stealing big-graph lane (one graph decomposed into root tasks
+    across every mesh worker).
+
+    The routing key is the canonical ``n_u`` — the number of first-level
+    subtrees, i.e. the graph's supply of stealable root tasks.  Below the
+    threshold a graph cannot feed multiple workers anyway; at or above it,
+    keeping the graph in one lane would make every other lane of its
+    bucket wait on one worker's serial DFS (the exact imbalance cuMBE's
+    work stealing removes).
+    """
+    big = (policy.big_graph_threshold is not None
+           and g.n_u >= policy.big_graph_threshold)
+    return "big" if big else "lane"
 
 
 def plan_batch_size(n_pending: int, policy: BucketPolicy) -> int:

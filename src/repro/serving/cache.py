@@ -1,13 +1,16 @@
 """Compiled-executable cache for the serving layer.
 
-One cache entry per ``(EngineConfig, batch_size, round_budget)``: each entry
-owns its own ``jax.jit`` wrapper around ``engine_dense.run_batch`` with
-every shape pinned, so entry creation corresponds 1:1 to an XLA compilation
-on first call and the hit/miss counters are an honest compile count
-(``jax.jit``'s internal per-shape cache never silently recompiles behind a
-"hit").
+One cache entry per executable identity: for the local backend that is
+``(EngineConfig, batch_size, round_budget)``; the sharded and work-stealing
+backends prepend their placement (mesh + axis + workers-per-device) to the
+config slot, so one server process can serve the same bucket through
+different backends without the entries colliding.  Each entry owns its own
+``jax.jit`` wrapper with every shape pinned, so entry creation corresponds
+1:1 to an XLA compilation on first call and the hit/miss counters are an
+honest compile count (``jax.jit``'s internal per-shape cache never silently
+recompiles behind a "hit").
 
-Two entry flavours share the cache:
+Entry flavours sharing the cache:
 
 * **drain entries** (``round_budget=None``) run a batch to completion —
   the whole-batch flush path.
@@ -16,11 +19,23 @@ Two entry flavours share the cache:
   refill them between rounds.  Because the budget is part of the key, a
   continuous stream costs exactly ONE round-mode compile per
   ``(bucket, batch)`` pair, no matter how many rounds it runs.
+* **backend entries** (via ``get_entry``) wrap an arbitrary jitted round
+  function — the ``ShardedExecutor``'s mesh-placed ``shard_map`` round and
+  the big-graph lane's work-stealing round.  AOT compile timing works the
+  same way for every backend: the entry times its own ``lower().compile()``.
 
 Entries also time their own XLA compilation: the first call AOT-lowers and
 compiles (``jit.lower(...).compile()``) with ``time.perf_counter`` around
 it, so schedulers can report ``compile_s`` separately instead of folding a
 first-call compile into some unlucky request's service latency.
+
+**Capacity** — the cache is an LRU bounded at ``capacity`` entries (a
+policy knob, default generous: a long-lived server sees a handful of
+buckets x batch sizes x backends, nowhere near the default).  Without the
+bound, a server fed adversarial or drifting shape traffic would accrete
+compiled executables forever; with it, the coldest entry is dropped and
+honestly recompiled if that shape ever returns (``evictions`` in
+``stats()`` counts the drops).
 
 This is what turns shape bucketing into throughput: a mixed stream of
 requests collapses onto a handful of entries, amortizing compilation
@@ -28,7 +43,9 @@ across every graph that ever lands in the same bucket.
 """
 from __future__ import annotations
 
+import collections
 import time
+from typing import Callable
 
 import jax
 
@@ -55,42 +72,74 @@ class CacheEntry:
     def compiled(self) -> bool:
         return self._compiled is not None
 
-    def __call__(self, ctx: ed.GraphContext, s: ed.DenseState) -> ed.DenseState:
+    def __call__(self, ctx: ed.GraphContext, s: ed.DenseState):
         if self._compiled is None:
             t0 = time.perf_counter()
             self._compiled = self._jit.lower(ctx, s).compile()
             self.compile_s = time.perf_counter() - t0
         return self._compiled(ctx, s)
 
+    def timed_call(self, ctx: ed.GraphContext, s: ed.DenseState):
+        """Blocking call with the round-accounting split every backend
+        needs: returns ``(out, wall_s, compile_s)`` where ``wall_s`` is
+        the full blocked wall time and ``compile_s`` is the XLA compile
+        charged to THIS call (0.0 whenever the entry was already
+        compiled — compilation is never billed twice)."""
+        was_compiled = self.compiled
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(self(ctx, s))
+        wall = time.perf_counter() - t0
+        return out, wall, (0.0 if was_compiled else self.compile_s)
+
 
 class ExecutableCache:
-    def __init__(self):
-        self._entries: dict = {}
+    """LRU cache of ``CacheEntry`` objects, bounded at ``capacity``."""
+
+    DEFAULT_CAPACITY = 256
+
+    def __init__(self, capacity: int | None = DEFAULT_CAPACITY):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        self.capacity = capacity
+        self._entries: collections.OrderedDict = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
-    def get_round(self, cfg: ed.EngineConfig, batch: int,
-                  max_steps: int | None = None) -> CacheEntry:
-        """Batched enumeration executable: (ctx, state) -> state, where all
-        leaves carry a leading axis of size ``batch``.  ``max_steps`` bounds
-        every lane to that many engine steps per call (None = run to
-        completion); it is baked into the executable, hence part of the
-        cache key."""
-        key = (cfg, batch, max_steps)
+    # ------------------------------------------------------------------
+    def get_entry(self, key, build: Callable[[], object]) -> CacheEntry:
+        """Generic keyed lookup: on miss, ``build()`` must return a jitted
+        ``(ctx, state) -> ...`` function which is wrapped in a lazily
+        AOT-compiled ``CacheEntry``.  Executors use this to register their
+        backend-specific round functions under backend-qualified keys."""
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
+            self._entries.move_to_end(key)      # LRU touch
             return entry
         self.misses += 1
-
-        @jax.jit
-        def fn(ctx: ed.GraphContext, s: ed.DenseState) -> ed.DenseState:
-            return ed.run_batch(ctx, cfg, s, max_steps=max_steps,
-                                ctx_batched=True)
-
-        entry = CacheEntry(fn)
+        entry = CacheEntry(build())
         self._entries[key] = entry
+        if self.capacity is not None and len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)   # drop the coldest
+            self.evictions += 1
         return entry
+
+    def get_round(self, cfg: ed.EngineConfig, batch: int,
+                  max_steps: int | None = None) -> CacheEntry:
+        """Local-backend batched enumeration executable: (ctx, state) ->
+        state, where all leaves carry a leading axis of size ``batch``.
+        ``max_steps`` bounds every lane to that many engine steps per call
+        (None = run to completion); it is baked into the executable, hence
+        part of the cache key."""
+        def build():
+            @jax.jit
+            def fn(ctx: ed.GraphContext, s: ed.DenseState) -> ed.DenseState:
+                return ed.run_batch(ctx, cfg, s, max_steps=max_steps,
+                                    ctx_batched=True)
+            return fn
+
+        return self.get_entry((cfg, batch, max_steps), build)
 
     def get(self, cfg: ed.EngineConfig, batch: int) -> CacheEntry:
         """Run-to-completion executable (drain entry)."""
@@ -98,4 +147,4 @@ class ExecutableCache:
 
     def stats(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
-                    entries=len(self._entries))
+                    entries=len(self._entries), evictions=self.evictions)

@@ -1,0 +1,385 @@
+"""Pluggable execution backends for the MBE serving layer (DESIGN.md §6).
+
+``MBEServer`` used to own its execution path outright: single-device
+``run_batch`` lane pools, advanced in bounded rounds with ``replace_lane``
+row surgery.  That is ONE point in a larger design space — cuMBE's hybrid
+parallelism (PAPER.md §IV) pairs the inverse decomposition (many small
+graphs, one lane each) with the direct one (one big graph fanned out over
+all workers, balanced by work stealing).  This module extracts the
+execution path behind an ``Executor`` interface so the scheduler can serve
+both shapes of traffic from one mesh:
+
+* ``LocalExecutor``   — today's single-device lane pools, unchanged: one
+  vmap lane per graph, one cached ``run_batch`` executable per
+  ``(bucket, batch, budget)``.
+* ``ShardedExecutor`` — the same lane-pool contract placed across a
+  ``jax.sharding.Mesh``: the pool's batch axis is sharded over the serving
+  axis (``sharding.axes.MBE_LANE_AXIS``) and each round is ONE
+  ``distributed.make_round_fn(ctx_batched=True)`` call, so a single host
+  poll advances every device's lanes in lockstep bounded rounds.
+* ``BigGraphLane``    — the work-stealing layout for requests above the
+  routing threshold (``buckets.plan_route``): ONE graph decomposed into
+  root tasks strided across every mesh worker
+  (``ctx_batched=False, work_stealing=True``), stealing pending tasks at
+  round barriers, so a heavy graph no longer serializes behind one vmap
+  lane while small-graph buckets fill the rest of the mesh.  Both
+  executors can mint one; ``LocalExecutor`` runs it as a vmap'd worker
+  batch on a one-device mesh (cuMBE's many-TBs-per-SM analog),
+  ``ShardedExecutor`` spreads it over the whole serving mesh.
+
+The scheduler speaks ONLY this interface: lane planning, pool creation,
+refill installation, round execution, demux views, eviction, and pool
+migration all go through executor methods — ``MBEServer`` itself contains
+no ``run_batch``/``replace_lane`` calls.  Executables are cached in the
+scheduler's ``ExecutableCache`` under backend-qualified keys (mesh + axis
++ workers-per-device prepended to the config slot), so one server can mix
+backends without entry collisions, and every backend's compile time is
+AOT-timed the same way.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import distributed as dd
+from repro.core import engine_dense as ed
+from repro.serving.buckets import BucketPolicy, plan_batch_size
+from repro.serving.cache import ExecutableCache
+from repro.sharding.axes import MBE_LANE_AXIS
+
+# Round budget for the big-graph lane when the bucket policy runs
+# unbounded rounds (steps_per_round == 0): work stealing only happens at
+# round barriers, so the big lane must stay bounded even in flush mode.
+DEFAULT_BIG_ROUND_STEPS = 2048
+
+
+def fresh_lane_state(cfg: ed.EngineConfig, n_tasks: int) -> ed.DenseState:
+    """Worker state owning root tasks [0, n_tasks), task queue padded to the
+    bucket-wide capacity ``cfg.n_u`` so every lane has identical shapes."""
+    s = ed.init_state(cfg, np.arange(n_tasks, dtype=np.int32))
+    pad = np.full(cfg.n_u, -1, np.int32)
+    pad[:n_tasks] = np.arange(n_tasks, dtype=np.int32)
+    return s._replace(tasks=jnp.asarray(pad))
+
+
+def dummy_context(cfg: ed.EngineConfig) -> ed.GraphContext:
+    """All-zero context for idle lanes (paired with ``fresh_lane_state(cfg,
+    0)`` the lane is born done and never reads it)."""
+    return ed.GraphContext(
+        adj=jnp.zeros((cfg.n_u, cfg.wv), jnp.uint32),
+        order=jnp.zeros((cfg.n_u,), jnp.int32),
+        rank=jnp.zeros((cfg.n_u,), jnp.int32),
+        l_root=jnp.zeros((cfg.wv,), jnp.uint32),
+        root_counts=jnp.zeros((cfg.n_u,), jnp.int32))
+
+
+class LanePool:
+    """Device-side half of a bucket's lane pool: the batched ``DenseState``/
+    ``GraphContext`` pytrees plus their static shape.  Owned and mutated
+    exclusively by an ``Executor``; the scheduler holds the host-side slot
+    bookkeeping (which request occupies which lane) and never touches the
+    arrays directly."""
+
+    __slots__ = ("cfg", "B", "state", "ctx")
+
+    def __init__(self, cfg: ed.EngineConfig, n_lanes: int):
+        self.cfg = cfg
+        self.B = n_lanes
+        self.state: ed.DenseState | None = None
+        self.ctx: ed.GraphContext | None = None
+
+
+@dataclasses.dataclass
+class RoundTelemetry:
+    """What one bounded round reports back to the scheduler."""
+    wall_s: float                 # round wall time (compile included)
+    compile_s: float              # XLA compile charged to this round
+    adv: np.ndarray               # per-lane/worker engine steps advanced
+    pending: np.ndarray | None = None   # per-worker unstarted root tasks
+    #                                     (work-stealing lanes only)
+
+
+class Executor(abc.ABC):
+    """Execution backend: owns where lane pools live and how rounds run."""
+
+    name: str = "executor"
+
+    # -- lane planning --------------------------------------------------
+    @abc.abstractmethod
+    def plan_lanes(self, n_pending: int, policy: BucketPolicy) -> int:
+        """Lane count for a pool serving ``n_pending`` same-bucket graphs
+        (backend-constrained: e.g. divisible by the mesh size)."""
+
+    # -- pool lifecycle -------------------------------------------------
+    def new_pool(self, cfg: ed.EngineConfig, n_lanes: int) -> LanePool:
+        """Fresh pool of ``n_lanes`` idle (born-done) lanes, placed on this
+        backend's devices."""
+        pool = LanePool(cfg, n_lanes)
+        ds, dc = fresh_lane_state(cfg, 0), dummy_context(cfg)
+        pool.state = jax.tree.map(lambda x: jnp.stack([x] * n_lanes), ds)
+        pool.ctx = jax.tree.map(lambda x: jnp.stack([x] * n_lanes), dc)
+        sh = self._pool_sharding()
+        if sh is not None:
+            pool.state = jax.device_put(pool.state, sh)
+            pool.ctx = jax.device_put(pool.ctx, sh)
+        return pool
+
+    def install(self, pool: LanePool, idx: list[int],
+                states: list[ed.DenseState],
+                ctxs: list[ed.GraphContext]) -> None:
+        """Place fresh single-lane (state, ctx) pairs into rows ``idx``
+        (one batched scatter, re-pinned to the backend's sharding)."""
+        pool.state, pool.ctx = ed.replace_lanes(
+            pool.state, pool.ctx, idx,
+            jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+            jax.tree.map(lambda *xs: jnp.stack(xs), *ctxs),
+            sharding=self._pool_sharding())
+
+    def migrate(self, old: LanePool, new: LanePool,
+                live_idx: list[int]) -> None:
+        """Move live rows of ``old`` into rows [0, len(live_idx)) of
+        ``new`` — the pool-widening path: in-flight DFS state resumes
+        unchanged in the wider pool."""
+        ii = np.asarray(live_idx)
+        new.state, new.ctx = ed.replace_lanes(
+            new.state, new.ctx, np.arange(len(live_idx)),
+            jax.tree.map(lambda x: x[ii], old.state),
+            jax.tree.map(lambda x: x[ii], old.ctx),
+            sharding=self._pool_sharding())
+
+    def evict(self, pool: LanePool, i: int) -> None:
+        """Dummy-out lane ``i`` (step-cap eviction): the slot is freed and
+        every other lane's rows are untouched."""
+        pool.state, pool.ctx = ed.replace_lane(
+            pool.state, pool.ctx, i, fresh_lane_state(pool.cfg, 0),
+            dummy_context(pool.cfg), sharding=self._pool_sharding())
+
+    # -- execution ------------------------------------------------------
+    @abc.abstractmethod
+    def run_round(self, pool: LanePool, cache: ExecutableCache,
+                  budget: int | None) -> RoundTelemetry:
+        """Advance every lane by one bounded round (``budget`` engine steps
+        per lane; None = run to completion) through a cached executable."""
+
+    # -- demux views ----------------------------------------------------
+    def lane(self, pool: LanePool, i: int) -> ed.DenseState:
+        """Host-readable view of one lane's state (for demux)."""
+        return jax.tree.map(lambda x, i=i: x[i], pool.state)
+
+    def done_mask(self, pool: LanePool) -> np.ndarray:
+        return np.asarray((pool.state.lvl < 0)
+                          & (pool.state.tpos >= pool.state.n_tasks))
+
+    def steps(self, pool: LanePool) -> np.ndarray:
+        """Per-lane cumulative engine steps (for step-cap enforcement) —
+        part of the interface so the scheduler never reads the
+        executor-owned pool arrays directly."""
+        return np.asarray(pool.state.steps)
+
+    # -- placement / big-graph lane -------------------------------------
+    @abc.abstractmethod
+    def placement(self, n_lanes: int) -> str:
+        """Human-readable lane placement for the routing log."""
+
+    @abc.abstractmethod
+    def big_lane(self, cfg: ed.EngineConfig, ctx: ed.GraphContext,
+                 n_roots: int, cache: ExecutableCache,
+                 budget: int | None) -> "BigGraphLane":
+        """Work-stealing lane for one routed-big graph on this backend."""
+
+    def _pool_sharding(self):
+        return None                 # single-device backends
+
+
+class LocalExecutor(Executor):
+    """Single-device lane pools — the PR-2 execution path, verbatim, behind
+    the interface.  The big-graph lane runs as ``big_workers`` vmap'd
+    workers on a one-device mesh (work stealing between vmap lanes — the
+    many-thread-blocks-per-SM analog), so big-graph routing is meaningful
+    even without a multi-device mesh."""
+
+    name = "local"
+
+    def __init__(self, big_workers: int = 4):
+        self.big_workers = big_workers
+
+    def plan_lanes(self, n_pending: int, policy: BucketPolicy) -> int:
+        return plan_batch_size(n_pending, policy)
+
+    def run_round(self, pool: LanePool, cache: ExecutableCache,
+                  budget: int | None) -> RoundTelemetry:
+        entry = cache.get_round(pool.cfg, pool.B, budget)
+        before = np.asarray(pool.state.steps)
+        out, wall, compile_s = entry.timed_call(pool.ctx, pool.state)
+        pool.state = out
+        return RoundTelemetry(wall_s=wall, compile_s=compile_s,
+                              adv=np.asarray(out.steps) - before)
+
+    def placement(self, n_lanes: int) -> str:
+        return f"1 device x {n_lanes} vmap lanes"
+
+    def big_lane(self, cfg, ctx, n_roots, cache, budget):
+        mesh = Mesh(np.array(jax.devices()[:1]), (MBE_LANE_AXIS,))
+        return BigGraphLane(self.name, cfg, mesh, MBE_LANE_AXIS,
+                            self.big_workers, ctx, n_roots, cache, budget)
+
+
+class ShardedExecutor(Executor):
+    """Lane pools placed across a 1-D serving mesh.
+
+    The pool's batch axis is sharded over ``axis`` (``wpd = B // n_dev``
+    lanes per device) and one bounded round is ONE
+    ``make_round_fn(ctx_batched=True, work_stealing=False)`` call — the
+    per-lane-graphs layout, where stealing is meaningless because root-task
+    indices are graph-local; balancing across lanes is the scheduler's
+    refill.  Lane counts are therefore padded up to a multiple of the mesh
+    size (pow2 meshes compose with the planner's pow2 promise).  Lane
+    surgery re-pins the pool to the mesh sharding after every scatter
+    (``replace_lanes(sharding=...)``), so rounds never pay a reshard.
+
+    ``big_workers_per_device`` sizes the big-graph lane: total stealing
+    workers = mesh size x that (over-decomposition knob)."""
+
+    name = "sharded"
+
+    def __init__(self, mesh: Mesh, axis: str = MBE_LANE_AXIS,
+                 big_workers_per_device: int = 1):
+        if axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = axis
+        self.n_devices = int(mesh.shape[axis])
+        self.big_workers_per_device = big_workers_per_device
+
+    def _pool_sharding(self):
+        return NamedSharding(self.mesh, P(self.axis))
+
+    def plan_lanes(self, n_pending: int, policy: BucketPolicy) -> int:
+        base = plan_batch_size(n_pending, policy)
+        n_dev = self.n_devices
+        b = max(base, n_dev)
+        return ((b + n_dev - 1) // n_dev) * n_dev   # divisible placement
+
+    def run_round(self, pool: LanePool, cache: ExecutableCache,
+                  budget: int | None) -> RoundTelemetry:
+        cfg, B = pool.cfg, pool.B
+        wpd = B // self.n_devices
+        key = ((self.name, self.mesh, self.axis, wpd, cfg), B, budget)
+
+        def build():
+            dist = dd.DistConfig(
+                steps_per_round=(budget if budget is not None
+                                 else cfg.max_steps),
+                workers_per_device=wpd, work_stealing=False)
+            fn, _, _ = dd.make_round_fn(cfg, self.mesh, (self.axis,), dist,
+                                        ctx_batched=True,
+                                        with_telemetry=True)
+            return fn
+
+        entry = cache.get_entry(key, build)
+        (out, telem), wall, compile_s = entry.timed_call(pool.ctx,
+                                                         pool.state)
+        pool.state = out
+        return RoundTelemetry(
+            wall_s=wall, compile_s=compile_s,
+            adv=np.asarray(telem["busy_steps"]),
+            pending=np.asarray(telem["pending"]))
+
+    def placement(self, n_lanes: int) -> str:
+        wpd = n_lanes // self.n_devices
+        return (f"{self.n_devices} devices x {wpd} lanes "
+                f"(axis {self.axis!r})")
+
+    def big_lane(self, cfg, ctx, n_roots, cache, budget):
+        return BigGraphLane(self.name, cfg, self.mesh, self.axis,
+                            self.big_workers_per_device, ctx, n_roots,
+                            cache, budget)
+
+
+class BigGraphLane:
+    """One heavy graph served cuMBE-style: root tasks strided across every
+    mesh worker, pending tasks stolen at round barriers.
+
+    The round function is ``make_round_fn(ctx_batched=False,
+    work_stealing=True, with_telemetry=True)`` — one replicated graph, the
+    worker state sharded over the serving axis — cached under a
+    backend-qualified key so same-bucket big graphs reuse one executable.
+    Per-worker busy-step telemetry accumulates in ``busy_per_worker``: the
+    scheduler surfaces it so operators can SEE the heavy graph's subtrees
+    spread across workers (the paper's Fig.-5 load-distribution view,
+    live)."""
+
+    def __init__(self, backend: str, cfg: ed.EngineConfig, mesh: Mesh,
+                 axis: str, workers_per_device: int, ctx: ed.GraphContext,
+                 n_roots: int, cache: ExecutableCache, budget: int | None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        n_dev = int(mesh.shape[axis])
+        self.n_workers = n_dev * workers_per_device
+        self.round_steps = (budget if budget and budget > 0
+                            else DEFAULT_BIG_ROUND_STEPS)
+        dist = dd.DistConfig(steps_per_round=self.round_steps,
+                             workers_per_device=workers_per_device,
+                             work_stealing=True)
+        key = (("ws", backend, mesh, axis, workers_per_device, cfg),
+               self.n_workers, self.round_steps)
+
+        def build():
+            fn, _, _ = dd.make_round_fn(cfg, mesh, (axis,), dist,
+                                        ctx_batched=False,
+                                        with_telemetry=True)
+            return fn
+
+        self._entry = cache.get_entry(key, build)
+        # strided initial deal of the REAL root tasks (padding vertices
+        # own no subtree); queue capacity T = cfg.m_real, the same bound
+        # make_round_fn bakes into the steal re-deal
+        T = cfg.m_real
+        per = []
+        for w in range(self.n_workers):
+            tasks = np.arange(w, n_roots, self.n_workers, dtype=np.int32)
+            s = ed.init_state(cfg, tasks)
+            pad = np.full(T, -1, np.int32)
+            pad[: tasks.shape[0]] = tasks
+            per.append(s._replace(tasks=jnp.asarray(pad)))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+        sh = NamedSharding(mesh, P(axis))
+        self.state = jax.tree.map(lambda x: jax.device_put(x, sh), stacked)
+        self.ctx = jax.device_put(ctx, NamedSharding(mesh, P()))
+        self.busy_per_worker = np.zeros(self.n_workers, np.int64)
+        self.rounds = 0
+
+    def run_round(self) -> RoundTelemetry:
+        (out, telem), wall, compile_s = self._entry.timed_call(self.ctx,
+                                                               self.state)
+        self.state = out
+        adv = np.asarray(telem["busy_steps"], np.int64)
+        self.busy_per_worker += adv
+        self.rounds += 1
+        return RoundTelemetry(
+            wall_s=wall, compile_s=compile_s, adv=adv,
+            pending=np.asarray(telem["pending"]))
+
+    @property
+    def done(self) -> bool:
+        return bool(np.asarray((self.state.lvl < 0)
+                               & (self.state.tpos >= self.state.n_tasks))
+                    .all())
+
+    def max_worker_steps(self) -> int:
+        return int(np.asarray(self.state.steps).max())
+
+    def worker_state(self, w: int) -> ed.DenseState:
+        """Host-readable view of one worker's state (for demux merging)."""
+        return jax.tree.map(lambda x, w=w: x[w], self.state)
+
+    def placement(self) -> str:
+        n_dev = int(self.mesh.shape[self.axis])
+        return (f"{self.n_workers} stealing workers on {n_dev} device(s) "
+                f"(axis {self.axis!r}, round={self.round_steps} steps)")

@@ -1,4 +1,5 @@
-"""Continuous-batching MBE scheduler: slot admission + mid-flight refill.
+"""Continuous-batching MBE scheduler: slot admission + mid-flight refill,
+routed across pluggable execution backends.
 
 ``MBEServer`` is the serving front end: users ``submit``/``admit``
 bipartite graphs (one request = one whole graph to enumerate) and the
@@ -10,12 +11,13 @@ The slot model
 
 Each shape bucket with work owns one live *lane pool*: a batched
 ``DenseState``/``GraphContext`` pair of ``B`` vmap lanes driven by ONE
-cached ``run_batch`` executable.  The pool advances in bounded **rounds**
-(``run_batch(max_steps=policy.steps_per_round)``); after every round,
+cached executable.  The pool advances in bounded **rounds**
+(``BucketPolicy.steps_per_round`` engine steps per round); after every
+round,
 
 1. lanes whose graph finished are **demuxed** into results immediately,
 2. freed lanes are **refilled in place** from the bucket's pending queue
-   (``engine_dense.replace_lane`` row surgery — no reshape, no recompile),
+   (row surgery — no reshape, no recompile),
 3. the next round runs with the same executable.
 
 Under ``vmap`` a finished lane otherwise idles until the slowest lane in
@@ -26,12 +28,33 @@ barrier per flush chunk.  ``steps_per_round == 0`` degenerates to
 whole-batch semantics (each round runs the pool to completion), which is
 the drain/flush baseline the benchmark compares against.
 
+Execution backends (the ``Executor`` interface, ``repro.serving.executor``)
+---------------------------------------------------------------------------
+
+WHERE a pool's lanes live and HOW a round runs is the executor's business,
+not the scheduler's: ``LocalExecutor`` keeps pools on one device (the
+original path), ``ShardedExecutor`` shards each pool's lane axis over a
+serving mesh so one host poll advances every device's lanes in lockstep.
+The scheduler holds only host-side slot bookkeeping (which request
+occupies which lane, latency accumulators) and calls executor methods for
+everything that touches device arrays.
+
+Routing (``buckets.plan_route``): a request whose canonical ``n_u`` meets
+``BucketPolicy.big_graph_threshold`` is not placed in a vmap lane at all —
+it routes to the dedicated **big-graph lane**: cuMBE's shared-graph
+layout, root tasks strided over every mesh worker with work stealing at
+round barriers.  One heavy graph therefore no longer serializes behind a
+lane while small-graph buckets fill the rest of the mesh; its per-worker
+busy-step telemetry lands in ``stats()['big_busy_per_worker']``.  Every
+routing decision (and every pool/lane placement) is appended to
+``routing_log`` so operators can see why a request queued where it did.
+
 Scheduling APIs:
 
 * ``admit(g)``  — enqueue one graph, stamping its queueing clock.
-* ``poll()``    — one scheduling round over every bucket with work:
-  create/refill pools, run one bounded round each, demux completions.
-  Returns the results that completed during this poll.
+* ``poll()``    — one scheduling round over the big-graph lane and every
+  bucket with work: create/refill pools, run one bounded round each,
+  demux completions.  Returns the results that completed this poll.
 * ``drain()``   — poll until no pending requests and no live lanes.
 * ``flush()`` / ``serve()`` — thin wrappers over ``drain()`` for the
   original whole-queue callers; ``submit`` is an alias of ``admit``.
@@ -47,25 +70,7 @@ separately as ``compile_s`` (the executable cache times its own
 compilation).  Pool-level occupancy is tracked in steps: ``busy_steps``
 (per-lane engine steps actually advanced) over ``total_lane_steps``
 (lanes x the per-round critical path) — the refill mechanism's win shows
-up as this ratio.
-
-Design points:
-
-* **One graph per lane.**  Lane b of a pool holds graph b's padded
-  context and a worker state whose task list is *all* of graph b's root
-  tasks — the engine's task-driven decomposition is reused unchanged,
-  just vmapped.  Lane results are independent of what the other lanes
-  run, so refill is result-identical to whole-batch flush.
-* **Static everything.**  Pool lane count comes from ``plan_batch_size``
-  (always a power of two capped at ``policy.lane_cap`` when padding), so
-  a month of traffic exercises a handful of executables.  Idle lanes
-  carry an empty task list (``n_tasks=0``) and an all-zero context: they
-  are born done and cost one loop-condition evaluation.  A pool sized for
-  a trickle grows when a burst arrives: live lanes migrate row-by-row
-  into a wider pool (pow2, so the wider executable would exist anyway)
-  and resume mid-DFS.
-* **FIFO within bucket.**  Requests are admitted into lanes in submit
-  order within their bucket; buckets are scheduled in sorted shape order.
+up as this ratio, and the big-graph lane's rounds enter the same ledger.
 """
 from __future__ import annotations
 
@@ -74,14 +79,15 @@ import dataclasses
 import time
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
 from repro.core import engine_dense as ed
+from repro.core.distributed import totals as dd_totals
 from repro.core.graph import BipartiteGraph
-from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_batch_size,
-                                   plan_bucket)
+from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_bucket,
+                                   plan_route)
 from repro.serving.cache import ExecutableCache
+from repro.serving.executor import (BigGraphLane, Executor, LocalExecutor,
+                                    fresh_lane_state)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +97,7 @@ class Request:
     bucket: BucketSpec
     swapped: bool               # True if submit() transposed the graph
     t_admit: float = 0.0        # perf_counter stamp at admission
+    big: bool = False           # routed to the work-stealing big-graph lane
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,7 +108,8 @@ class MBEResult:
     cs: int                     # enumeration fingerprint (order-independent,
     #                             computed in the canonical orientation)
     nodes: int                  # search-tree nodes visited
-    steps: int                  # engine loop iterations
+    steps: int                  # engine loop iterations (summed over
+    #                             workers for big-graph requests)
     latency_s: float            # queue_s + service_s + compile_s: the sum
     #                             of the request's attributed components
     #                             (host gaps between rounds and other
@@ -121,43 +129,17 @@ class MBEResult:
     #                             (0.0 when the executable was cached)
 
 
-def _lane_state(cfg: ed.EngineConfig, n_tasks: int) -> ed.DenseState:
-    """Worker state owning root tasks [0, n_tasks), task queue padded to the
-    bucket-wide capacity ``cfg.n_u`` so every lane has identical shapes."""
-    s = ed.init_state(cfg, np.arange(n_tasks, dtype=np.int32))
-    pad = np.full(cfg.n_u, -1, np.int32)
-    pad[:n_tasks] = np.arange(n_tasks, dtype=np.int32)
-    return s._replace(tasks=jnp.asarray(pad))
-
-
-def _dummy_context(cfg: ed.EngineConfig) -> ed.GraphContext:
-    """All-zero context for idle lanes (paired with ``_lane_state(cfg, 0)``
-    the lane is born done and never reads it)."""
-    return ed.GraphContext(
-        adj=jnp.zeros((cfg.n_u, cfg.wv), jnp.uint32),
-        order=jnp.zeros((cfg.n_u,), jnp.int32),
-        rank=jnp.zeros((cfg.n_u,), jnp.int32),
-        l_root=jnp.zeros((cfg.wv,), jnp.uint32),
-        root_counts=jnp.zeros((cfg.n_u,), jnp.int32))
-
-
 class _LanePool:
-    """Live batch of ``B`` lanes for one bucket, advanced in bounded rounds.
+    """Host-side half of one bucket's live pool: per-slot bookkeeping
+    (which request occupies each lane, latency accumulators) around the
+    executor-owned device pool."""
 
-    Owns the batched (state, ctx) pytrees plus per-slot host bookkeeping:
-    which request occupies each lane and its latency accumulators.
-    """
-
-    def __init__(self, server: "MBEServer", bucket: BucketSpec, n_lanes: int):
+    def __init__(self, server: "MBEServer", bucket: BucketSpec,
+                 n_lanes: int):
         self.bucket = bucket
         self.cfg = server._engine_config(bucket)
         self.B = n_lanes
-        dummy_s = _lane_state(self.cfg, 0)
-        dummy_c = _dummy_context(self.cfg)
-        self.state = jax.tree.map(
-            lambda x: jnp.stack([x] * n_lanes), dummy_s)
-        self.ctx = jax.tree.map(
-            lambda x: jnp.stack([x] * n_lanes), dummy_c)
+        self.pool = server.executor.new_pool(self.cfg, n_lanes)
         self.reqs: list[Request | None] = [None] * n_lanes
         self._queue_s = [0.0] * n_lanes
         self._service_s = [0.0] * n_lanes
@@ -177,36 +159,22 @@ class _LanePool:
             r = queue.popleft()
             idx.append(i)
             ctxs.append(ed.make_context(r.graph, self.cfg))
-            states.append(_lane_state(self.cfg, r.graph.n_u))
+            states.append(fresh_lane_state(self.cfg, r.graph.n_u))
             self.reqs[i] = r
             self._queue_s[i] = time.perf_counter() - r.t_admit
             self._service_s[i] = 0.0
             self._compile_s[i] = 0.0
         if idx:
-            self.state, self.ctx = ed.replace_lanes(
-                self.state, self.ctx, idx,
-                jax.tree.map(lambda *xs: jnp.stack(xs), *states),
-                jax.tree.map(lambda *xs: jnp.stack(xs), *ctxs))
+            server.executor.install(self.pool, idx, states, ctxs)
         return len(idx)
 
     def run_round(self, server: "MBEServer") -> None:
-        """One bounded engine round over all lanes; occupancy accounting."""
-        spr = server.policy.steps_per_round
-        budget = spr if spr > 0 else None
-        if budget is None and server.max_graph_steps is not None:
-            # unbounded rounds must still honour the per-graph step cap,
-            # or a runaway lane would never return control to raise
-            budget = server.max_graph_steps
-        entry = server.cache.get_round(self.cfg, self.B, budget)
-        before = np.asarray(self.state.steps)
-        was_compiled = entry.compiled
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(entry(self.ctx, self.state))
-        wall = time.perf_counter() - t0
-        self.state = out
-        compile_s = 0.0 if was_compiled else entry.compile_s
-        exec_s = max(wall - compile_s, 0.0)
-        adv = np.asarray(out.steps) - before            # per-lane steps
+        """One bounded executor round over all lanes; occupancy
+        accounting."""
+        tel = server.executor.run_round(self.pool, server.cache,
+                                        server._round_budget())
+        exec_s = max(tel.wall_s - tel.compile_s, 0.0)
+        adv = tel.adv                                   # per-lane steps
         busy = int(adv.sum())
         crit = int(adv.max()) if self.B else 0          # round critical path
         server._n_rounds += 1
@@ -216,7 +184,7 @@ class _LanePool:
             if r is None:
                 continue
             self._service_s[i] += exec_s
-            self._compile_s[i] += compile_s
+            self._compile_s[i] += tel.compile_s
 
     def enforce_step_cap(self, server: "MBEServer") -> None:
         """Evict-then-raise for lanes that blew ``max_graph_steps``.
@@ -228,8 +196,8 @@ class _LanePool:
         cap = server.max_graph_steps
         if cap is None:
             return
-        done = self._done_mask()
-        steps = np.asarray(self.state.steps)
+        done = server.executor.done_mask(self.pool)
+        steps = server.executor.steps(self.pool)
         dead = [i for i, r in enumerate(self.reqs)
                 if r is not None and not done[i] and int(steps[i]) >= cap]
         if not dead:
@@ -237,26 +205,20 @@ class _LanePool:
         names = [f"request {self.reqs[i].rid} ({self.reqs[i].graph.name})"
                  for i in dead]
         for i in dead:
-            self.state, self.ctx = ed.replace_lane(
-                self.state, self.ctx, i, _lane_state(self.cfg, 0),
-                _dummy_context(self.cfg))
+            server.executor.evict(self.pool, i)
             self.reqs[i] = None
         raise RuntimeError(
             f"{'; '.join(names)} exceeded max_graph_steps={cap} without "
             f"finishing; evicted (other requests remain servable)")
 
-    def _done_mask(self) -> np.ndarray:
-        return np.asarray((self.state.lvl < 0)
-                          & (self.state.tpos >= self.state.n_tasks))
-
     def demux(self, server: "MBEServer") -> dict[int, "MBEResult"]:
         """Decode every finished lane into a result and free its slot."""
-        done = self._done_mask()
+        done = server.executor.done_mask(self.pool)
         results: dict[int, MBEResult] = {}
         for i, r in enumerate(self.reqs):
             if r is None or not done[i]:
                 continue
-            lane = jax.tree.map(lambda x, i=i: x[i], self.state)
+            lane = server.executor.lane(self.pool, i)
             bic = None
             if server.collect:
                 bic = ed.collected_bicliques(self.cfg, lane, r.graph.n_u,
@@ -279,22 +241,42 @@ class _LanePool:
         return results
 
 
+class _BigSlot:
+    """Host-side bookkeeping for the active big-graph request: the
+    work-stealing lane plus the request's latency accumulators."""
+
+    def __init__(self, lane: BigGraphLane, req: Request, queue_s: float):
+        self.lane = lane
+        self.req = req
+        self.queue_s = queue_s
+        self.service_s = 0.0
+        self.compile_s = 0.0
+
+
 class MBEServer:
     """Continuous-batching multi-graph MBE serving."""
 
     def __init__(self, policy: BucketPolicy | None = None,
                  collect_cap: int = 1, collect: bool = False,
                  order_mode: str = "deg", impl: str = "jnp",
-                 max_graph_steps: int | None = None):
+                 max_graph_steps: int | None = None,
+                 executor: Executor | None = None,
+                 cache_capacity: int | None =
+                 ExecutableCache.DEFAULT_CAPACITY):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
         self.order_mode = order_mode
         self.impl = impl
         self.max_graph_steps = max_graph_steps
-        self.cache = ExecutableCache()
+        self.executor = executor or LocalExecutor()
+        self.cache = ExecutableCache(capacity=cache_capacity)
+        self.routing_log: list[dict] = []
         self._queues: dict[BucketSpec, collections.deque] = {}
         self._pools: dict[BucketSpec, _LanePool] = {}
+        self._big_queue: collections.deque = collections.deque()
+        self._big: _BigSlot | None = None
+        self._big_busy_per_worker: np.ndarray | None = None
         self._completed: dict[int, MBEResult] = {}
         self._next_rid = 0
         self._n_rounds = 0
@@ -309,16 +291,39 @@ class MBEServer:
 
         The graph is canonicalized (|U| <= |V|) internally for the engine;
         decoded bicliques are swapped back to the submitted orientation at
-        demux, so callers always get (L ⊆ their V, R ⊆ their U).
+        demux, so callers always get (L ⊆ their V, R ⊆ their U).  Graphs
+        at/above ``policy.big_graph_threshold`` root tasks route to the
+        work-stealing big-graph lane instead of a bucket lane pool.
         """
         gc = g.canonical()
         if gc.n_u < 1:
             raise ValueError("empty graphs are not servable")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, gc, plan_bucket(gc, self.policy),
-                      swapped=g.n_u > g.n_v, t_admit=time.perf_counter())
-        self._queues.setdefault(req.bucket, collections.deque()).append(req)
+        route = plan_route(gc, self.policy)
+        bucket = plan_bucket(gc, self.policy)
+        req = Request(rid, gc, bucket, swapped=g.n_u > g.n_v,
+                      t_admit=time.perf_counter(), big=route == "big")
+        thr = self.policy.big_graph_threshold
+        if req.big:
+            self._big_queue.append(req)
+            self.routing_log.append(dict(
+                event="route", rid=rid, graph=gc.name, route="big",
+                bucket=(bucket.n_u, bucket.n_v),
+                executor=self.executor.name,
+                reason=f"n_u={gc.n_u} >= big_graph_threshold={thr}: "
+                       f"root tasks spread over mesh workers with "
+                       f"work stealing"))
+        else:
+            self._queues.setdefault(bucket,
+                                    collections.deque()).append(req)
+            self.routing_log.append(dict(
+                event="route", rid=rid, graph=gc.name, route="lane",
+                bucket=(bucket.n_u, bucket.n_v),
+                executor=self.executor.name,
+                reason=("no big_graph_threshold set" if thr is None else
+                        f"n_u={gc.n_u} < big_graph_threshold={thr}")
+                + ": one vmap lane in the bucket pool"))
         return rid
 
     # legacy name; identical semantics
@@ -330,24 +335,41 @@ class MBEServer:
                                     order_mode=self.order_mode,
                                     impl=self.impl)
 
+    def _round_budget(self) -> int | None:
+        spr = self.policy.steps_per_round
+        if spr > 0:
+            return spr
+        # unbounded rounds must still honour the per-graph step cap, or a
+        # runaway lane would never return control to raise
+        return self.max_graph_steps
+
     def _buckets_with_work(self) -> list[BucketSpec]:
         live = {b for b, q in self._queues.items() if q} \
             | {b for b, p in self._pools.items() if p.n_live()}
         return sorted(live, key=lambda b: (b.n_u, b.n_v))
 
+    def _has_work(self) -> bool:
+        return bool(self._buckets_with_work() or self._big_queue
+                    or self._big is not None)
+
     def _ensure_pool(self, bucket: BucketSpec) -> _LanePool:
         pool = self._pools.get(bucket)
         backlog = len(self._queues.get(bucket, ()))
         if pool is None:
-            pool = _LanePool(self, bucket,
-                             plan_batch_size(backlog, self.policy))
+            n = self.executor.plan_lanes(backlog, self.policy)
+            pool = _LanePool(self, bucket, n)
             self._pools[bucket] = pool
+            self.routing_log.append(dict(
+                event="pool", bucket=(bucket.n_u, bucket.n_v), lanes=n,
+                executor=self.executor.name,
+                placement=self.executor.placement(n)))
         else:
             # a pool sized for a trickle must not serialize a later burst:
             # when the backlog justifies more lanes, migrate the live rows
-            # into a wider pool (replace_lane surgery — in-flight DFS
-            # state resumes unchanged, so results are unaffected)
-            desired = plan_batch_size(pool.n_live() + backlog, self.policy)
+            # into a wider pool (row surgery — in-flight DFS state resumes
+            # unchanged, so results are unaffected)
+            desired = self.executor.plan_lanes(pool.n_live() + backlog,
+                                               self.policy)
             if desired > pool.B:
                 pool = self._grow_pool(bucket, pool, desired)
         return pool
@@ -357,25 +379,110 @@ class MBEServer:
         new = _LanePool(self, bucket, n_lanes)
         live = [i for i, r in enumerate(old.reqs) if r is not None]
         if live:
-            ii = np.asarray(live)
-            new.state, new.ctx = ed.replace_lanes(
-                new.state, new.ctx, np.arange(len(live)),
-                jax.tree.map(lambda x: x[ii], old.state),
-                jax.tree.map(lambda x: x[ii], old.ctx))
+            self.executor.migrate(old.pool, new.pool, live)
             for j, i in enumerate(live):
                 new.reqs[j] = old.reqs[i]
                 new._queue_s[j] = old._queue_s[i]
                 new._service_s[j] = old._service_s[i]
                 new._compile_s[j] = old._compile_s[i]
         self._pools[bucket] = new
+        self.routing_log.append(dict(
+            event="pool-grow", bucket=(bucket.n_u, bucket.n_v),
+            lanes=n_lanes, was=old.B, executor=self.executor.name,
+            placement=self.executor.placement(n_lanes)))
         return new
 
+    # -- big-graph lane -------------------------------------------------
+    def _start_big(self) -> None:
+        req = self._big_queue.popleft()
+        cfg = self._engine_config(req.bucket)
+        ctx = ed.make_context(req.graph, cfg)
+        lane = self.executor.big_lane(cfg, ctx, req.graph.n_u, self.cache,
+                                      self.policy.steps_per_round or None)
+        self._big = _BigSlot(lane, req,
+                             queue_s=time.perf_counter() - req.t_admit)
+        self.routing_log.append(dict(
+            event="big-lane", rid=req.rid, graph=req.graph.name,
+            bucket=(req.bucket.n_u, req.bucket.n_v),
+            executor=self.executor.name, placement=lane.placement()))
+
+    def _poll_big(self) -> None:
+        """Advance the big-graph lane one work-stealing round: place the
+        next queued big request if the lane is free, run a round, demux on
+        completion, enforce the step cap (evict-then-raise)."""
+        if self._big is None:
+            if not self._big_queue:
+                return
+            self._start_big()
+        slot = self._big
+        tel = slot.lane.run_round()
+        slot.service_s += max(tel.wall_s - tel.compile_s, 0.0)
+        slot.compile_s += tel.compile_s
+        # the big lane enters the same occupancy ledger as the pools:
+        # busy = steps actually advanced, total = workers x critical path
+        busy = int(tel.adv.sum())
+        crit = int(tel.adv.max())
+        self._n_rounds += 1
+        self._busy_steps += busy
+        self._total_lane_steps += slot.lane.n_workers * crit
+        if self._big_busy_per_worker is None:
+            self._big_busy_per_worker = np.zeros(slot.lane.n_workers,
+                                                 np.int64)
+        if len(self._big_busy_per_worker) == slot.lane.n_workers:
+            self._big_busy_per_worker += tel.adv
+        if slot.lane.done:
+            self._completed[slot.req.rid] = self._demux_big(slot)
+            self._big = None
+            return
+        cap = self.max_graph_steps
+        if cap is not None and slot.lane.max_worker_steps() >= cap:
+            rid, name = slot.req.rid, slot.req.graph.name
+            self._big = None        # evict: the lane is dropped whole
+            raise RuntimeError(
+                f"request {rid} ({name}) exceeded max_graph_steps={cap} "
+                f"without finishing; evicted (other requests remain "
+                f"servable)")
+
+    def _demux_big(self, slot: _BigSlot) -> MBEResult:
+        """Merge the work-stealing workers into one result: counters are
+        summed via ``distributed.totals`` (the fingerprint is an
+        order-independent uint32 sum, so worker-wise addition reproduces
+        the serial value) and collect buffers concatenated."""
+        lane, r = slot.lane, slot.req
+        st = lane.state
+        tot = dd_totals(st)
+        n_max, cs, nodes = tot["n_max"], tot["cs"], tot["nodes"]
+        steps = int(np.asarray(tot["steps"]).sum())
+        bic = None
+        truncated = False
+        if self.collect:
+            bic = []
+            per_n_max = np.asarray(st.n_max)
+            per_out_n = np.asarray(st.out_n)
+            for w in range(lane.n_workers):
+                ws = lane.worker_state(w)
+                bic.extend(ed.collected_bicliques(
+                    lane.cfg, ws, r.graph.n_u, r.graph.n_v))
+                truncated |= int(per_n_max[w]) > int(per_out_n[w])
+            if r.swapped:
+                bic = [(R, L) for L, R in bic]
+        return MBEResult(
+            rid=r.rid, name=r.graph.name, n_max=n_max, cs=cs, nodes=nodes,
+            steps=steps,
+            latency_s=slot.queue_s + slot.service_s + slot.compile_s,
+            bicliques=bic, truncated=truncated,
+            queue_s=slot.queue_s, service_s=slot.service_s,
+            compile_s=slot.compile_s)
+
+    # ------------------------------------------------------------------
     def _poll_once(self) -> None:
-        """One scheduling round: for every bucket with work, refill free
-        lanes from its queue, run one bounded round, demux completions
-        into the stash, then enforce the step cap (evict-then-raise).
-        Demuxing BEFORE the cap check — and stashing rather than
-        returning — means a raise can never lose a computed result."""
+        """One scheduling round: advance the big-graph lane, then for every
+        bucket with work, refill free lanes from its queue, run one bounded
+        round, demux completions into the stash, then enforce the step cap
+        (evict-then-raise).  Demuxing BEFORE the cap check — and stashing
+        rather than returning — means a raise can never lose a computed
+        result."""
+        self._poll_big()
         for bucket in self._buckets_with_work():
             queue = self._queues.setdefault(bucket, collections.deque())
             pool = self._ensure_pool(bucket)
@@ -406,7 +513,7 @@ class MBEServer:
         """Serve everything pending; returns {rid: result}.  After a
         step-cap RuntimeError, calling ``drain`` again serves the
         surviving requests and returns any stashed results."""
-        while self._buckets_with_work():
+        while self._has_work():
             self._poll_once()
         return self._take_completed()
 
@@ -423,14 +530,21 @@ class MBEServer:
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         total = self._total_lane_steps
+        busy_pw = self._big_busy_per_worker
         return dict(batches=self._n_rounds, lanes=self._n_lanes,
                     pad_lanes=self._n_pad_lanes,
-                    pending=sum(len(q) for q in self._queues.values()),
-                    in_flight=sum(p.n_live() for p in self._pools.values()),
+                    pending=(sum(len(q) for q in self._queues.values())
+                             + len(self._big_queue)),
+                    in_flight=(sum(p.n_live()
+                                   for p in self._pools.values())
+                               + (1 if self._big is not None else 0)),
                     busy_steps=self._busy_steps,
                     total_lane_steps=total,
                     # idle slack: padding lanes AND real lanes waiting on
                     # the round's critical path (vmap imbalance)
                     idle_lane_steps=total - self._busy_steps,
                     occupancy=(self._busy_steps / total) if total else 0.0,
+                    executor=self.executor.name,
+                    big_busy_per_worker=([] if busy_pw is None
+                                         else busy_pw.tolist()),
                     **self.cache.stats())

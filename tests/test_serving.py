@@ -14,6 +14,8 @@
 import functools
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 import pytest
 from _graphs import random_graph
 from _hyp import given, settings, st
@@ -118,23 +120,71 @@ def test_non_pow2_max_batch_server_end_to_end():
 # executable cache
 # ---------------------------------------------------------------------------
 
+def _cstats(hits, misses, entries, evictions=0):
+    return dict(hits=hits, misses=misses, entries=entries,
+                evictions=evictions)
+
+
 def test_cache_hit_miss_accounting():
     cache = ExecutableCache()
     g = dataset_suite("test")["corp-leadership"]
     bucket = plan_bucket(g, BucketPolicy(mode="pow2"))
     cfg = bucket.engine_config()
     f1 = cache.get(cfg, 2)
-    assert cache.stats() == dict(hits=0, misses=1, entries=1)
+    assert cache.stats() == _cstats(hits=0, misses=1, entries=1)
     f2 = cache.get(cfg, 2)                      # same key -> hit, same fn
     assert f2 is f1
-    assert cache.stats() == dict(hits=1, misses=1, entries=1)
+    assert cache.stats() == _cstats(hits=1, misses=1, entries=1)
     cache.get(cfg, 4)                           # new batch size -> miss
-    assert cache.stats() == dict(hits=1, misses=2, entries=2)
+    assert cache.stats() == _cstats(hits=1, misses=2, entries=2)
     cfg2 = bucket.engine_config(order_mode="input")   # new config -> miss
     cache.get(cfg2, 2)
-    assert cache.stats() == dict(hits=1, misses=3, entries=3)
+    assert cache.stats() == _cstats(hits=1, misses=3, entries=3)
     cache.get(cfg, 2)
-    assert cache.stats() == dict(hits=2, misses=3, entries=3)
+    assert cache.stats() == _cstats(hits=2, misses=3, entries=3)
+
+
+def test_cache_lru_eviction_and_recompile_on_reuse():
+    """A bounded cache drops the COLDEST entry past capacity (LRU, so a
+    just-hit entry survives) and honestly recompiles a dropped key when it
+    returns — a long-lived server with many buckets cannot grow
+    executables unboundedly."""
+    cache = ExecutableCache(capacity=2)
+    g = dataset_suite("test")["corp-leadership"]
+    bucket = plan_bucket(g, BucketPolicy(mode="pow2"))
+    cfg = bucket.engine_config()
+    e1 = cache.get(cfg, 1)
+    cache.get(cfg, 2)
+    cache.get(cfg, 1)                           # touch: 2 is now coldest
+    cache.get(cfg, 4)                           # capacity 2 -> evicts 2
+    assert cache.stats() == _cstats(hits=1, misses=3, entries=2,
+                                    evictions=1)
+    assert cache.get(cfg, 1) is e1              # LRU-touched entry survived
+    e2b = cache.get(cfg, 2)                     # evicted key: fresh entry,
+    assert cache.stats()["misses"] == 4         # counted as a new compile
+    assert not e2b.compiled
+    # the recompiled entry still runs (and times its own compile)
+    ctx = ed.make_context(g, cfg)
+    states = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[ed.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+          for _ in range(2)])
+    ctxs = jax.tree.map(lambda x: jnp.stack([x] * 2), ctx)
+    out = e2b(ctxs, states)
+    assert e2b.compiled and e2b.compile_s > 0
+    ref = ed.enumerate_dense(g)
+    assert all(int(n) == int(ref.n_max) for n in np.asarray(out.n_max))
+
+
+def test_cache_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        ExecutableCache(capacity=0)
+    unbounded = ExecutableCache(capacity=None)   # explicit opt-out works
+    g = dataset_suite("test")["corp-leadership"]
+    cfg = plan_bucket(g, BucketPolicy(mode="pow2")).engine_config()
+    for b in (1, 2, 4, 8):
+        unbounded.get(cfg, b)
+    assert unbounded.stats()["evictions"] == 0
 
 
 def test_server_reuses_executables_across_flushes():
