@@ -2,11 +2,13 @@
 policies on a mixed-size request stream, a skewed-stream comparison of
 whole-batch flush vs continuous lane refill, and a mixed big+small stream
 served across a multi-device host mesh through the pluggable executors.
+Every mode drives the serving stack through the unified client
+(``repro.api.MBEClient``) and takes ``--engine {dense,compact}`` — the
+same stream served by either registered engine (``repro.core.engine``).
 
 Part 1 (``run``) — three serving configurations against the
-one-compile-per-graph baseline (a fresh jitted ``engine_dense`` runner per
-request — what a naive service would do, so its compile count equals the
-request count):
+one-compile-per-graph baseline (a fresh jitted per-graph run — what a
+naive service would do, so its compile count equals the request count):
 
 * ``exact``  — batching without bucketing: graphs batch only when their
   exact shapes collide.
@@ -18,7 +20,10 @@ to the baseline per-graph runs — same biclique sets (decoded from the
 collect buffer), same order-independent fingerprints — and that the
 bucketed policies compile at least 2x fewer executables than
 one-compile-per-graph (the cache's miss counter is an honest compile
-count; see ``repro.serving.cache``).
+count; see ``repro.serving.cache``).  A final cross-engine pass serves the
+SAME stream through the *other* engine and asserts the biclique sets are
+byte-identical between engines (the ``engines_identical`` column; the
+``--json`` summary records which engine ran).
 
 Part 2 (``run_skewed``) — one HEAVY graph plus many light ones, all in the
 same pow2 bucket (the serving analog of cuMBE's workload imbalance): under
@@ -30,22 +35,24 @@ STRICTLY higher lane occupancy (busy-steps / total lane-steps) with no new
 executable compiles beyond one round-mode entry per (bucket, batch) pair.
 
 Part 3 (``run_mixed_mesh``) — ONE heavy graph above the big-graph routing
-threshold plus >= 16 small graphs, served through ``ShardedExecutor`` (lane
-pools sharded over every visible device) with the heavy request routed to
-the work-stealing big-graph lane.  The harness asserts the mesh-served
-results are byte-identical to ``LocalExecutor`` and to per-graph runs
-(same biclique sets, counts, and fingerprints), and reports per-worker
-busy-step occupancy for the big lane — asserting the heavy graph's root
-tasks actually spread across >= 2 workers.  Run it on a forced host mesh:
+threshold plus >= 16 small graphs, served through the sharded executor
+(lane pools sharded over every visible device) with the heavy request
+routed to the work-stealing big-graph lane.  The harness asserts the
+mesh-served results are byte-identical to the local executor and to
+per-graph runs (same biclique sets, counts, and fingerprints), and reports
+per-worker busy-step occupancy for the big lane — asserting the heavy
+graph's root tasks actually spread across >= 2 workers.  Run it on a
+forced host mesh:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m benchmarks.serving --mixed-mesh --big-graph-threshold 16
 
 ``--json out.json`` (any mode) writes the result rows plus a summary
-(requests / wall_s / occupancy / compiles) as a machine-readable artifact
-— CI uploads it per run to seed the perf trajectory.
+(requests / wall_s / occupancy / compiles / engine) as a machine-readable
+artifact — CI uploads it per run to seed the perf trajectory.
 
   python -m benchmarks.serving --requests 32
+  python -m benchmarks.serving --requests 16 --engine compact
   python -m benchmarks.serving --skewed --requests 12 --steps-per-round 64
 """
 from __future__ import annotations
@@ -57,51 +64,55 @@ import time
 import numpy as np
 import jax
 
+from repro.api import MBEClient, MBEOptions
 from repro.baselines import bicliques_to_key_set
-from repro.core import engine_dense as ed
+from repro.core.engine import get_engine, list_engines
 from repro.data.generators import (dense_small, random_bipartite,
                                    random_graph_stream)
-from repro.serving import (BucketPolicy, LocalExecutor, MBEServer,
-                           ShardedExecutor)
 
 COLLECT_CAP = 4096
 
 
-def _baseline(graphs) -> tuple[list, list, float]:
+def _baseline(graphs, engine: str) -> tuple[list, list, float]:
     """One fresh jit per graph: per-request latencies + reference results."""
+    eng = get_engine(engine)
     refs, lats = [], []
     t0 = time.perf_counter()
     for g in graphs:
         t1 = time.perf_counter()
-        cfg = ed.make_config(g, collect_cap=COLLECT_CAP)
-        ctx = ed.make_context(g, cfg)
-        s0 = ed.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
-        out = jax.jit(lambda st, c=ctx, f=cfg: ed.run(c, f, st))(s0)
+        out = eng.enumerate(g, collect_cap=COLLECT_CAP)
         lats.append(time.perf_counter() - t1)
+        cfg = eng.make_config(g, collect_cap=COLLECT_CAP)
         refs.append((int(out.n_max), int(out.cs),
                      bicliques_to_key_set(
-                         ed.collected_bicliques(cfg, out, g.n_u, g.n_v))))
+                         eng.collected(cfg, out, g.n_u, g.n_v))))
     return refs, lats, time.perf_counter() - t0
 
 
-def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
+def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
+        engine: str = "dense") -> list:
     graphs = random_graph_stream(n_requests, seed=seed)
-    refs, base_lats, base_wall = _baseline(graphs)
-    rows = [dict(policy="per-graph", wall_s=round(base_wall, 3),
+    refs, base_lats, base_wall = _baseline(graphs, engine)
+    rows = [dict(policy="per-graph", engine=engine,
+                 wall_s=round(base_wall, 3),
                  graphs_per_s=round(n_requests / base_wall, 2),
                  mean_latency_s=round(sum(base_lats) / len(base_lats), 4),
                  compiles=n_requests, cache_hits=0, batches=n_requests,
                  pad_lanes=0, occupancy=1.0, idle_lane_steps=0)]
-    print(f"[serving] baseline: {n_requests} graphs, "
+    print(f"[serving] baseline ({engine}): {n_requests} graphs, "
           f"{n_requests} compiles, {base_wall:.2f}s")
 
+    pow2_results = None
     for mode in ("exact", "linear", "pow2"):
-        server = MBEServer(BucketPolicy(mode=mode, max_batch=max_batch),
-                           collect_cap=COLLECT_CAP, collect=True)
+        client = MBEClient(MBEOptions(
+            engine=engine, bucket_mode=mode, max_batch=max_batch,
+            collect=True, collect_cap=COLLECT_CAP))
         t0 = time.perf_counter()
-        results = server.serve(graphs)
+        results = client.enumerate_many(graphs)
         wall = time.perf_counter() - t0
-        st = server.stats()
+        st = client.stats()
+        if mode == "pow2":
+            pow2_results = results
         # --- byte-identical results, graph by graph -------------------
         for g, r, (ref_n, ref_cs, ref_set) in zip(graphs, results, refs):
             assert r.n_max == ref_n, (mode, g.name, r.n_max, ref_n)
@@ -113,7 +124,7 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
         # must too (the scheduler reports the split per request)
         mean_lat = sum(r.service_s + r.compile_s
                        for r in results) / len(results)
-        row = dict(policy=mode, wall_s=round(wall, 3),
+        row = dict(policy=mode, engine=engine, wall_s=round(wall, 3),
                    graphs_per_s=round(n_requests / wall, 2),
                    mean_latency_s=round(mean_lat, 4),
                    compiles=st["misses"], cache_hits=st["hits"],
@@ -129,6 +140,23 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8) -> list:
             assert 2 * st["misses"] <= n_requests, \
                 (f"{mode}: {st['misses']} compiles vs {n_requests} "
                  f"one-per-graph — bucketing failed to amortize")
+
+    # --- cross-engine identity: the SAME stream through the other
+    # registered engine(s) must yield byte-identical biclique sets ------
+    others = [e for e in list_engines() if e != engine]
+    for other in others:
+        cross = MBEClient(MBEOptions(
+            engine=other, bucket_mode="pow2", max_batch=max_batch,
+            collect=True, collect_cap=COLLECT_CAP)).enumerate_many(graphs)
+        for g, a, b in zip(graphs, pow2_results, cross):
+            assert (a.n_max, a.cs) == (b.n_max, b.cs), \
+                (engine, other, g.name)
+            assert bicliques_to_key_set(a.bicliques) == \
+                bicliques_to_key_set(b.bicliques), (engine, other, g.name)
+        print(f"[serving] cross-engine: {engine} == {other} "
+              f"byte-identical on {n_requests} requests")
+    for r in rows:
+        r["engines_identical"] = True          # the asserts above passed
     return rows
 
 
@@ -152,28 +180,29 @@ def skewed_graph_stream(n_requests: int, seed: int = 0) -> list:
 
 
 def run_skewed(n_requests: int = 12, seed: int = 0, max_batch: int = 4,
-               steps_per_round: int = 64) -> list:
+               steps_per_round: int = 64, engine: str = "dense") -> list:
     graphs = skewed_graph_stream(n_requests, seed=seed)
+    eng = get_engine(engine)
     refs = []
     for g in graphs:
-        out = ed.enumerate_dense(g)
+        out = eng.enumerate(g)
         refs.append((int(out.n_max), int(out.cs)))
 
     rows = []
     occ = {}
     for label, spr in (("flush", 0), ("continuous", steps_per_round)):
-        server = MBEServer(
-            BucketPolicy(mode="pow2", max_batch=max_batch,
-                         steps_per_round=spr))
+        client = MBEClient(MBEOptions(
+            engine=engine, bucket_mode="pow2", max_batch=max_batch,
+            steps_per_round=spr))
         t0 = time.perf_counter()
-        results = server.serve(graphs)
+        results = client.enumerate_many(graphs)
         wall = time.perf_counter() - t0
-        st = server.stats()
+        st = client.stats()
         for g, r, (ref_n, ref_cs) in zip(graphs, results, refs):
             assert (r.n_max, r.cs) == (ref_n, ref_cs), \
                 (label, g.name, (r.n_max, r.cs), (ref_n, ref_cs))
         occ[label] = st["occupancy"]
-        rows.append(dict(mode=label, steps_per_round=spr,
+        rows.append(dict(mode=label, engine=engine, steps_per_round=spr,
                          wall_s=round(wall, 3),
                          rounds=st["batches"], compiles=st["misses"],
                          busy_steps=st["busy_steps"],
@@ -224,7 +253,8 @@ def mixed_mesh_stream(n_small: int, threshold: int, seed: int = 0) -> list:
 
 
 def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
-                   steps_per_round: int = 32, threshold: int = 16) -> list:
+                   steps_per_round: int = 32, threshold: int = 16,
+                   engine: str = "dense") -> list:
     n_dev = jax.device_count()
     if n_dev < 2:
         print(f"[serving-mesh] WARNING: only {n_dev} visible device(s); "
@@ -232,35 +262,36 @@ def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
               f"--xla_force_host_platform_device_count=8 (running anyway "
               f"— the big lane still over-decomposes via vmap workers)")
     graphs = mixed_mesh_stream(n_small, threshold, seed=seed)
+    eng = get_engine(engine)
     refs = []
     for g in graphs:
-        out = ed.enumerate_dense(g, collect_cap=COLLECT_CAP)
+        out = eng.enumerate(g, collect_cap=COLLECT_CAP)
         assert int(out.n_max) <= COLLECT_CAP, g.name
-        cfg = ed.make_config(g, collect_cap=COLLECT_CAP)
+        cfg = eng.make_config(g, collect_cap=COLLECT_CAP)
         refs.append((int(out.n_max), int(out.cs),
                      bicliques_to_key_set(
-                         ed.collected_bicliques(cfg, out, g.n_u, g.n_v))))
+                         eng.collected(cfg, out, g.n_u, g.n_v))))
 
-    from repro.sharding.axes import mbe_serve_mesh
-    pol = BucketPolicy(mode="pow2", max_batch=max_batch,
-                       steps_per_round=steps_per_round,
-                       big_graph_threshold=threshold)
     # total big-lane stealing workers >= 8 regardless of mesh width, so
     # the spread assertion is meaningful even on narrow hosts
     wpd = max(1, 8 // n_dev)
-    executors = [
-        ("local", LocalExecutor(big_workers=8)),
-        ("sharded", ShardedExecutor(mbe_serve_mesh(),
-                                    big_workers_per_device=wpd)),
+    base = MBEOptions(engine=engine, bucket_mode="pow2",
+                      max_batch=max_batch, steps_per_round=steps_per_round,
+                      big_graph_threshold=threshold,
+                      collect=True, collect_cap=COLLECT_CAP)
+    import dataclasses
+    configs = [
+        ("local", dataclasses.replace(base, mesh=None, big_workers=8)),
+        ("sharded", dataclasses.replace(base, mesh="auto",
+                                        workers_per_device=wpd)),
     ]
     rows = []
-    for label, ex in executors:
-        srv = MBEServer(pol, collect_cap=COLLECT_CAP, collect=True,
-                        executor=ex)
+    for label, opts in configs:
+        client = MBEClient(opts)
         t0 = time.perf_counter()
-        results = srv.serve(graphs)
+        results = client.enumerate_many(graphs)
         wall = time.perf_counter() - t0
-        st = srv.stats()
+        st = client.stats()
         # --- byte-identical to per-graph runs, graph by graph ---------
         for g, r, (ref_n, ref_cs, ref_set) in zip(graphs, results, refs):
             assert (r.n_max, r.cs) == (ref_n, ref_cs), (label, g.name)
@@ -270,18 +301,19 @@ def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
         spread = int((busy > 0).sum())
         assert spread >= 2, \
             f"{label}: heavy graph's root tasks not spread: {busy}"
-        rows.append(dict(executor=label, devices=n_dev,
+        rows.append(dict(executor=label, engine=engine, devices=n_dev,
                          requests=len(graphs), wall_s=round(wall, 3),
                          rounds=st["batches"], compiles=st["misses"],
                          occupancy=round(st["occupancy"], 3),
                          big_workers=len(busy), big_workers_busy=spread,
+                         big_imbalance=round(st["big_imbalance"], 3),
                          big_busy_per_worker=busy.tolist()))
         print(f"[serving-mesh] {label} ({n_dev} dev): occupancy "
               f"{st['occupancy']:.3f}, {st['misses']} compiles, "
               f"{wall:.2f}s; heavy graph busy-steps/worker {busy.tolist()}"
               f" ({spread}/{len(busy)} workers busy) — results "
               f"byte-identical to per-graph runs")
-    routed_big = sum(1 for e in srv.routing_log
+    routed_big = sum(1 for e in client.routing_log
                      if e["event"] == "route" and e["route"] == "big")
     assert routed_big == 1, f"expected exactly 1 big route, {routed_big}"
     print(f"[serving-mesh] sharded == local == per-graph on "
@@ -296,10 +328,12 @@ def _write_json(path: str, mode: str, rows: list, requests: int) -> None:
     summary = dict(
         mode=mode,
         requests=requests,
+        engine=head.get("engine"),
         wall_s=head.get("wall_s"),
         occupancy=head.get("occupancy"),
         compiles=head.get("compiles"),
         graphs_per_s=head.get("graphs_per_s"),
+        engines_identical=head.get("engines_identical"),
     )
     with open(path, "w") as f:
         json.dump(dict(benchmark="serving", mode=mode, summary=summary,
@@ -318,6 +352,11 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="dense",
+                    choices=["dense", "compact"],
+                    help="enumeration engine (repro.core.engine registry); "
+                         "the policy sweep also cross-checks the other "
+                         "engine is byte-identical")
     ap.add_argument("--max-batch", type=int, default=None,
                     help="lanes per batch (default: 8, or 4 with --skewed)")
     ap.add_argument("--skewed", action="store_true",
@@ -325,14 +364,14 @@ def main() -> int:
                          "instead of the bucket-policy sweep")
     ap.add_argument("--mixed-mesh", action="store_true",
                     help="mixed big+small stream across the host mesh: "
-                         "ShardedExecutor + big-graph work-stealing lane "
-                         "vs LocalExecutor vs per-graph runs")
+                         "sharded executor + big-graph work-stealing lane "
+                         "vs local executor vs per-graph runs")
     ap.add_argument("--big-graph-threshold", type=int, default=16,
                     help="mixed-mesh mode: routing threshold (root tasks)")
     ap.add_argument("--steps-per-round", type=int, default=64)
     ap.add_argument("--json", type=str, default=None, metavar="OUT",
                     help="write rows + summary (requests/wall_s/occupancy/"
-                         "compiles) as a machine-readable JSON artifact")
+                         "compiles/engine) as a machine-readable artifact")
     args = ap.parse_args()
     if args.mixed_mesh:
         mode = "mixed-mesh"
@@ -340,18 +379,21 @@ def main() -> int:
         rows = run_mixed_mesh(n_small, seed=args.seed,
                               max_batch=args.max_batch or 8,
                               steps_per_round=args.steps_per_round,
-                              threshold=args.big_graph_threshold)
+                              threshold=args.big_graph_threshold,
+                              engine=args.engine)
         requests = n_small + 1
     elif args.skewed:
         mode = "skewed"
         rows = run_skewed(args.requests, seed=args.seed,
                           max_batch=args.max_batch or 4,
-                          steps_per_round=args.steps_per_round)
+                          steps_per_round=args.steps_per_round,
+                          engine=args.engine)
         requests = args.requests
     else:
         mode = "policies"
         rows = run(args.requests, seed=args.seed,
-                   max_batch=args.max_batch or 8)
+                   max_batch=args.max_batch or 8,
+                   engine=args.engine)
         requests = args.requests
     _print_table(rows)
     if args.json:

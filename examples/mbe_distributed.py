@@ -3,10 +3,13 @@
     PYTHONPATH=src python examples/mbe_distributed.py
 
 Re-executes itself with 8 simulated XLA host devices (the paper's
-thread-block grid, scaled down), enumerates a workload-imbalanced
-power-law graph with and without the round-based work-stealing rebalance,
-and prints the per-worker busy-step distribution — the live version of
-the paper's Figure 5.
+thread-block grid, scaled down) and enumerates a workload-imbalanced
+power-law graph through the unified client (``repro.api.MBEClient``):
+``big_graph_threshold=1`` routes the whole graph to the work-stealing
+big-graph lane across the 8-device serving mesh.  Runs with and without
+the round-based work-stealing rebalance (``work_stealing=False`` is the
+paper's noWS ablation) and prints the per-worker busy-step distribution
+— the live version of the paper's Figure 5.
 """
 import os
 import subprocess
@@ -22,9 +25,8 @@ if _CHILD not in os.environ:
 import numpy as np          # noqa: E402
 import jax                  # noqa: E402
 
+from repro import MBEClient, MBEOptions                 # noqa: E402
 from repro.baselines import count_mbea                  # noqa: E402
-from repro.core import distributed as dd                # noqa: E402
-from repro.core import engine_dense as ed               # noqa: E402
 from repro.data import powerlaw_bipartite               # noqa: E402
 
 g = powerlaw_bipartite(256, 512, m_edges=7000, alpha=1.35, seed=12,
@@ -33,23 +35,20 @@ print(f"[mbe] {g.name}: |U|={g.n_u} |V|={g.n_v} |E|={len(g.edges)} "
       f"on {jax.device_count()} devices")
 
 oracle = count_mbea(g)
-mesh = jax.make_mesh((8,), ("workers",))
-cfg = ed.make_config(g)
 
 for ws in (False, True):
-    dist = dd.DistConfig(steps_per_round=512, workers_per_device=2,
-                         work_stealing=ws)
-    _, _, driver = dd.make_distributed_runner(g, cfg, mesh, ("workers",),
-                                              dist)
-    state, log = driver()
-    tot = dd.totals(state)
-    assert tot["n_max"] == oracle, (tot["n_max"], oracle)
-    busy = np.stack([r["busy"] for r in log]).sum(0).astype(float)
+    client = MBEClient(MBEOptions(
+        bucket_mode="exact", big_graph_threshold=1, steps_per_round=512,
+        mesh="auto", workers_per_device=2, work_stealing=ws))
+    res = client.enumerate(g)
+    assert res.n_max == oracle, (res.n_max, oracle)
+    st = client.stats()
+    busy = np.asarray(st["big_busy_per_worker"], dtype=float)
     rel = busy / busy.mean()
     tag = "work-stealing" if ws else "static       "
-    print(f"[{tag}] nMB={tot['n_max']} rounds={len(log)} "
+    print(f"[{tag}] nMB={res.n_max} rounds={st['batches']} "
           f"busy min/med/max = {rel.min():.2f}/{np.median(rel):.2f}/"
-          f"{rel.max():.2f} (x mean)   std={rel.std():.3f}")
+          f"{rel.max():.2f} (x mean)   imbalance={st['big_imbalance']:.3f}")
 
 print("[mbe] both schedules agree with the serial oracle "
       "(benchmarks/workload.py sweeps all dataset families for the "

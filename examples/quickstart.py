@@ -1,16 +1,18 @@
-"""Quickstart: enumerate maximal bicliques with the cuMBE-on-TPU engine.
+"""Quickstart: enumerate maximal bicliques through the one front door.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's Figure-1 example graph, runs the dense (TPU-native)
-engine and the serial Algorithm-1 oracle, and shows they agree; then runs
-a bigger power-law graph through the engine with the paper's degeneracy
-candidate ordering and prints the collected bicliques of the small graph.
+Builds the paper's Figure-1 example graph and enumerates it through
+``MBEClient`` — the single public entry point (``repro.api``) — with
+BOTH engines: the dense TPU-native engine and the paper-faithful
+compact-array engine, checking they agree with each other and with the
+serial Algorithm-1 oracle.  Then serves a bigger power-law graph through
+the same client using the futures API.
 """
 import numpy as np
 
+from repro import MBEClient, MBEOptions, list_engines
 from repro.baselines import enumerate_mbea, bicliques_to_key_set
-from repro.core import engine_dense as ed
 from repro.core.graph import BipartiteGraph
 from repro.data import powerlaw_bipartite
 
@@ -28,28 +30,40 @@ edges = [
 ]
 g = BipartiteGraph.from_edges(5, 6, edges, name="fig1")
 
-state = ed.enumerate_dense(g, collect_cap=32)
-print(f"[fig1] engine found {int(state.n_max)} maximal bicliques "
-      f"in {int(state.nodes)} search nodes")
+client = MBEClient(MBEOptions(collect=True, collect_cap=32))
+res = client.enumerate(g)
+print(f"[fig1] {res.status}: engine found {res.n_max} maximal bicliques "
+      f"in {res.nodes} search nodes")
 
 uname = {v: k for k, v in U.items()}
 vname = {v: k for k, v in V.items()}
-for L, R in ed.collected_bicliques(
-        ed.make_config(g, collect_cap=32), state, g.n_u, g.n_v):
+for L, R in res.bicliques:
     print("   R={%s}  L={%s}" % (",".join(uname[r] for r in R),
                                  ",".join(vname[l] for l in L)))
 
 oracle = enumerate_mbea(g)
-assert int(state.n_max) == len(bicliques_to_key_set(oracle))
-print("[fig1] matches the Algorithm-1 oracle\n")
+assert res.n_max == len(bicliques_to_key_set(oracle))
+print("[fig1] matches the Algorithm-1 oracle")
 
-# --- something bigger ------------------------------------------------------
+# same request, every registered engine, same answer ------------------------
+for name in list_engines():
+    r2 = MBEClient(MBEOptions(engine=name, collect=True,
+                              collect_cap=32)).enumerate(g)
+    assert (r2.n_max, r2.cs) == (res.n_max, res.cs), name
+    assert bicliques_to_key_set(r2.bicliques) == \
+        bicliques_to_key_set(res.bicliques), name
+print(f"[fig1] engines {list_engines()} agree byte-identically\n")
+
+# --- something bigger, via the futures API ---------------------------------
 big = powerlaw_bipartite(192, 384, m_edges=4000, alpha=1.4, seed=7,
                          name="demo-powerlaw")
-state = ed.enumerate_dense(big)
+client = MBEClient(MBEOptions(bucket_mode="exact"))   # one-off: skip padding
+fut = client.submit(big)          # -> MBEFuture: done()/result()/cancel()
+state = fut.result()
 print(f"[{big.name}] |U|={big.n_u} |V|={big.n_v} |E|={len(big.edges)}: "
-      f"{int(state.n_max)} maximal bicliques, "
-      f"{int(state.nodes)} nodes, {int(state.steps)} engine steps")
+      f"{state.n_max} maximal bicliques, "
+      f"{state.nodes} nodes, {state.steps} engine steps "
+      f"({state.latency_s:.2f}s incl. {state.compile_s:.2f}s compile)")
 n_ref = enumerate_mbea(big, collect=False)
-assert int(state.n_max) == n_ref, (int(state.n_max), n_ref)
+assert state.n_max == n_ref, (state.n_max, n_ref)
 print("matches the oracle count — done.")

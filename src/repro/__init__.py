@@ -1,0 +1,45 @@
+"""repro — Accelerating Maximal Biclique Enumeration on GPUs, as a
+production-shaped jax_pallas system.
+
+Public surface (the one front door — see ``repro.api`` / DESIGN.md §7):
+
+    from repro import MBEClient, MBEOptions, BipartiteGraph
+
+    g = BipartiteGraph.from_edges(3, 4, [(0, 0), (0, 1), (1, 1), (2, 3)])
+    res = MBEClient(MBEOptions(collect=True, collect_cap=8)).enumerate(g)
+    print(res.n_max, res.bicliques)
+
+Everything listed in ``__all__`` is covenant: the import-surface test
+(``tests/test_api.py``) fails if a name disappears.  Subpackages
+(``repro.core``, ``repro.serving``, ``repro.launch``, ...) remain
+importable as before; this module only names the stable surface.
+"""
+from repro.api import (MBEClient, MBEFuture, MBEOptions,  # noqa: F401
+                       imbalance)
+from repro.core.engine import (Engine, get_engine,        # noqa: F401
+                               list_engines, register_engine)
+from repro.core.graph import BipartiteGraph               # noqa: F401
+from repro.serving import (BucketPolicy, MBEResult,       # noqa: F401
+                           MBEServer)
+
+__version__ = "0.1.0"
+
+__all__ = [
+    "__version__",
+    # the client facade
+    "MBEClient",
+    "MBEOptions",
+    "MBEFuture",
+    "MBEResult",
+    # graphs
+    "BipartiteGraph",
+    # engine registry
+    "Engine",
+    "get_engine",
+    "register_engine",
+    "list_engines",
+    # serving escape hatches
+    "MBEServer",
+    "BucketPolicy",
+    "imbalance",
+]

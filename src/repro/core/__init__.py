@@ -1,3 +1,7 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution lives here: the two MBE engines
+# (engine_dense — TPU-native bitmask stacks; engine_compact — the
+# paper-faithful compact array), the Engine protocol + registry that
+# unifies them for the serving stack (engine.py), the bipartite graph
+# container (graph.py), and the distributed round function with
+# round-based work stealing (distributed.py).  The public entry point is
+# repro.api.MBEClient (DESIGN.md §7).

@@ -118,7 +118,8 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
                   axis_names: tuple[str, ...],
                   dist: DistConfig = DistConfig(),
                   ctx_batched: bool = False,
-                  with_telemetry: bool = False):
+                  with_telemetry: bool = False,
+                  engine=None):
     """The jitted work-stealing round: (ctx, state) -> state.
 
     Graph context is an explicit argument (replicated over the mesh) so the
@@ -144,7 +145,15 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
 
     The serving executors consume the telemetry form; the classic driver
     keeps the bare-state form for backward compatibility.
+
+    ``engine`` is an ``repro.core.engine.Engine`` (default: the dense
+    engine).  The round works for any registered engine because the
+    steal re-deal only touches the task-queue fields (``tasks``/
+    ``n_tasks``/``tpos``) and the step counter — part of the shared
+    engine contract.
     """
+    if engine is None:
+        from repro.core.engine import DENSE as engine
     if ctx_batched and dist.work_stealing:
         raise ValueError("work stealing requires a shared graph context: "
                          "task indices are graph-local (set "
@@ -157,8 +166,8 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
     def _per_device(ctx: ed.GraphContext, s: ed.DenseState):
         # s leaves have leading dim = workers_per_device
         steps_before = s.steps
-        s = ed.run_batch(ctx, cfg, s, max_steps=dist.steps_per_round,
-                         ctx_batched=ctx_batched)
+        s = engine.run_batch(ctx, cfg, s, max_steps=dist.steps_per_round,
+                             ctx_batched=ctx_batched)
         busy = s.steps - steps_before                    # (wpd,)
         if dist.work_stealing:
             # ---- work-stealing barrier -------------------------------

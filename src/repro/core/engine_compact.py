@@ -28,6 +28,12 @@ Counts are computed through the *gathered* adjacency rows ``adj[P]`` /
 ``adj[Q]`` — the access pattern the compact array induces. The dense engine
 (engine_dense.py) removes the gather; the measured difference between the
 two is the repo's "reverse scanning" ablation analog (benchmarks Fig. 6).
+
+Registered as ``"compact"`` in ``repro.core.engine``, so the paper's data
+structure is servable end to end:
+``MBEClient(MBEOptions(engine="compact")).enumerate(g)`` runs it through
+the same bucket/cache/executor stack as the dense engine (DESIGN.md §7);
+``enumerate_compact`` below remains the exact-shape direct call.
 """
 from __future__ import annotations
 

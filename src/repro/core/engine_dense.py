@@ -31,6 +31,12 @@ per-device worker batch) or one worker per graph across a *shape bucket*
 of different graphs padded to a common ``(n_u, n_v, depth)`` (the batched
 multi-graph serving layer).  Because every shape is static, the compiled
 executable is reusable for any batch of graphs in the same bucket.
+
+Registered as ``"dense"`` in ``repro.core.engine``; the public entry
+point is ``repro.api.MBEClient`` —
+``MBEClient(MBEOptions()).enumerate(g)`` serves this engine through the
+bucketed/cached production path, while ``enumerate_dense`` below remains
+the exact-shape direct call.
 """
 from __future__ import annotations
 

@@ -1,11 +1,18 @@
 """Distributed MBE driver — the paper's workload, end to end.
 
-Enumerates all maximal bicliques of a generated or Konect-format graph on
-every local device (the multi-device run is exercised with simulated
-devices in tests; the production-mesh lowering is dryrun.py's cumbe cell).
+Enumerates all maximal bicliques of a generated or Konect-format graph
+through the unified client (``repro.api.MBEClient``): the whole run is
+ONE request routed to the work-stealing big-graph lane
+(``big_graph_threshold=1``), which spreads root tasks over every local
+device x ``--workers`` stealing workers — exactly the decomposition the
+old hand-wired ``make_distributed_runner`` path built, now behind the
+same front door the serving stack uses.  (The multi-device run is
+exercised with simulated devices in tests; the production-mesh lowering
+is dryrun.py's cumbe cell.)
 
 Usage:
   python -m repro.launch.mbe_run --dataset marvel-like --workers 2
+  python -m repro.launch.mbe_run --suite test --engine compact
   python -m repro.launch.mbe_run --file graph.tsv --no-work-stealing
 """
 from __future__ import annotations
@@ -16,21 +23,29 @@ import time
 import numpy as np
 import jax
 
+from repro.api import MBEClient, MBEOptions, imbalance
 from repro.configs.cumbe import SMOKE
-from repro.core import distributed as dd
-from repro.core import engine_dense as ed
 from repro.data import dataset_suite, load_konect
+
+# per-suite default dataset: the bench suite keeps the historical
+# marvel-like default; the test suite (CI smoke) uses its tiny power-law
+_DEFAULT_DATASET = {"bench": "marvel-like", "test": "powerlaw-tiny"}
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="marvel-like",
-                    help="name from repro.data.dataset_suite")
+    ap.add_argument("--dataset", default=None,
+                    help="name from repro.data.dataset_suite "
+                         "(default: per-suite)")
     ap.add_argument("--suite", default="bench", choices=["test", "bench"])
     ap.add_argument("--file", default=None,
                     help="Konect-format edge list instead of --dataset")
+    ap.add_argument("--engine", default="dense",
+                    choices=["dense", "compact"],
+                    help="enumeration engine (repro.core.engine registry)")
     ap.add_argument("--workers", type=int, default=None,
-                    help="workers per device (default: cumbe SMOKE)")
+                    help="stealing workers per device (default: cumbe "
+                         "SMOKE)")
     ap.add_argument("--steps-per-round", type=int, default=4096)
     ap.add_argument("--no-work-stealing", action="store_true")
     ap.add_argument("--order", default="deg", choices=["deg", "input"])
@@ -40,31 +55,45 @@ def main(argv=None) -> dict:
     if args.file:
         g = load_konect(args.file)
     else:
-        g = dataset_suite(args.suite)[args.dataset]
+        name = args.dataset or _DEFAULT_DATASET[args.suite]
+        g = dataset_suite(args.suite)[name]
     print(f"[mbe] graph {g.name}: |U|={g.n_u} |V|={g.n_v} "
           f"|E|={len(g.edges)}")
 
     n_dev = jax.device_count()
-    mesh = jax.make_mesh((n_dev,), ("workers",))
-    cfg = ed.make_config(g, order_mode=args.order)
-    dist = dd.DistConfig(
+    workers = args.workers or SMOKE.dist.workers_per_device
+    client = MBEClient(MBEOptions(
+        engine=args.engine, order_mode=args.order,
+        bucket_mode="exact",            # one graph: no padding wanted
+        big_graph_threshold=1,          # the whole run IS the big route
         steps_per_round=args.steps_per_round,
-        workers_per_device=args.workers or SMOKE.dist.workers_per_device,
-        work_stealing=not args.no_work_stealing)
-    init, roundf, driver = dd.make_distributed_runner(
-        g, cfg, mesh, ("workers",), dist)
+        mesh="auto" if n_dev > 1 else None,
+        workers_per_device=workers, big_workers=workers,
+        work_stealing=not args.no_work_stealing))
     t0 = time.time()
-    state, log = driver(verbose=args.verbose)
+    fut = client.submit(g)
+    while not fut.done():
+        client.poll()
+        if args.verbose:
+            st = client.stats()
+            print(f"round {st['batches']}: busy/worker = "
+                  f"{st['big_busy_per_worker']}")
+    res = fut.result()
     dt = time.time() - t0
-    tot = dd.totals(state)
-    busy = np.stack([r["busy"] for r in log])  # (rounds, workers)
-    per_worker = busy.sum(0)
-    imb = float(per_worker.max() / max(per_worker.mean(), 1))
-    print(f"[mbe] nMB={tot['n_max']} nodes={tot['nodes']} "
-          f"rounds={len(log)} time={dt:.2f}s "
+    st = client.stats()
+    per_worker = np.asarray(st["big_busy_per_worker"], dtype=np.int64)
+    # max/mean with the mean guarded against zero WITHOUT clamping it to
+    # 1 (the old `max(mean, 1)` silently understated imbalance whenever
+    # mean busy-steps < 1); the client reports the same number as
+    # stats()['big_imbalance']
+    imb = imbalance(per_worker)
+    assert abs(imb - st["big_imbalance"]) < 1e-12
+    print(f"[mbe] nMB={res.n_max} nodes={res.nodes} "
+          f"rounds={st['batches']} time={dt:.2f}s "
+          f"engine={st['engine']} "
           f"imbalance(max/mean)={imb:.3f}")
-    return dict(n_max=tot["n_max"], nodes=tot["nodes"], rounds=len(log),
-                seconds=dt, imbalance=imb)
+    return dict(n_max=res.n_max, nodes=res.nodes, rounds=st["batches"],
+                seconds=dt, imbalance=imb, engine=st["engine"])
 
 
 if __name__ == "__main__":

@@ -8,9 +8,11 @@ request's KV state; finished requests leave, queued requests take their
 slot (continuous batching with static shapes — the cuMBE static-memory
 discipline again).
 
-MBE mode (``--mbe``): serves a stream of bipartite graphs through
-``repro.serving`` — shape-bucketed, vmap-batched enumeration with a
-compiled-executable cache (see that package's docstrings for the model).
+MBE mode (``--mbe``): serves a stream of bipartite graphs through the
+unified client (``repro.api.MBEClient`` over ``repro.serving``) —
+shape-bucketed, vmap-batched enumeration with a compiled-executable
+cache (see those docstrings for the model); ``--engine compact`` serves
+the paper's compact-array engine through the same stack.
 ``--continuous`` switches the scheduler into bounded-round slot mode
 (``--steps-per-round`` engine steps per round): finished lanes are demuxed
 and refilled mid-flight from the pending queue, lifting lane occupancy on
@@ -53,7 +55,8 @@ from repro.sharding.auto import make_rules
 
 def _print_routing(server) -> None:
     """Per-request routing decisions + per-bucket placements, so operators
-    can see which executor served what, with how many lanes, where."""
+    can see which executor served what, with how many lanes, where.
+    Accepts anything with a ``routing_log`` (MBEClient or MBEServer)."""
     for e in server.routing_log:
         if e["event"] == "route":
             print(f"[route] rid={e['rid']} {e['graph']}: -> {e['route']} "
@@ -69,28 +72,26 @@ def _print_routing(server) -> None:
 
 
 def serve_mbe(args) -> dict:
-    """Serve a synthetic mixed-size MBE request stream."""
+    """Serve a synthetic mixed-size MBE request stream through the
+    unified client (``repro.api.MBEClient``)."""
+    from repro.api import MBEClient, MBEOptions
     from repro.data.generators import random_graph_stream
-    from repro.serving import BucketPolicy, MBEServer, ShardedExecutor
     graphs = random_graph_stream(args.requests, seed=args.seed)
     spr = args.steps_per_round if args.continuous else 0
-    policy = BucketPolicy(mode=args.policy, max_batch=args.max_batch,
-                          steps_per_round=spr,
-                          big_graph_threshold=args.big_graph_threshold)
-    executor = None
-    if args.mesh:
-        from repro.sharding.axes import mbe_serve_mesh
-        executor = ShardedExecutor(mbe_serve_mesh(args.mesh))
-    server = MBEServer(policy, executor=executor)
+    client = MBEClient(MBEOptions(
+        engine=args.engine, bucket_mode=args.policy,
+        max_batch=args.max_batch, steps_per_round=spr,
+        big_graph_threshold=args.big_graph_threshold,
+        mesh=args.mesh or None))
     t0 = time.perf_counter()
-    results = server.serve(graphs)
+    results = client.enumerate_many(graphs)
     dt = time.perf_counter() - t0
-    stats = server.stats()
+    stats = client.stats()
     n_max = sum(r.n_max for r in results)
     mode = f"continuous(r={spr})" if args.continuous else "flush"
-    _print_routing(server)
+    _print_routing(client)
     print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
-          f"executor={stats['executor']}, "
+          f"engine={stats['engine']}, executor={stats['executor']}, "
           f"{mode}: {n_max} maximal bicliques, "
           f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
@@ -105,6 +106,10 @@ def serve(argv=None) -> dict:
                     help="serve bipartite graphs (MBE) instead of LM decode")
     ap.add_argument("--policy", default="pow2",
                     choices=["pow2", "linear", "exact"])
+    ap.add_argument("--engine", default="dense",
+                    choices=["dense", "compact"],
+                    help="MBE: enumeration engine "
+                         "(repro.core.engine registry)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--continuous", action="store_true",
                     help="MBE: bounded-round slot scheduling with "

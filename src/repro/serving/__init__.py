@@ -22,10 +22,16 @@ compilation across them.  Four pieces:
   (cuMBE's shared-graph work-stealing layout for routed-big requests).
 * ``scheduler`` — ``MBEServer``: slot-based continuous scheduler.  Per
   bucket, a live lane pool runs in bounded rounds; finished lanes are
-  demuxed immediately and refilled in place from the pending queue
-  (``admit``/``poll``/``drain``, with ``flush``/``serve`` kept as
-  whole-queue wrappers).  All execution is delegated through the
-  ``Executor`` interface; routing decisions land in ``routing_log``.
+  demuxed immediately and refilled in place from the priority-aware
+  pending queue (``admit``/``poll``/``drain``/``cancel``, with
+  ``flush``/``serve`` kept as whole-queue wrappers).  All execution is
+  delegated through the ``Executor`` interface and any registered
+  ``repro.core.engine`` (``engine="compact"`` serves the paper's compact
+  array); routing decisions land in ``routing_log``.
+
+The public entry point over this package is ``repro.api.MBEClient``
+(DESIGN.md §7), which adds futures, priorities, deadlines and
+cancellation on top of ``MBEServer``.
 """
 from repro.serving.buckets import (BucketPolicy, BucketSpec,  # noqa: F401
                                    plan_batch_size, plan_bucket,
@@ -35,4 +41,4 @@ from repro.serving.executor import (BigGraphLane, Executor,    # noqa: F401
                                     LanePool, LocalExecutor,
                                     RoundTelemetry, ShardedExecutor)
 from repro.serving.scheduler import (MBEResult, MBEServer,     # noqa: F401
-                                     Request)
+                                     Request, imbalance)

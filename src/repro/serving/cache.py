@@ -50,6 +50,7 @@ from typing import Callable
 import jax
 
 from repro.core import engine_dense as ed
+from repro.core.engine import DENSE, Engine
 
 
 class CacheEntry:
@@ -126,20 +127,29 @@ class ExecutableCache:
         return entry
 
     def get_round(self, cfg: ed.EngineConfig, batch: int,
-                  max_steps: int | None = None) -> CacheEntry:
+                  max_steps: int | None = None,
+                  engine: Engine | None = None) -> CacheEntry:
         """Local-backend batched enumeration executable: (ctx, state) ->
         state, where all leaves carry a leading axis of size ``batch``.
         ``max_steps`` bounds every lane to that many engine steps per call
         (None = run to completion); it is baked into the executable, hence
-        part of the cache key."""
+        part of the cache key.  ``engine`` selects the enumeration engine
+        (``repro.core.engine`` registry; default dense).  The dense engine
+        keeps the legacy bare-``EngineConfig`` key; other engines qualify
+        the config slot with their name — ``EngineConfig`` is shared
+        between engines, so an unqualified compact entry would collide
+        with the dense executable for the same bucket."""
+        eng = engine or DENSE
+
         def build():
             @jax.jit
-            def fn(ctx: ed.GraphContext, s: ed.DenseState) -> ed.DenseState:
-                return ed.run_batch(ctx, cfg, s, max_steps=max_steps,
-                                    ctx_batched=True)
+            def fn(ctx, s):
+                return eng.run_batch(ctx, cfg, s, max_steps=max_steps,
+                                     ctx_batched=True)
             return fn
 
-        return self.get_entry((cfg, batch, max_steps), build)
+        head = cfg if eng.name == DENSE.name else (eng.name, cfg)
+        return self.get_entry((head, batch, max_steps), build)
 
     def get(self, cfg: ed.EngineConfig, batch: int) -> CacheEntry:
         """Run-to-completion executable (drain entry)."""

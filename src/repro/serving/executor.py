@@ -48,6 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import distributed as dd
 from repro.core import engine_dense as ed
+from repro.core.engine import DENSE, Engine
 from repro.serving.buckets import BucketPolicy, plan_batch_size
 from repro.serving.cache import ExecutableCache
 from repro.sharding.axes import MBE_LANE_AXIS
@@ -59,39 +60,33 @@ DEFAULT_BIG_ROUND_STEPS = 2048
 
 
 def fresh_lane_state(cfg: ed.EngineConfig, n_tasks: int) -> ed.DenseState:
-    """Worker state owning root tasks [0, n_tasks), task queue padded to the
-    bucket-wide capacity ``cfg.n_u`` so every lane has identical shapes."""
-    s = ed.init_state(cfg, np.arange(n_tasks, dtype=np.int32))
-    pad = np.full(cfg.n_u, -1, np.int32)
-    pad[:n_tasks] = np.arange(n_tasks, dtype=np.int32)
-    return s._replace(tasks=jnp.asarray(pad))
+    """Dense-engine lane state (back-compat alias for
+    ``Engine.fresh_lane_state``; pools carry their own engine now)."""
+    return DENSE.fresh_lane_state(cfg, n_tasks)
 
 
 def dummy_context(cfg: ed.EngineConfig) -> ed.GraphContext:
-    """All-zero context for idle lanes (paired with ``fresh_lane_state(cfg,
-    0)`` the lane is born done and never reads it)."""
-    return ed.GraphContext(
-        adj=jnp.zeros((cfg.n_u, cfg.wv), jnp.uint32),
-        order=jnp.zeros((cfg.n_u,), jnp.int32),
-        rank=jnp.zeros((cfg.n_u,), jnp.int32),
-        l_root=jnp.zeros((cfg.wv,), jnp.uint32),
-        root_counts=jnp.zeros((cfg.n_u,), jnp.int32))
+    """Dense-engine idle-lane context (back-compat alias for
+    ``Engine.dummy_context``)."""
+    return DENSE.dummy_context(cfg)
 
 
 class LanePool:
-    """Device-side half of a bucket's lane pool: the batched ``DenseState``/
-    ``GraphContext`` pytrees plus their static shape.  Owned and mutated
-    exclusively by an ``Executor``; the scheduler holds the host-side slot
-    bookkeeping (which request occupies which lane) and never touches the
-    arrays directly."""
+    """Device-side half of a bucket's lane pool: the batched state/context
+    pytrees (whatever types ``engine`` mints) plus their static shape.
+    Owned and mutated exclusively by an ``Executor``; the scheduler holds
+    the host-side slot bookkeeping (which request occupies which lane) and
+    never touches the arrays directly."""
 
-    __slots__ = ("cfg", "B", "state", "ctx")
+    __slots__ = ("cfg", "B", "engine", "state", "ctx")
 
-    def __init__(self, cfg: ed.EngineConfig, n_lanes: int):
+    def __init__(self, cfg: ed.EngineConfig, n_lanes: int,
+                 engine: Engine | None = None):
         self.cfg = cfg
         self.B = n_lanes
-        self.state: ed.DenseState | None = None
-        self.ctx: ed.GraphContext | None = None
+        self.engine = engine or DENSE
+        self.state = None
+        self.ctx = None
 
 
 @dataclasses.dataclass
@@ -116,11 +111,14 @@ class Executor(abc.ABC):
         (backend-constrained: e.g. divisible by the mesh size)."""
 
     # -- pool lifecycle -------------------------------------------------
-    def new_pool(self, cfg: ed.EngineConfig, n_lanes: int) -> LanePool:
+    def new_pool(self, cfg: ed.EngineConfig, n_lanes: int,
+                 engine: Engine | None = None) -> LanePool:
         """Fresh pool of ``n_lanes`` idle (born-done) lanes, placed on this
-        backend's devices."""
-        pool = LanePool(cfg, n_lanes)
-        ds, dc = fresh_lane_state(cfg, 0), dummy_context(cfg)
+        backend's devices.  ``engine`` picks the enumeration engine the
+        pool's lanes run (default dense)."""
+        pool = LanePool(cfg, n_lanes, engine)
+        eng = pool.engine
+        ds, dc = eng.fresh_lane_state(cfg, 0), eng.dummy_context(cfg)
         pool.state = jax.tree.map(lambda x: jnp.stack([x] * n_lanes), ds)
         pool.ctx = jax.tree.map(lambda x: jnp.stack([x] * n_lanes), dc)
         sh = self._pool_sharding()
@@ -153,11 +151,13 @@ class Executor(abc.ABC):
             sharding=self._pool_sharding())
 
     def evict(self, pool: LanePool, i: int) -> None:
-        """Dummy-out lane ``i`` (step-cap eviction): the slot is freed and
-        every other lane's rows are untouched."""
+        """Dummy-out lane ``i`` (step-cap eviction, cancellation, deadline
+        expiry): the slot is freed and every other lane's rows are
+        untouched."""
         pool.state, pool.ctx = ed.replace_lane(
-            pool.state, pool.ctx, i, fresh_lane_state(pool.cfg, 0),
-            dummy_context(pool.cfg), sharding=self._pool_sharding())
+            pool.state, pool.ctx, i, pool.engine.fresh_lane_state(pool.cfg, 0),
+            pool.engine.dummy_context(pool.cfg),
+            sharding=self._pool_sharding())
 
     # -- execution ------------------------------------------------------
     @abc.abstractmethod
@@ -187,10 +187,12 @@ class Executor(abc.ABC):
         """Human-readable lane placement for the routing log."""
 
     @abc.abstractmethod
-    def big_lane(self, cfg: ed.EngineConfig, ctx: ed.GraphContext,
-                 n_roots: int, cache: ExecutableCache,
-                 budget: int | None) -> "BigGraphLane":
-        """Work-stealing lane for one routed-big graph on this backend."""
+    def big_lane(self, cfg: ed.EngineConfig, ctx, n_roots: int,
+                 cache: ExecutableCache, budget: int | None,
+                 engine: Engine | None = None) -> "BigGraphLane":
+        """Work-stealing lane for one routed-big graph on this backend
+        (``engine`` selects the enumeration engine, default dense; the
+        executor's ``work_stealing`` flag selects the noWS ablation)."""
 
     def _pool_sharding(self):
         return None                 # single-device backends
@@ -205,15 +207,17 @@ class LocalExecutor(Executor):
 
     name = "local"
 
-    def __init__(self, big_workers: int = 4):
+    def __init__(self, big_workers: int = 4, work_stealing: bool = True):
         self.big_workers = big_workers
+        self.work_stealing = work_stealing
 
     def plan_lanes(self, n_pending: int, policy: BucketPolicy) -> int:
         return plan_batch_size(n_pending, policy)
 
     def run_round(self, pool: LanePool, cache: ExecutableCache,
                   budget: int | None) -> RoundTelemetry:
-        entry = cache.get_round(pool.cfg, pool.B, budget)
+        entry = cache.get_round(pool.cfg, pool.B, budget,
+                                engine=pool.engine)
         before = np.asarray(pool.state.steps)
         out, wall, compile_s = entry.timed_call(pool.ctx, pool.state)
         pool.state = out
@@ -223,10 +227,11 @@ class LocalExecutor(Executor):
     def placement(self, n_lanes: int) -> str:
         return f"1 device x {n_lanes} vmap lanes"
 
-    def big_lane(self, cfg, ctx, n_roots, cache, budget):
+    def big_lane(self, cfg, ctx, n_roots, cache, budget, engine=None):
         mesh = Mesh(np.array(jax.devices()[:1]), (MBE_LANE_AXIS,))
         return BigGraphLane(self.name, cfg, mesh, MBE_LANE_AXIS,
-                            self.big_workers, ctx, n_roots, cache, budget)
+                            self.big_workers, ctx, n_roots, cache, budget,
+                            engine=engine, work_stealing=self.work_stealing)
 
 
 class ShardedExecutor(Executor):
@@ -248,13 +253,15 @@ class ShardedExecutor(Executor):
     name = "sharded"
 
     def __init__(self, mesh: Mesh, axis: str = MBE_LANE_AXIS,
-                 big_workers_per_device: int = 1):
+                 big_workers_per_device: int = 1,
+                 work_stealing: bool = True):
         if axis not in mesh.axis_names:
             raise ValueError(f"mesh has no axis {axis!r}: {mesh.axis_names}")
         self.mesh = mesh
         self.axis = axis
         self.n_devices = int(mesh.shape[axis])
         self.big_workers_per_device = big_workers_per_device
+        self.work_stealing = work_stealing
 
     def _pool_sharding(self):
         return NamedSharding(self.mesh, P(self.axis))
@@ -269,7 +276,8 @@ class ShardedExecutor(Executor):
                   budget: int | None) -> RoundTelemetry:
         cfg, B = pool.cfg, pool.B
         wpd = B // self.n_devices
-        key = ((self.name, self.mesh, self.axis, wpd, cfg), B, budget)
+        key = ((self.name, pool.engine.name, self.mesh, self.axis, wpd,
+                cfg), B, budget)
 
         def build():
             dist = dd.DistConfig(
@@ -278,7 +286,8 @@ class ShardedExecutor(Executor):
                 workers_per_device=wpd, work_stealing=False)
             fn, _, _ = dd.make_round_fn(cfg, self.mesh, (self.axis,), dist,
                                         ctx_batched=True,
-                                        with_telemetry=True)
+                                        with_telemetry=True,
+                                        engine=pool.engine)
             return fn
 
         entry = cache.get_entry(key, build)
@@ -295,10 +304,11 @@ class ShardedExecutor(Executor):
         return (f"{self.n_devices} devices x {wpd} lanes "
                 f"(axis {self.axis!r})")
 
-    def big_lane(self, cfg, ctx, n_roots, cache, budget):
+    def big_lane(self, cfg, ctx, n_roots, cache, budget, engine=None):
         return BigGraphLane(self.name, cfg, self.mesh, self.axis,
                             self.big_workers_per_device, ctx, n_roots,
-                            cache, budget)
+                            cache, budget, engine=engine,
+                            work_stealing=self.work_stealing)
 
 
 class BigGraphLane:
@@ -315,25 +325,29 @@ class BigGraphLane:
     live)."""
 
     def __init__(self, backend: str, cfg: ed.EngineConfig, mesh: Mesh,
-                 axis: str, workers_per_device: int, ctx: ed.GraphContext,
-                 n_roots: int, cache: ExecutableCache, budget: int | None):
+                 axis: str, workers_per_device: int, ctx,
+                 n_roots: int, cache: ExecutableCache, budget: int | None,
+                 engine: Engine | None = None, work_stealing: bool = True):
         self.cfg = cfg
         self.mesh = mesh
         self.axis = axis
+        self.engine = engine or DENSE
         n_dev = int(mesh.shape[axis])
         self.n_workers = n_dev * workers_per_device
         self.round_steps = (budget if budget and budget > 0
                             else DEFAULT_BIG_ROUND_STEPS)
         dist = dd.DistConfig(steps_per_round=self.round_steps,
                              workers_per_device=workers_per_device,
-                             work_stealing=True)
-        key = (("ws", backend, mesh, axis, workers_per_device, cfg),
+                             work_stealing=work_stealing)
+        key = (("ws", backend, self.engine.name, work_stealing, mesh, axis,
+                workers_per_device, cfg),
                self.n_workers, self.round_steps)
 
         def build():
             fn, _, _ = dd.make_round_fn(cfg, mesh, (axis,), dist,
                                         ctx_batched=False,
-                                        with_telemetry=True)
+                                        with_telemetry=True,
+                                        engine=self.engine)
             return fn
 
         self._entry = cache.get_entry(key, build)
@@ -344,7 +358,7 @@ class BigGraphLane:
         per = []
         for w in range(self.n_workers):
             tasks = np.arange(w, n_roots, self.n_workers, dtype=np.int32)
-            s = ed.init_state(cfg, tasks)
+            s = self.engine.init_state(cfg, tasks)
             pad = np.full(T, -1, np.int32)
             pad[: tasks.shape[0]] = tasks
             per.append(s._replace(tasks=jnp.asarray(pad)))

@@ -49,19 +49,35 @@ busy-step telemetry lands in ``stats()['big_busy_per_worker']``.  Every
 routing decision (and every pool/lane placement) is appended to
 ``routing_log`` so operators can see why a request queued where it did.
 
-Scheduling APIs:
+Engines: the scheduler is engine-generic — ``MBEServer(engine="compact")``
+serves the paper's compact-array engine through the same pools, cache and
+executors (``repro.core.engine`` registry; DESIGN.md §7).
 
-* ``admit(g)``  — enqueue one graph, stamping its queueing clock.
+Scheduling APIs (the public front door is ``repro.api.MBEClient``; these
+remain the supported low-level surface):
+
+* ``admit(g, priority=, deadline_s=)`` — enqueue one graph, stamping its
+  queueing clock.  Higher ``priority`` overtakes FIFO order within the
+  bucket at placement time; ``deadline_s`` bounds the request's
+  wall-clock lifetime.
 * ``poll()``    — one scheduling round over the big-graph lane and every
-  bucket with work: create/refill pools, run one bounded round each,
-  demux completions.  Returns the results that completed this poll.
+  bucket with work: expire deadlines, create/refill pools, run one
+  bounded round each, demux completions.  Returns the results that
+  completed this poll.
 * ``drain()``   — poll until no pending requests and no live lanes.
+* ``cancel(rid)`` — drop a pending request before it compiles, or evict
+  an in-flight lane (refilled next poll); the flagged result
+  (``cancelled=True``) is stashed for the next poll/reap.
+* ``reap()``    — deliver stashed results without running a round.
 * ``flush()`` / ``serve()`` — thin wrappers over ``drain()`` for the
   original whole-queue callers; ``submit`` is an alias of ``admit``.
 
-Requests leave the pending queue only when they are physically placed
-into a lane, so an exception mid-drain (e.g. a lane exceeding
-``max_graph_steps``) cannot lose queued-but-unserved requests.
+Request lifecycle (DESIGN.md §7): pending -> placed -> running ->
+{done, cancelled, timed_out}; terminal states are reported on
+``MBEResult.status``, never raised.  Requests leave the pending queue
+only when they are physically placed into a lane, so an exception
+mid-drain (e.g. a lane exceeding ``max_graph_steps``) cannot lose
+queued-but-unserved requests.
 
 Accounting: per-request ``queue_s`` (admit -> lane placement) and
 ``service_s`` (execution wall while resident, excluding compilation) are
@@ -74,20 +90,34 @@ up as this ratio, and the big-graph lane's rounds enter the same ledger.
 """
 from __future__ import annotations
 
-import collections
+import bisect
 import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import engine_dense as ed
 from repro.core.distributed import totals as dd_totals
+from repro.core.engine import Engine, get_engine
 from repro.core.graph import BipartiteGraph
 from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_bucket,
                                    plan_route)
 from repro.serving.cache import ExecutableCache
-from repro.serving.executor import (BigGraphLane, Executor, LocalExecutor,
-                                    fresh_lane_state)
+from repro.serving.executor import BigGraphLane, Executor, LocalExecutor
+
+
+def imbalance(per_worker) -> float:
+    """Workload imbalance max/mean over per-worker busy steps.
+
+    The mean is guarded against zero WITHOUT clamping it to 1: the old
+    ``max() / max(mean(), 1)`` formula silently understated imbalance
+    whenever 0 < mean < 1 (e.g. one worker with 8 busy steps among 15
+    idle ones reported 8x instead of the true 16x).  An all-idle vector
+    reports 1.0 (no work is trivially balanced)."""
+    a = np.asarray(per_worker, dtype=np.float64).ravel()
+    if a.size == 0:
+        return 1.0
+    mean = float(a.mean())
+    return float(a.max()) / mean if mean > 0 else 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +128,50 @@ class Request:
     swapped: bool               # True if submit() transposed the graph
     t_admit: float = 0.0        # perf_counter stamp at admission
     big: bool = False           # routed to the work-stealing big-graph lane
+    priority: int = 0           # higher pops first within a bucket queue
+    deadline: float | None = None   # absolute perf_counter expiry (admit
+    #                             stamp + deadline_s), None = no deadline
+
+
+class _PendingQueue:
+    """Priority-aware pending queue: pops the highest ``priority`` first,
+    FIFO (admission order) within a priority level.  Keeps the deque
+    interface the scheduler already speaks (``append``/``popleft``/
+    ``len``) plus the lifecycle hooks (``remove``/``expired``)."""
+
+    __slots__ = ("_items",)
+
+    def __init__(self):
+        # sorted ascending by (-priority, rid): head = highest priority,
+        # earliest admission
+        self._items: list[tuple[tuple[int, int], Request]] = []
+
+    def append(self, req: Request) -> None:
+        bisect.insort(self._items, ((-req.priority, req.rid), req))
+
+    def popleft(self) -> Request:
+        return self._items.pop(0)[1]
+
+    def remove(self, rid: int) -> Request | None:
+        """Drop (and return) the queued request with this rid, if any."""
+        for j, (_, r) in enumerate(self._items):
+            if r.rid == rid:
+                return self._items.pop(j)[1]
+        return None
+
+    def expired(self, now: float) -> list[Request]:
+        """Drop (and return) every queued request whose deadline passed."""
+        out = [r for _, r in self._items
+               if r.deadline is not None and now >= r.deadline]
+        for r in out:
+            self.remove(r.rid)
+        return out
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return (r for _, r in self._items)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +201,20 @@ class MBEResult:
     #                             (compilation excluded)
     compile_s: float = 0.0      # XLA compile time incurred while resident
     #                             (0.0 when the executable was cached)
+    cancelled: bool = False     # request was cancelled (pending or
+    #                             in-flight); counters are the progress
+    #                             made before eviction, bicliques is None
+    timed_out: bool = False     # request's deadline expired before it
+    #                             finished; same partial-progress contract
+
+    @property
+    def status(self) -> str:
+        """Terminal lifecycle state: done | cancelled | timed_out."""
+        if self.cancelled:
+            return "cancelled"
+        if self.timed_out:
+            return "timed_out"
+        return "done"
 
 
 class _LanePool:
@@ -139,7 +227,8 @@ class _LanePool:
         self.bucket = bucket
         self.cfg = server._engine_config(bucket)
         self.B = n_lanes
-        self.pool = server.executor.new_pool(self.cfg, n_lanes)
+        self.pool = server.executor.new_pool(self.cfg, n_lanes,
+                                             engine=server.engine)
         self.reqs: list[Request | None] = [None] * n_lanes
         self._queue_s = [0.0] * n_lanes
         self._service_s = [0.0] * n_lanes
@@ -149,17 +238,20 @@ class _LanePool:
     def n_live(self) -> int:
         return sum(r is not None for r in self.reqs)
 
-    def refill(self, queue: collections.deque, server: "MBEServer") -> int:
+    def refill(self, queue: "_PendingQueue", server: "MBEServer") -> int:
         """Place queued requests into free lanes (one batched row scatter,
-        not one full-pool copy per lane)."""
+        not one full-pool copy per lane).  The queue pops highest-priority
+        first, so a later high-priority admit overtakes the FIFO backlog
+        at placement time."""
         idx, states, ctxs = [], [], []
         for i in range(self.B):
             if self.reqs[i] is not None or not queue:
                 continue
             r = queue.popleft()
             idx.append(i)
-            ctxs.append(ed.make_context(r.graph, self.cfg))
-            states.append(fresh_lane_state(self.cfg, r.graph.n_u))
+            ctxs.append(server.engine.make_context(r.graph, self.cfg))
+            states.append(server.engine.fresh_lane_state(self.cfg,
+                                                         r.graph.n_u))
             self.reqs[i] = r
             self._queue_s[i] = time.perf_counter() - r.t_admit
             self._service_s[i] = 0.0
@@ -221,8 +313,8 @@ class _LanePool:
             lane = server.executor.lane(self.pool, i)
             bic = None
             if server.collect:
-                bic = ed.collected_bicliques(self.cfg, lane, r.graph.n_u,
-                                             r.graph.n_v)
+                bic = server.engine.collected(self.cfg, lane, r.graph.n_u,
+                                              r.graph.n_v)
                 if r.swapped:   # back to the submitted orientation
                     bic = [(R, L) for L, R in bic]
             results[r.rid] = MBEResult(
@@ -262,7 +354,8 @@ class MBEServer:
                  max_graph_steps: int | None = None,
                  executor: Executor | None = None,
                  cache_capacity: int | None =
-                 ExecutableCache.DEFAULT_CAPACITY):
+                 ExecutableCache.DEFAULT_CAPACITY,
+                 engine: str | Engine = "dense"):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
@@ -270,11 +363,12 @@ class MBEServer:
         self.impl = impl
         self.max_graph_steps = max_graph_steps
         self.executor = executor or LocalExecutor()
+        self.engine = get_engine(engine)
         self.cache = ExecutableCache(capacity=cache_capacity)
         self.routing_log: list[dict] = []
-        self._queues: dict[BucketSpec, collections.deque] = {}
+        self._queues: dict[BucketSpec, _PendingQueue] = {}
         self._pools: dict[BucketSpec, _LanePool] = {}
-        self._big_queue: collections.deque = collections.deque()
+        self._big_queue: _PendingQueue = _PendingQueue()
         self._big: _BigSlot | None = None
         self._big_busy_per_worker: np.ndarray | None = None
         self._completed: dict[int, MBEResult] = {}
@@ -284,9 +378,13 @@ class MBEServer:
         self._n_pad_lanes = 0
         self._busy_steps = 0
         self._total_lane_steps = 0
+        self._n_cancelled = 0
+        self._n_timed_out = 0
+        self._sinks: list = []
 
     # ------------------------------------------------------------------
-    def admit(self, g: BipartiteGraph) -> int:
+    def admit(self, g: BipartiteGraph, priority: int = 0,
+              deadline_s: float | None = None) -> int:
         """Enqueue one graph; returns the request id used to demux.
 
         The graph is canonicalized (|U| <= |V|) internally for the engine;
@@ -294,6 +392,13 @@ class MBEServer:
         demux, so callers always get (L ⊆ their V, R ⊆ their U).  Graphs
         at/above ``policy.big_graph_threshold`` root tasks route to the
         work-stealing big-graph lane instead of a bucket lane pool.
+
+        ``priority``: higher values are placed into freed lanes before
+        lower ones within the same bucket queue (FIFO within a level).
+        ``deadline_s``: wall-clock budget from admission; a request that
+        has not finished when it expires is completed with
+        ``timed_out=True`` (pending: never compiled/placed; in-flight:
+        lane evicted, counters report the partial progress).
         """
         gc = g.canonical()
         if gc.n_u < 1:
@@ -302,8 +407,11 @@ class MBEServer:
         self._next_rid += 1
         route = plan_route(gc, self.policy)
         bucket = plan_bucket(gc, self.policy)
+        t0 = time.perf_counter()
         req = Request(rid, gc, bucket, swapped=g.n_u > g.n_v,
-                      t_admit=time.perf_counter(), big=route == "big")
+                      t_admit=t0, big=route == "big", priority=priority,
+                      deadline=None if deadline_s is None
+                      else t0 + float(deadline_s))
         thr = self.policy.big_graph_threshold
         if req.big:
             self._big_queue.append(req)
@@ -315,8 +423,7 @@ class MBEServer:
                        f"root tasks spread over mesh workers with "
                        f"work stealing"))
         else:
-            self._queues.setdefault(bucket,
-                                    collections.deque()).append(req)
+            self._queues.setdefault(bucket, _PendingQueue()).append(req)
             self.routing_log.append(dict(
                 event="route", rid=rid, graph=gc.name, route="lane",
                 bucket=(bucket.n_u, bucket.n_v),
@@ -330,7 +437,7 @@ class MBEServer:
     submit = admit
 
     # ------------------------------------------------------------------
-    def _engine_config(self, bucket: BucketSpec) -> ed.EngineConfig:
+    def _engine_config(self, bucket: BucketSpec):
         return bucket.engine_config(collect_cap=self.collect_cap,
                                     order_mode=self.order_mode,
                                     impl=self.impl)
@@ -396,9 +503,10 @@ class MBEServer:
     def _start_big(self) -> None:
         req = self._big_queue.popleft()
         cfg = self._engine_config(req.bucket)
-        ctx = ed.make_context(req.graph, cfg)
+        ctx = self.engine.make_context(req.graph, cfg)
         lane = self.executor.big_lane(cfg, ctx, req.graph.n_u, self.cache,
-                                      self.policy.steps_per_round or None)
+                                      self.policy.steps_per_round or None,
+                                      engine=self.engine)
         self._big = _BigSlot(lane, req,
                              queue_s=time.perf_counter() - req.t_admit)
         self.routing_log.append(dict(
@@ -461,7 +569,7 @@ class MBEServer:
             per_out_n = np.asarray(st.out_n)
             for w in range(lane.n_workers):
                 ws = lane.worker_state(w)
-                bic.extend(ed.collected_bicliques(
+                bic.extend(self.engine.collected(
                     lane.cfg, ws, r.graph.n_u, r.graph.n_v))
                 truncated |= int(per_n_max[w]) > int(per_out_n[w])
             if r.swapped:
@@ -474,17 +582,138 @@ class MBEServer:
             queue_s=slot.queue_s, service_s=slot.service_s,
             compile_s=slot.compile_s)
 
+    # -- request lifecycle ---------------------------------------------
+    def _flagged_result(self, req: Request, *, queue_s: float,
+                        service_s: float = 0.0, compile_s: float = 0.0,
+                        counters: dict | None = None,
+                        cancelled: bool = False,
+                        timed_out: bool = False) -> MBEResult:
+        """Terminal result for a request that did not run to completion
+        (cancelled or deadline-expired).  ``counters`` carries the partial
+        progress read from the evicted lane (zeros for never-placed
+        requests); ``bicliques`` is always None — a partial collect
+        buffer is not an answer."""
+        c = counters or {}
+        res = MBEResult(
+            rid=req.rid, name=req.graph.name,
+            n_max=int(c.get("n_max", 0)), cs=int(c.get("cs", 0)),
+            nodes=int(c.get("nodes", 0)), steps=int(c.get("steps", 0)),
+            latency_s=queue_s + service_s + compile_s,
+            bicliques=None, truncated=False, queue_s=queue_s,
+            service_s=service_s, compile_s=compile_s,
+            cancelled=cancelled, timed_out=timed_out)
+        self._n_cancelled += int(cancelled)
+        self._n_timed_out += int(timed_out)
+        self.routing_log.append(dict(
+            event="cancel" if cancelled else "deadline", rid=req.rid,
+            graph=req.graph.name, executor=self.executor.name))
+        return res
+
+    def _lane_counters(self, lane) -> dict:
+        return dict(n_max=int(lane.n_max), cs=int(lane.cs),
+                    nodes=int(lane.nodes), steps=int(lane.steps))
+
+    def _drop_pool_if_idle(self, bucket: BucketSpec) -> None:
+        pool = self._pools.get(bucket)
+        if pool is not None and pool.n_live() == 0 \
+                and not self._queues.get(bucket):
+            del self._pools[bucket]
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by id.  Three cases:
+
+        * **pending** — removed from its queue before any context build or
+          executable compile; the stashed result has zero counters.
+        * **in-flight** — the lane is evicted via row surgery
+          (``Executor.evict``) and refilled from the pending queue on the
+          next poll; the stashed result reports the partial progress.
+        * **completed / delivered / unknown** — returns ``False`` (too
+          late to cancel; the result stands).
+
+        The cancelled request's ``MBEResult`` (flagged ``cancelled=True``)
+        is stashed and delivered by the next ``poll``/``reap``.
+        """
+        if rid in self._completed:
+            return False
+        now = time.perf_counter()
+        for q in [*self._queues.values(), self._big_queue]:
+            req = q.remove(rid)
+            if req is not None:
+                self._completed[rid] = self._flagged_result(
+                    req, queue_s=now - req.t_admit, cancelled=True)
+                return True
+        for bucket, pool in list(self._pools.items()):
+            for i, r in enumerate(pool.reqs):
+                if r is None or r.rid != rid:
+                    continue
+                counters = self._lane_counters(
+                    self.executor.lane(pool.pool, i))
+                self.executor.evict(pool.pool, i)
+                pool.reqs[i] = None
+                self._completed[rid] = self._flagged_result(
+                    r, queue_s=pool._queue_s[i],
+                    service_s=pool._service_s[i],
+                    compile_s=pool._compile_s[i],
+                    counters=counters, cancelled=True)
+                self._drop_pool_if_idle(bucket)
+                return True
+        if self._big is not None and self._big.req.rid == rid:
+            slot, self._big = self._big, None
+            tot = dd_totals(slot.lane.state)
+            tot["steps"] = int(np.asarray(tot["steps"]).sum())
+            self._completed[rid] = self._flagged_result(
+                slot.req, queue_s=slot.queue_s, service_s=slot.service_s,
+                compile_s=slot.compile_s, counters=tot, cancelled=True)
+            return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Complete every deadline-expired request as ``timed_out``:
+        pending requests are dropped before placement (no compile, no
+        context build); in-flight requests are evicted exactly like a
+        cancel, so the pool stays serviceable and the freed lane refills
+        on this same poll."""
+        now = time.perf_counter()
+        for q in [*self._queues.values(), self._big_queue]:
+            for req in q.expired(now):
+                self._completed[req.rid] = self._flagged_result(
+                    req, queue_s=now - req.t_admit, timed_out=True)
+        for bucket, pool in list(self._pools.items()):
+            for i, r in enumerate(pool.reqs):
+                if r is None or r.deadline is None or now < r.deadline:
+                    continue
+                counters = self._lane_counters(
+                    self.executor.lane(pool.pool, i))
+                self.executor.evict(pool.pool, i)
+                pool.reqs[i] = None
+                self._completed[r.rid] = self._flagged_result(
+                    r, queue_s=pool._queue_s[i],
+                    service_s=pool._service_s[i],
+                    compile_s=pool._compile_s[i],
+                    counters=counters, timed_out=True)
+            self._drop_pool_if_idle(bucket)
+        big = self._big
+        if big is not None and big.req.deadline is not None \
+                and now >= big.req.deadline:
+            self._big = None
+            tot = dd_totals(big.lane.state)
+            tot["steps"] = int(np.asarray(tot["steps"]).sum())
+            self._completed[big.req.rid] = self._flagged_result(
+                big.req, queue_s=big.queue_s, service_s=big.service_s,
+                compile_s=big.compile_s, counters=tot, timed_out=True)
+
     # ------------------------------------------------------------------
     def _poll_once(self) -> None:
-        """One scheduling round: advance the big-graph lane, then for every
-        bucket with work, refill free lanes from its queue, run one bounded
-        round, demux completions into the stash, then enforce the step cap
-        (evict-then-raise).  Demuxing BEFORE the cap check — and stashing
-        rather than returning — means a raise can never lose a computed
-        result."""
+        """One scheduling round: expire deadlines, advance the big-graph
+        lane, then for every bucket with work, refill free lanes from its
+        queue, run one bounded round, demux completions into the stash,
+        then enforce the step cap (evict-then-raise).  Demuxing BEFORE the
+        cap check — and stashing rather than returning — means a raise can
+        never lose a computed result."""
+        self._expire_deadlines()
         self._poll_big()
         for bucket in self._buckets_with_work():
-            queue = self._queues.setdefault(bucket, collections.deque())
+            queue = self._queues.setdefault(bucket, _PendingQueue())
             pool = self._ensure_pool(bucket)
             placed = pool.refill(queue, self)
             self._n_lanes += placed
@@ -501,7 +730,28 @@ class MBEServer:
 
     def _take_completed(self) -> dict[int, MBEResult]:
         out, self._completed = self._completed, {}
+        if out:
+            for sink in self._sinks:
+                sink(out)
         return out
+
+    def add_completion_sink(self, fn) -> None:
+        """Register a callable invoked with every ``{rid: MBEResult}``
+        batch at delivery time — whichever caller drove the scheduling
+        loop (``poll``/``drain``/``serve``/``reap``).  This is how
+        ``MBEClient`` keeps its futures coherent even when the low-level
+        server surface is driven directly."""
+        self._sinks.append(fn)
+
+    def reap(self) -> dict[int, MBEResult]:
+        """Deliver results stashed since the last poll/reap WITHOUT running
+        a scheduling round (cancellations and step-cap survivors land here
+        between polls)."""
+        return self._take_completed()
+
+    def has_work(self) -> bool:
+        """Whether any request is pending or in flight."""
+        return self._has_work()
 
     def poll(self) -> dict[int, MBEResult]:
         """One scheduling round; returns {rid: result} for requests that
@@ -545,6 +795,13 @@ class MBEServer:
                     idle_lane_steps=total - self._busy_steps,
                     occupancy=(self._busy_steps / total) if total else 0.0,
                     executor=self.executor.name,
+                    engine=self.engine.name,
+                    cancelled=self._n_cancelled,
+                    timed_out=self._n_timed_out,
                     big_busy_per_worker=([] if busy_pw is None
                                          else busy_pw.tolist()),
+                    # the big lane's live Fig.-5 balance number (1.0 when
+                    # no big request ran)
+                    big_imbalance=(1.0 if busy_pw is None
+                                   else imbalance(busy_pw)),
                     **self.cache.stats())
