@@ -1,0 +1,250 @@
+"""Kernel microbenchmark: the fused step-kernel path vs the unfused ops.
+
+Three levels, all emitted into one ``--json`` artifact (CI uploads
+``BENCH_5.json`` — the perf trajectory for the enumeration hot step):
+
+* **op level** — one candidate-branch worth of work at a benchmark shape:
+  ``unfused`` = ``intersect_count`` + the separate argmin / compare /
+  reduce XLA ops the engines used to issue; ``fused`` = one
+  ``fused_select`` / ``fused_check`` call.  Both variants run per impl
+  (``jnp`` and ``pallas``).
+* **engine level** — full enumeration per graph x engine x
+  ``kernel_impl``: wall time and steps/sec, asserted byte-identical
+  (``n_max``/``cs``) between impls.
+* **segment level** — bounded rounds with a ``steps_per_call`` inner
+  unroll (the multi-step compiled-segment knob): polls, wall, steps/sec.
+
+On CPU the pallas impl runs in **interpret mode**, so parity (or worse)
+is expected there — the artifact records ``backend`` and carries BOTH
+impls so TPU runs slot into the same trajectory and the fused speedup
+becomes visible where it is real.
+
+  python -m benchmarks.kernels --json BENCH_5.json
+  python -m benchmarks.kernels --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine_dense as ed
+from repro.core.engine import get_engine
+from repro.data.generators import random_bipartite
+from repro.kernels.fused_check.ops import fused_check
+from repro.kernels.fused_select.ops import fused_select
+from repro.kernels.intersect_count.ops import intersect_count
+
+_INF = jnp.int32(0x7FFFFFFF)
+
+
+def _timed(fn, *args, repeats: int):
+    """(out, best_wall_s, compile_s): first call AOT-ish timed as compile."""
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args))
+    compile_s = time.perf_counter() - t0
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(*args))
+        walls.append(time.perf_counter() - t0)
+    return out, min(walls), compile_s
+
+
+# ---------------------------------------------------------------------------
+# op level: one candidate branch worth of select/check work
+# ---------------------------------------------------------------------------
+
+def bench_ops(n: int, w: int, repeats: int, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    adj = jnp.asarray(rng.integers(0, 2 ** 32, (n, w), dtype=np.uint32))
+    mask = jnp.asarray(rng.integers(0, 2 ** 32, (w,), dtype=np.uint32))
+    nlp = jnp.int32(int(np.unpackbits(np.asarray(mask).view(np.uint8))
+                        .sum()))
+    act = jnp.asarray(rng.integers(0, 2, (n,)).astype(np.int32))
+    qa = jnp.asarray(rng.integers(0, 2, (n,)).astype(np.int32))
+    pa = jnp.asarray(rng.integers(0, 2, (n,)).astype(np.int32))
+
+    def select_unfused(impl):
+        @jax.jit
+        def f(adj, mask, act):
+            c = intersect_count(adj, mask, impl=impl)
+            return jnp.argmin(jnp.where(act > 0, c, _INF))
+        return f
+
+    def select_fused(impl):
+        return jax.jit(lambda adj, mask, act: fused_select(
+            adj, mask, act, impl=impl))
+
+    def check_unfused(impl):
+        @jax.jit
+        def f(adj, mask, nlp, qa, pa):
+            c = intersect_count(adj, mask, impl=impl)
+            viol = jnp.any((qa > 0) & (c == nlp))
+            full = (pa > 0) & (c == nlp)
+            part = (pa > 0) & (c > 0) & (c < nlp)
+            return viol, full, part, c > 0
+        return f
+
+    def check_fused(impl):
+        return jax.jit(lambda adj, mask, nlp, qa, pa: fused_check(
+            adj, mask, nlp, qa, pa, impl=impl))
+
+    cases = [("select", "unfused", select_unfused, (adj, mask, act)),
+             ("select", "fused", select_fused, (adj, mask, act)),
+             ("check", "unfused", check_unfused, (adj, mask, nlp, qa, pa)),
+             ("check", "fused", check_fused, (adj, mask, nlp, qa, pa))]
+    rows = []
+    for op, variant, make, args in cases:
+        for impl in ("jnp", "pallas"):
+            _, wall, _ = _timed(make(impl), *args, repeats=repeats)
+            rows.append(dict(level="op", op=op, variant=variant, impl=impl,
+                             n=n, w=w, wall_us=round(wall * 1e6, 1)))
+            print(f"[kernels] op {op:6s} {variant:7s} {impl:6s} "
+                  f"({n}x{w}): {wall * 1e6:9.1f} us")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# engine level: full enumeration, steps/sec per kernel_impl
+# ---------------------------------------------------------------------------
+
+def bench_engines(graphs: list, engines: list[str], repeats: int) -> list:
+    rows = []
+    for g in graphs:
+        for engine in engines:
+            eng = get_engine(engine)
+            ref = None
+            for impl in ("jnp", "pallas"):
+                cfg = eng.make_config(g, kernel_impl=impl)
+                ctx = eng.make_context(g, cfg)
+                s0 = eng.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+                runner = jax.jit(lambda s, c=ctx, cf=cfg, e=eng:
+                                 e.run(c, cf, s))
+                out, wall, compile_s = _timed(runner, s0, repeats=repeats)
+                assert bool(eng.done(out)), (g.name, engine, impl)
+                key = (int(out.n_max), int(out.cs), int(out.steps))
+                if ref is None:
+                    ref = key
+                assert key == ref, \
+                    f"{g.name}/{engine}: pallas != jnp ({key} vs {ref})"
+                steps = int(out.steps)
+                rows.append(dict(
+                    level="engine", graph=g.name, n_u=g.n_u, n_v=g.n_v,
+                    engine=engine, impl=impl, steps=steps,
+                    n_max=int(out.n_max), wall_s=round(wall, 4),
+                    compile_s=round(compile_s, 3),
+                    steps_per_s=round(steps / wall, 1)))
+                print(f"[kernels] engine {g.name:16s} {engine:7s} "
+                      f"{impl:6s}: {steps:6d} steps, {wall:8.4f}s "
+                      f"({steps / wall:10.1f} steps/s)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# segment level: steps_per_call unroll over bounded rounds
+# ---------------------------------------------------------------------------
+
+def bench_segments(g, steps_per_round: int, unrolls: list[int],
+                   repeats: int) -> list:
+    eng = get_engine("dense")
+    cfg = eng.make_config(g)
+    ctx = eng.make_context(g, cfg)
+    s0 = eng.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+    rows, ref = [], None
+
+    def drive(runner, s):
+        polls = 0
+        while not bool(eng.done(s)):
+            s = runner(s)
+            polls += 1
+        return jax.block_until_ready(s), polls
+
+    for unroll in unrolls:
+        runner = jax.jit(lambda s, u=unroll: eng.run(
+            ctx, cfg, s, max_steps=steps_per_round, unroll=u))
+        drive(runner, s0)                       # compile + warm
+        walls, polls = [], 0
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out, polls = drive(runner, s0)
+            walls.append(time.perf_counter() - t0)
+        wall = min(walls)
+        key = (int(out.n_max), int(out.cs), int(out.steps))
+        if ref is None:
+            ref = key
+        assert key == ref, f"unroll={unroll} diverged: {key} vs {ref}"
+        steps = int(out.steps)
+        rows.append(dict(
+            level="segment", graph=g.name, steps_per_round=steps_per_round,
+            steps_per_call=unroll, polls=polls, steps=steps,
+            wall_s=round(wall, 4), steps_per_s=round(steps / wall, 1)))
+        print(f"[kernels] segment {g.name:16s} spr={steps_per_round} "
+              f"x{unroll:2d}/call: {polls:4d} polls, {wall:8.4f}s "
+              f"({steps / wall:10.1f} steps/s)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 repeat (CI-sized)")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--steps-per-round", type=int, default=64)
+    ap.add_argument("--json", type=str, default=None, metavar="OUT",
+                    help="write the artifact (e.g. BENCH_5.json)")
+    args = ap.parse_args()
+    repeats = args.repeats or (1 if args.smoke else 3)
+
+    if args.smoke:
+        op_shapes = [(64, 8)]
+        graphs = [random_bipartite(10, 18, p=0.3, seed=0, name="rand-10x18")]
+    else:
+        op_shapes = [(512, 64), (2048, 256)]
+        graphs = [
+            random_bipartite(16, 32, p=0.3, seed=0, name="rand-16x32"),
+            random_bipartite(24, 48, p=0.2, seed=1, name="rand-24x48"),
+            random_bipartite(32, 64, p=0.15, seed=2, name="rand-32x64"),
+        ]
+
+    rows = []
+    for n, w in op_shapes:
+        rows += bench_ops(n, w, repeats)
+    engine_rows = bench_engines(graphs, ["dense", "compact"], repeats)
+    rows += engine_rows
+    rows += bench_segments(graphs[0], args.steps_per_round,
+                           [1, 4] if args.smoke else [1, 4, 16], repeats)
+
+    # headline: per-impl engine-level steps/sec (geomean over graphs x
+    # engines) + the fused:unfused ratio — the number a TPU run moves
+    per_impl = {}
+    for impl in ("jnp", "pallas"):
+        v = [r["steps_per_s"] for r in engine_rows if r["impl"] == impl]
+        per_impl[impl] = round(float(np.exp(np.mean(np.log(v)))), 1)
+    summary = dict(
+        backend=jax.default_backend(),
+        interpret_mode=jax.default_backend() != "tpu",
+        engine_steps_per_s=per_impl,
+        fused_speedup=round(per_impl["pallas"] / per_impl["jnp"], 3),
+        repeats=repeats,
+    )
+    print(f"[kernels] engine steps/s geomean: {per_impl} "
+          f"(fused/unfused = {summary['fused_speedup']}x, "
+          f"backend={summary['backend']}"
+          f"{', interpret' if summary['interpret_mode'] else ''})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dict(benchmark="kernels", summary=summary, rows=rows),
+                      f, indent=2, sort_keys=True)
+        print(f"[kernels] wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -73,32 +73,38 @@ from repro.data.generators import (dense_small, random_bipartite,
 COLLECT_CAP = 4096
 
 
-def _baseline(graphs, engine: str) -> tuple[list, list, float]:
-    """One fresh jit per graph: per-request latencies + reference results."""
+def _baseline(graphs, engine: str) -> tuple[list, list, float, int]:
+    """One fresh jit per graph: per-request latencies + reference results
+    (+ total engine steps, for the steps/sec column)."""
     eng = get_engine(engine)
     refs, lats = [], []
+    steps = 0
     t0 = time.perf_counter()
     for g in graphs:
         t1 = time.perf_counter()
         out = eng.enumerate(g, collect_cap=COLLECT_CAP)
         lats.append(time.perf_counter() - t1)
+        steps += int(out.steps)
         cfg = eng.make_config(g, collect_cap=COLLECT_CAP)
         refs.append((int(out.n_max), int(out.cs),
                      bicliques_to_key_set(
                          eng.collected(cfg, out, g.n_u, g.n_v))))
-    return refs, lats, time.perf_counter() - t0
+    return refs, lats, time.perf_counter() - t0, steps
 
 
 def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
         engine: str = "dense") -> list:
     graphs = random_graph_stream(n_requests, seed=seed)
-    refs, base_lats, base_wall = _baseline(graphs, engine)
+    refs, base_lats, base_wall, base_steps = _baseline(graphs, engine)
     rows = [dict(policy="per-graph", engine=engine,
                  wall_s=round(base_wall, 3),
                  graphs_per_s=round(n_requests / base_wall, 2),
                  mean_latency_s=round(sum(base_lats) / len(base_lats), 4),
                  compiles=n_requests, cache_hits=0, batches=n_requests,
-                 pad_lanes=0, occupancy=1.0, idle_lane_steps=0)]
+                 pad_lanes=0, occupancy=1.0, idle_lane_steps=0,
+                 # one "poll" per graph: the whole-run jit call
+                 steps_per_s=round(base_steps / base_wall, 1),
+                 steps_per_poll=round(base_steps / n_requests, 1))]
     print(f"[serving] baseline ({engine}): {n_requests} graphs, "
           f"{n_requests} compiles, {base_wall:.2f}s")
 
@@ -130,11 +136,18 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
                    compiles=st["misses"], cache_hits=st["hits"],
                    batches=st["batches"], pad_lanes=st["pad_lanes"],
                    occupancy=round(st["occupancy"], 3),
-                   idle_lane_steps=st["idle_lane_steps"])
+                   idle_lane_steps=st["idle_lane_steps"],
+                   # kernel-level vs scheduler-level wins, separable:
+                   # steps/s moves with the kernel path, occupancy and
+                   # steps/poll with the scheduler
+                   steps_per_s=round(st["busy_steps"] / wall, 1),
+                   steps_per_poll=round(st["steps_per_poll"], 1))
         rows.append(row)
         print(f"[serving] {mode}: {st['misses']} compiles "
               f"({st['hits']} hits), {st['batches']} batches, "
               f"occupancy {st['occupancy']:.2f}, "
+              f"{st['busy_steps'] / wall:.0f} steps/s "
+              f"({st['steps_per_poll']:.0f} steps/poll), "
               f"{wall:.2f}s, results byte-identical to per-graph runs")
         if mode in ("linear", "pow2"):
             assert 2 * st["misses"] <= n_requests, \
@@ -208,10 +221,15 @@ def run_skewed(n_requests: int = 12, seed: int = 0, max_batch: int = 4,
                          busy_steps=st["busy_steps"],
                          total_lane_steps=st["total_lane_steps"],
                          idle_lane_steps=st["idle_lane_steps"],
-                         occupancy=round(st["occupancy"], 3)))
+                         occupancy=round(st["occupancy"], 3),
+                         steps_per_s=round(st["busy_steps"] / wall, 1),
+                         steps_per_poll=round(st["steps_per_poll"], 1)))
         print(f"[serving-skewed] {label}: occupancy {st['occupancy']:.3f} "
               f"({st['busy_steps']}/{st['total_lane_steps']} lane-steps, "
-              f"{st['idle_lane_steps']} idle), {st['misses']} compiles, "
+              f"{st['idle_lane_steps']} idle), "
+              f"{st['busy_steps'] / wall:.0f} steps/s "
+              f"({st['steps_per_poll']:.0f} steps/poll), "
+              f"{st['misses']} compiles, "
               f"{st['batches']} rounds, results identical to per-graph runs")
         if label == "continuous":
             # one bucket, one lane count -> exactly one round-mode compile
@@ -305,6 +323,8 @@ def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
                          requests=len(graphs), wall_s=round(wall, 3),
                          rounds=st["batches"], compiles=st["misses"],
                          occupancy=round(st["occupancy"], 3),
+                         steps_per_s=round(st["busy_steps"] / wall, 1),
+                         steps_per_poll=round(st["steps_per_poll"], 1),
                          big_workers=len(busy), big_workers_busy=spread,
                          big_imbalance=round(st["big_imbalance"], 3),
                          big_busy_per_worker=busy.tolist()))
@@ -331,6 +351,8 @@ def _write_json(path: str, mode: str, rows: list, requests: int) -> None:
         engine=head.get("engine"),
         wall_s=head.get("wall_s"),
         occupancy=head.get("occupancy"),
+        steps_per_s=head.get("steps_per_s"),
+        steps_per_poll=head.get("steps_per_poll"),
         compiles=head.get("compiles"),
         graphs_per_s=head.get("graphs_per_s"),
         engines_identical=head.get("engines_identical"),

@@ -74,7 +74,14 @@ class MBEOptions:
     # -- engine (repro.core.engine registry) ---------------------------
     engine: str = "dense"         # 'dense' | 'compact' | any registered
     order_mode: str = "deg"       # candidate ordering (EngineConfig)
-    impl: str = "jnp"             # intersect_count kernel impl
+    impl: str = "jnp"             # intersect_count impl (unfused path)
+    kernel_impl: str = "auto"     # step-kernel path ('auto'|'jnp'|
+    #                               'pallas'): 'pallas' runs the fused
+    #                               fused_select/fused_check Pallas
+    #                               kernels (one adjacency pass per
+    #                               branch; interpret mode off-TPU),
+    #                               'auto' picks pallas on TPU and jnp
+    #                               elsewhere (kernels.dispatch)
     collect: bool = False         # decode bicliques into results
     collect_cap: int = 1          # collect buffer rows per lane
 
@@ -90,6 +97,11 @@ class MBEOptions:
     # -- scheduling (serving.scheduler.MBEServer) ----------------------
     steps_per_round: int = 0      # 0 = whole-batch rounds; > 0 = bounded
     #                               rounds with mid-flight lane refill
+    steps_per_call: int = 1       # engine-loop inner unroll: candidate
+    #                               steps per while-loop iteration inside
+    #                               one compiled round segment (byte-
+    #                               identical; amortizes per-step loop
+    #                               dispatch — BucketPolicy.steps_per_call)
     big_graph_threshold: int | None = None   # route >= K root tasks to
     #                               the work-stealing big-graph lane
     max_graph_steps: int | None = None       # per-graph step cap
@@ -111,6 +123,7 @@ class MBEOptions:
             mode=self.bucket_mode, step_u=self.step_u, step_v=self.step_v,
             min_u=self.min_u, min_v=self.min_v, max_batch=self.max_batch,
             pad_batch=self.pad_batch, steps_per_round=self.steps_per_round,
+            steps_per_call=self.steps_per_call,
             big_graph_threshold=self.big_graph_threshold)
 
     def make_executor(self):
@@ -128,7 +141,8 @@ class MBEOptions:
         return MBEServer(
             self.bucket_policy(), collect_cap=self.collect_cap,
             collect=self.collect, order_mode=self.order_mode,
-            impl=self.impl, max_graph_steps=self.max_graph_steps,
+            impl=self.impl, kernel_impl=self.kernel_impl,
+            max_graph_steps=self.max_graph_steps,
             executor=self.make_executor(),
             cache_capacity=self.cache_capacity,
             engine=get_engine(self.engine))

@@ -66,6 +66,11 @@ class DistConfig:
     workers_per_device: int = 1     # vmap'd worker batch (TBs per SM analog)
     work_stealing: bool = True      # False = noWS ablation
     max_rounds: int = 10_000
+    steps_per_call: int = 1         # engine-loop inner unroll: steps per
+    #                                 while-loop iteration inside the round
+    #                                 (multi-step compiled segments; the
+    #                                 in-graph early exit is preserved, so
+    #                                 results are byte-identical)
 
 
 def _flatten_pending(all_tasks: jax.Array, all_tpos: jax.Array,
@@ -167,7 +172,8 @@ def make_round_fn(cfg: ed.EngineConfig, mesh: Mesh,
         # s leaves have leading dim = workers_per_device
         steps_before = s.steps
         s = engine.run_batch(ctx, cfg, s, max_steps=dist.steps_per_round,
-                             ctx_batched=ctx_batched)
+                             ctx_batched=ctx_batched,
+                             unroll=dist.steps_per_call)
         busy = s.steps - steps_before                    # (wpd,)
         if dist.work_stealing:
             # ---- work-stealing barrier -------------------------------

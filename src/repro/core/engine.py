@@ -99,17 +99,22 @@ class Engine(abc.ABC):
         """One engine loop iteration."""
 
     @abc.abstractmethod
-    def run(self, ctx, cfg: EngineConfig, s, max_steps: int | None = None):
-        """Run until done or the (resumable-round) step budget expires."""
+    def run(self, ctx, cfg: EngineConfig, s, max_steps: int | None = None,
+            unroll: int = 1):
+        """Run until done or the (resumable-round) step budget expires.
+        ``unroll`` advances up to that many engine steps per while-loop
+        iteration (multi-step compiled segments; byte-identical)."""
 
     def run_batch(self, ctx, cfg: EngineConfig, s,
-                  max_steps: int | None = None, ctx_batched: bool = False):
+                  max_steps: int | None = None, ctx_batched: bool = False,
+                  unroll: int = 1):
         """``run`` over a leading batch axis (``ctx_batched=True`` = one
         graph per lane — the serving layout; False = one shared graph,
         many workers — the distributed layout)."""
         ax = 0 if ctx_batched else None
         return jax.vmap(
-            lambda c, st: self.run(c, cfg, st, max_steps=max_steps),
+            lambda c, st: self.run(c, cfg, st, max_steps=max_steps,
+                                   unroll=unroll),
             in_axes=(ax, 0))(ctx, s)
 
     # -- collect / decode hooks ----------------------------------------
@@ -125,11 +130,13 @@ class Engine(abc.ABC):
 
     # -- convenience ----------------------------------------------------
     def enumerate(self, g: BipartiteGraph, order_mode: str = "deg",
-                  collect_cap: int = 1, impl: str = "jnp"):
+                  collect_cap: int = 1, impl: str = "jnp",
+                  kernel_impl: str = "auto"):
         """Full single-worker enumeration at the exact graph shape;
         returns the final engine state."""
         cfg = self.make_config(g, order_mode=order_mode,
-                               collect_cap=collect_cap, impl=impl)
+                               collect_cap=collect_cap, impl=impl,
+                               kernel_impl=kernel_impl)
         ctx = self.make_context(g, cfg)
         s0 = self.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
         out = jax.jit(lambda st: self.run(ctx, cfg, st))(s0)
@@ -162,12 +169,13 @@ class DenseEngine(Engine):
     def step(self, ctx, cfg, s):
         return ed.step(ctx, cfg, s)
 
-    def run(self, ctx, cfg, s, max_steps=None):
-        return ed.run(ctx, cfg, s, max_steps=max_steps)
+    def run(self, ctx, cfg, s, max_steps=None, unroll=1):
+        return ed.run(ctx, cfg, s, max_steps=max_steps, unroll=unroll)
 
-    def run_batch(self, ctx, cfg, s, max_steps=None, ctx_batched=False):
+    def run_batch(self, ctx, cfg, s, max_steps=None, ctx_batched=False,
+                  unroll=1):
         return ed.run_batch(ctx, cfg, s, max_steps=max_steps,
-                            ctx_batched=ctx_batched)
+                            ctx_batched=ctx_batched, unroll=unroll)
 
 
 class CompactEngine(Engine):
@@ -193,8 +201,8 @@ class CompactEngine(Engine):
     def step(self, ctx, cfg, s):
         return ec.step(ctx, cfg, s)
 
-    def run(self, ctx, cfg, s, max_steps=None):
-        return ec.run(ctx, cfg, s, max_steps=max_steps)
+    def run(self, ctx, cfg, s, max_steps=None, unroll=1):
+        return ec.run(ctx, cfg, s, max_steps=max_steps, unroll=unroll)
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,14 @@ Counts are computed through the *gathered* adjacency rows ``adj[P]`` /
 (engine_dense.py) removes the gather; the measured difference between the
 two is the repo's "reverse scanning" ablation analog (benchmarks Fig. 6).
 
+**Kernel paths** (``EngineConfig.kernel_impl``, DESIGN.md §8): on the
+``"pallas"`` path the three per-branch count passes collapse to two fused
+VMEM-resident kernels over the SAME gathered access pattern —
+``fused_select_gathered`` over ``adj[P]`` (counts + first-minimum argmin
+in position order) and one ``fused_check_gathered`` over the concatenated
+``adj[Q ++ P']`` rows (maximality check + expansion partition in one
+pass).  Byte-identical to ``"jnp"`` (``tests/test_fused_engines.py``).
+
 Registered as ``"compact"`` in ``repro.core.engine``, so the paper's data
 structure is servable end to end:
 ``MBEClient(MBEOptions(engine="compact")).enumerate(g)`` runs it through
@@ -46,6 +54,8 @@ import jax.numpy as jnp
 from repro.core import bitset
 from repro.core.engine_dense import EngineConfig, make_config  # shared cfg
 from repro.core.graph import BipartiteGraph
+from repro.kernels.fused_check.ops import fused_check_gathered
+from repro.kernels.fused_select.ops import fused_select_gathered
 from repro.kernels.intersect_count.ops import intersect_count
 
 _INF = jnp.int32(0x7FFFFFFF)
@@ -169,10 +179,23 @@ def _branch_candidate(g: CompactContext, cfg: EngineConfig,
     forced = s.forced_x >= 0
 
     # -- Step 1: candidate selection (through the compact array) ---------
-    rows_p = g.adj[s.P]                                     # gathered rows
     if cfg.order_mode == "deg":
-        c_sel = intersect_count(rows_p, L, impl=cfg.impl)
-        i_x = jnp.argmin(jnp.where(pos < p, c_sel, _INF)).astype(jnp.int32)
+        if cfg.fused:
+            # one VMEM-resident pass over the gathered rows adj[P]:
+            # counts + first-minimum argmin in POSITION order (the
+            # compact-array order), counts never written to HBM.  The
+            # -1 "no active row" sentinel only occurs when p == 0, where
+            # this branch's result is discarded (case_id != 2) or the
+            # forced root overrides x — clamp so the swap indexing below
+            # stays in range.
+            i_x, _ = fused_select_gathered(
+                g.adj, s.P, L, (pos < p).astype(jnp.int32), impl="pallas")
+            i_x = jnp.maximum(i_x, 0)
+        else:
+            rows_p = g.adj[s.P]                             # gathered rows
+            c_sel = intersect_count(rows_p, L, impl=cfg.impl)
+            i_x = jnp.argmin(jnp.where(pos < p, c_sel, _INF)) \
+                .astype(jnp.int32)
     else:
         i_x = jnp.maximum(p - 1, 0)      # pop from the region end
     # swap selected to region end, decrement pointer (skip when forced)
@@ -190,18 +213,33 @@ def _branch_candidate(g: CompactContext, cfg: EngineConfig,
     nLp = bitset.count(Lp)
     nonempty = nLp > 0
 
-    # -- Step 3: maximality check via the Q compact array ----------------
-    rows_q = g.adj[s.Q]
-    c_q = intersect_count(rows_q, Lp, impl=cfg.impl)
-    viol = jnp.any((pos < s.q_ptr[lvl]) & (c_q == nLp)) & nonempty
+    # -- Steps 3+4: maximality check via the Q compact array + maximal
+    # expansion via the P compact array.  The jnp path pays one
+    # intersect_count per array (c_q, then c_p); the fused path
+    # concatenates the two gathered row sets and emits the violation
+    # flag and both partition flag vectors from ONE fused_check pass —
+    # the counts never round-trip to HBM.
+    if cfg.fused:
+        zeros = jnp.zeros((cfg.n_u,), bool)
+        q_act = jnp.concatenate([pos < s.q_ptr[lvl], zeros])
+        p_act = jnp.concatenate([zeros, pos < p_work])
+        viol_f, full2, part2, _, _ = fused_check_gathered(
+            g.adj, jnp.concatenate([s.Q, P1]), Lp, nLp,
+            q_act.astype(jnp.int32), p_act.astype(jnp.int32),
+            impl="pallas")
+        viol = viol_f & nonempty
+        fullb = full2[cfg.n_u:]                   # per-position flags
+        partb = part2[cfg.n_u:]
+    else:
+        rows_q = g.adj[s.Q]
+        c_q = intersect_count(rows_q, Lp, impl=cfg.impl)
+        viol = jnp.any((pos < s.q_ptr[lvl]) & (c_q == nLp)) & nonempty
+        rows_p1 = g.adj[P1]
+        c_p = intersect_count(rows_p1, Lp, impl=cfg.impl)
+        act = pos < p_work
+        fullb = act & (c_p == nLp)                # per-position flags
+        partb = act & (c_p > 0) & (c_p < nLp)
     is_max = nonempty & ~viol
-
-    # -- Step 4: maximal expansion via the P compact array ---------------
-    rows_p1 = g.adj[P1]
-    c_p = intersect_count(rows_p1, Lp, impl=cfg.impl)
-    act = pos < p_work
-    fullb = act & (c_p == nLp)                    # per-position flags
-    partb = act & (c_p > 0) & (c_p < nLp)
     fullv = jnp.zeros(cfg.n_u, bool).at[P1].set(fullb)   # per-vertex
     Rp = s.rmask[lvl] | bitset.singleton(x, cfg.wu) \
         | bitset.from_bool(fullv)
@@ -278,20 +316,31 @@ def step(g: CompactContext, cfg: EngineConfig,
 
 
 def run(g: CompactContext, cfg: EngineConfig, s: CompactState,
-        max_steps: int | None = None) -> CompactState:
+        max_steps: int | None = None, unroll: int = 1) -> CompactState:
+    """Run until done or the budget expires; ``unroll`` advances up to
+    that many engine steps per while-loop iteration (multi-step compiled
+    segments, byte-identical — see ``engine_dense.run``)."""
     budget = cfg.max_steps if max_steps is None else max_steps
     start = s.steps
 
-    def cond(st):
+    def active(st):
         return (~_done(st)) & (st.steps - start < budget)
 
-    return jax.lax.while_loop(cond, lambda st: step(g, cfg, st), s)
+    def body(st):
+        st = step(g, cfg, st)       # loop cond guarantees the first step
+        for _ in range(unroll - 1):
+            st = jax.lax.cond(active(st),
+                              lambda t: step(g, cfg, t), lambda t: t, st)
+        return st
+
+    return jax.lax.while_loop(active, body, s)
 
 
 def enumerate_compact(g: BipartiteGraph, order_mode: str = "deg",
-                      collect_cap: int = 1, impl: str = "jnp"):
+                      collect_cap: int = 1, impl: str = "jnp",
+                      kernel_impl: str = "auto"):
     cfg = make_config(g, order_mode=order_mode, collect_cap=collect_cap,
-                      impl=impl)
+                      impl=impl, kernel_impl=kernel_impl)
     ctx = make_context(g, cfg)
     s0 = init_state(cfg, np.arange(g.n_u, dtype=np.int32))
     runner = jax.jit(lambda st: run(ctx, cfg, st))

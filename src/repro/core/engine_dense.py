@@ -16,6 +16,16 @@ This is the paper's recursion-free DFS re-expressed for a vector unit:
   over the same counts pass (degeneracy order, recomputed per level like the
   paper's per-level re-selection).
 
+**Kernel paths** (``EngineConfig.kernel_impl``, DESIGN.md §8): the
+``"jnp"`` path issues the passes above as separate XLA ops
+(``intersect_count`` + elementwise/reduce); ``"pallas"`` collapses each
+candidate branch into the fused step kernels — ``fused_select`` (counts +
+masked argmin, one VMEM-resident pass) and ``fused_check`` (Q-violation
+flag + full/partial expansion partition + Q' filter + optional cstack
+counts refill in one pass, so a ``deg`` branch costs exactly ONE fused
+call).  ``"auto"`` picks pallas on TPU and jnp elsewhere; both paths are
+byte-identical (``tests/test_fused_engines.py``).
+
 The engine is *task-driven*: a worker owns a list of first-level subtrees
 (root candidates), matching cuMBE's coarse-grained decomposition. Task i of
 the global root order sees Q = roots before i and P = roots after i — the
@@ -49,6 +59,9 @@ import jax.numpy as jnp
 
 from repro.core import bitset
 from repro.core.graph import BipartiteGraph
+from repro.kernels.dispatch import resolve_impl
+from repro.kernels.fused_check.ops import fused_check
+from repro.kernels.fused_select.ops import fused_select
 from repro.kernels.intersect_count.ops import intersect_count
 
 _INF = jnp.int32(0x7FFFFFFF)
@@ -65,8 +78,21 @@ class EngineConfig:
     #                             | 'deg_nocache' (recompute per node — the
     #                             paper-faithful two-pass baseline)
     #                             | 'input' (noES ablation)
-    impl: str = "jnp"           # intersect_count impl ('jnp'|'pallas')
+    impl: str = "jnp"           # intersect_count impl on the unfused path
+    #                             ('jnp'|'pallas'|'auto')
+    kernel_impl: str = "auto"   # step-kernel path: 'jnp' = unfused
+    #                             reference ops, 'pallas' = the fused
+    #                             fused_select/fused_check kernels (one
+    #                             adjacency pass per branch; interpret
+    #                             mode off-TPU), 'auto' = pallas on TPU,
+    #                             jnp elsewhere (kernels.dispatch)
     max_steps: int = 1 << 30    # safety/round bound on loop iterations
+
+    @property
+    def fused(self) -> bool:
+        """Whether branches take the fused Pallas step-kernel path
+        (resolved at trace time — 'auto' is backend-dependent)."""
+        return resolve_impl(self.kernel_impl) == "pallas"
 
     @property
     def wu(self) -> int:
@@ -265,14 +291,24 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
 
     # -- Step 1: candidate selection ------------------------------------
     if cfg.order_mode == "deg":
-        # counts cache: level lvl holds |N(v) & lmask[lvl]| already
+        # counts cache: level lvl holds |N(v) & lmask[lvl]| already —
+        # selection is a cheap (NU,) argmin, zero adjacency passes on
+        # EITHER kernel path (the cache is refilled by the check pass)
         c_sel = s.cstack[lvl]
         active = bitset.to_bool(pm, cfg.n_u)
         x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)).astype(jnp.int32)
     elif cfg.order_mode == "deg_nocache":
-        c_sel = intersect_count(g.adj, L, impl=cfg.impl)       # (NU,)
         active = bitset.to_bool(pm, cfg.n_u)
-        x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)).astype(jnp.int32)
+        if cfg.fused:
+            # one VMEM-resident pass: counts + masked argmin, nothing
+            # round-trips to HBM (x_sel is -1 when P is empty, which only
+            # happens under a forced root where x_sel is overridden)
+            x_sel, _ = fused_select(g.adj, L, active.astype(jnp.int32),
+                                    impl="pallas")
+        else:
+            c_sel = intersect_count(g.adj, L, impl=cfg.impl)   # (NU,)
+            x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)) \
+                .astype(jnp.int32)
     else:  # 'input': no ordering heuristic (noES ablation)
         x_sel = bitset.first_member(pm)
     x = jnp.where(forced, s.forced_x, x_sel)
@@ -283,18 +319,31 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
     nLp = bitset.count(Lp)
     nonempty = nLp > 0
 
-    # -- shared counts pass: |N(v) & L'| for every v ---------------------
-    c2 = intersect_count(g.adj, Lp, impl=cfg.impl)             # (NU,)
-
-    # -- Step 3: maximality check against Q ------------------------------
+    # -- Steps 3+4 fused: maximality check against Q + maximal expansion
+    # over remaining P.  Both need |N(v) & L'| for every v; the jnp path
+    # materializes that counts vector once (c2) and derives the flags
+    # with separate elementwise/reduce ops, the pallas path emits the
+    # violation flag and the partition flags from ONE kernel pass
+    # (fused_check) — plus the counts themselves only when the 'deg'
+    # cache needs refilling.
     qb = bitset.to_bool(s.qmask[lvl], cfg.n_u)
-    viol = jnp.any(qb & (c2 == nLp)) & nonempty
-    is_max = nonempty & ~viol
-
-    # -- Step 4: maximal expansion over remaining P -----------------------
     pb = bitset.to_bool(pm_after, cfg.n_u)
-    fullb = pb & (c2 == nLp)
-    partb = pb & (c2 > 0) & (c2 < nLp)
+    if cfg.fused:
+        with_counts = cfg.order_mode == "deg"
+        viol_f, fullb, partb, nzb, c2 = fused_check(
+            g.adj, Lp, nLp, qb.astype(jnp.int32), pb.astype(jnp.int32),
+            impl="pallas", with_counts=with_counts)
+        viol = viol_f & nonempty
+        c_row = c2 if with_counts else jnp.zeros((cfg.n_u,), jnp.int32)
+        q_keep = bitset.from_bool(nzb)
+    else:
+        c2 = intersect_count(g.adj, Lp, impl=cfg.impl)         # (NU,)
+        viol = jnp.any(qb & (c2 == nLp)) & nonempty
+        fullb = pb & (c2 == nLp)
+        partb = pb & (c2 > 0) & (c2 < nLp)
+        c_row = c2
+        q_keep = bitset.from_bool(c2 > 0)
+    is_max = nonempty & ~viol
     Rp = s.rmask[lvl] | bitset.singleton(x, cfg.wu) \
         | bitset.from_bool(fullb)
     has_child = is_max & jnp.any(partb)
@@ -303,8 +352,8 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
     # after a forced (root-task) candidate, the level-0 P must empty so the
     # task terminates once its subtree is done (other roots are other tasks)
     pm_final = jnp.where(forced, jnp.zeros_like(pm_after), pm_after)
-    # paper's Q' filter comes free from the shared counts pass:
-    q_child = s.qmask[lvl] & bitset.from_bool(c2 > 0)
+    # paper's Q' filter comes free from the shared counts/check pass:
+    q_child = s.qmask[lvl] & q_keep
     nl = jnp.where(has_child, lvl + 1, lvl)
     child = jnp.minimum(lvl + 1, cfg.depth - 1)
     # no child: x's subtree is finished -> move x to Q at this level
@@ -312,7 +361,7 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
 
     return _delta_zeros(cfg, s)._replace(
         l_row=Lp, l_idx=child, l_en=has_child,
-        c_row=c2,
+        c_row=c_row,
         pa_row=pm_final, pa_idx=lvl, pa_en=jnp.bool_(True),
         pb_row=bitset.from_bool(partb),
         q_row=jnp.where(has_child, q_child, q_lvl),
@@ -385,24 +434,40 @@ def step(g: GraphContext, cfg: EngineConfig, s: DenseState) -> DenseState:
 
 
 def run(g: GraphContext, cfg: EngineConfig, s: DenseState,
-        max_steps: int | None = None) -> DenseState:
+        max_steps: int | None = None, unroll: int = 1) -> DenseState:
     """Run until all tasks are done or the step budget is exhausted.
 
     The step budget is what makes the distributed runner's bounded *rounds*
     (work-stealing barrier points) possible — state is resumable.
+
+    ``unroll`` (>= 1) is the multi-step compiled-segment knob
+    (``BucketPolicy.steps_per_call`` on the serving path): each while-loop
+    iteration advances up to ``unroll`` engine steps instead of one, so
+    the per-step loop carry/cond overhead is amortized and XLA fuses
+    across consecutive steps.  The in-graph early exit is preserved —
+    steps 2..unroll are guarded by the same done/budget predicate the
+    loop condition checks, so the step trajectory (and therefore every
+    counter and result) is byte-identical to ``unroll=1``.
     """
     budget = cfg.max_steps if max_steps is None else max_steps
     start = s.steps
 
-    def cond(st):
+    def active(st):
         return (~_done(st)) & (st.steps - start < budget)
 
-    return jax.lax.while_loop(cond, lambda st: step(g, cfg, st), s)
+    def body(st):
+        st = step(g, cfg, st)       # loop cond guarantees the first step
+        for _ in range(unroll - 1):
+            st = jax.lax.cond(active(st),
+                              lambda t: step(g, cfg, t), lambda t: t, st)
+        return st
+
+    return jax.lax.while_loop(active, body, s)
 
 
 def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
               max_steps: int | None = None,
-              ctx_batched: bool = False) -> DenseState:
+              ctx_batched: bool = False, unroll: int = 1) -> DenseState:
     """``run`` over a leading batch axis of worker states.
 
     Serving/batching model: every leaf of ``s`` carries a leading axis of
@@ -422,7 +487,7 @@ def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
     """
     ax = 0 if ctx_batched else None
     return jax.vmap(
-        lambda c, st: run(c, cfg, st, max_steps=max_steps),
+        lambda c, st: run(c, cfg, st, max_steps=max_steps, unroll=unroll),
         in_axes=(ax, 0))(g, s)
 
 
@@ -481,10 +546,11 @@ def make_config(g: BipartiteGraph, **kw) -> EngineConfig:
 
 
 def enumerate_dense(g: BipartiteGraph, order_mode: str = "deg",
-                    collect_cap: int = 1, impl: str = "jnp"):
+                    collect_cap: int = 1, impl: str = "jnp",
+                    kernel_impl: str = "auto"):
     """Full single-worker enumeration. Returns the final DenseState."""
     cfg = make_config(g, order_mode=order_mode, collect_cap=collect_cap,
-                      impl=impl)
+                      impl=impl, kernel_impl=kernel_impl)
     ctx = make_context(g, cfg)
     s0 = init_state(cfg, np.arange(g.n_u, dtype=np.int32))
     runner = jax.jit(lambda st: run(ctx, cfg, st))

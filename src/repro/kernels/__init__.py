@@ -10,7 +10,14 @@ and lower natively on TPU.
   fused_select     — counts + masked argmin in one pass: degeneracy-order
                      candidate selection (the paper's early-stop goal,
                      achieved structurally)
+  fused_check      — counts + Q-violation flag + full/partial expansion
+                     partition in one pass: the rest of an enumeration
+                     step (phases C/E), counts never round-tripped to HBM
   flash_attention  — fwd + custom-vjp bwd flash attention for the LM
                      stack (GQA, causal tile skipping); the dominant
                      memory-roofline term of every train/prefill cell
+
+``dispatch.resolve_impl`` is the shared "auto"|"jnp"|"pallas" rule every
+op (and the engines' ``EngineConfig.kernel_impl``) resolves through.
 """
+from repro.kernels.dispatch import default_interpret, resolve_impl  # noqa: F401,E501

@@ -1,0 +1,48 @@
+"""Shared impl-dispatch rules for the MBE kernel packages.
+
+Every kernel op takes ``impl`` with the same three values:
+
+* ``"jnp"``    — the pure-jnp oracle (``ref.py``): fast on CPU, the
+  byte-identical reference the Pallas path is validated against.
+* ``"pallas"`` — the Pallas TPU kernel; off-TPU it runs in interpret
+  mode so tests exercise the REAL kernel body on CPU.
+* ``"auto"``   — ``"pallas"`` on a TPU default backend, ``"jnp"``
+  elsewhere (interpret mode is correct but slow, so it is never chosen
+  automatically).
+
+The engines resolve ``EngineConfig.kernel_impl`` through the same
+function at trace time, so one knob ("auto") gives the fused Pallas hot
+path on TPU and the unfused jnp path everywhere else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IMPLS = ("auto", "jnp", "pallas")
+
+
+def resolve_impl(impl: str) -> str:
+    """Map ``impl`` to a concrete ``"jnp"``/``"pallas"`` choice."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+    return impl
+
+
+def default_interpret() -> bool:
+    """Whether a pallas_call must run in interpret mode (no TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` up to a multiple of ``mult`` (shared by every
+    ops wrapper: zero words contribute zero to popcounts and padded rows
+    are marked inactive, so padding never changes a result)."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

@@ -1,0 +1,3 @@
+from repro.kernels.fused_check.ops import (  # noqa: F401
+    fused_check, fused_check_gathered)
+from repro.kernels.fused_check.ref import fused_check_ref  # noqa: F401

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused maximality check + maximal-expansion partition.
+
+After candidate selection builds L' = L ∩ N(x), one engine step still
+needs, for every vertex/position v with counts c[v] = popcount(adj[v] & L'):
+
+* the **Q-violation flag**  ``any(q_act[v] & (c[v] == |L'|))`` — cuMBE's
+  maximality check (paper §III-E phase C),
+* the **full flags**        ``p_act[v] & (c[v] == |L'|)``  — candidates
+  absorbed into R' (maximal expansion, phase E),
+* the **partial flags**     ``p_act[v] & (0 < c[v] < |L'|)`` — the child
+  candidate set P',
+* the **nonzero flags**     ``c[v] > 0`` — the paper's Q' filter.
+
+The unfused path materializes the counts vector to HBM (one
+``intersect_count`` pass per row set) and derives each of these with
+separate elementwise/reduction XLA ops.  This kernel computes ALL of them
+in ONE pass over the adjacency bitset: per-row partial counts accumulate
+in a VMEM scratch and only the four flag vectors (plus the scalar flag)
+are ever written out — the counts never round-trip to HBM.
+
+``with_counts=True`` additionally emits the counts vector: the dense
+engine's ``"deg"`` mode caches child-level counts (``cstack``) so the
+NEXT level's candidate selection costs zero adjacency passes; emitting
+the cache from the same pass keeps that beyond-paper optimization intact.
+
+TPU mapping
+-----------
+* grid = (N/BN, W/BW), W innermost: per-row partial counts accumulate in
+  a VMEM scratch (BN, 1); at the last W block the flags are emitted and
+  the block's Q-violation disjunction is OR-folded into the global (1,1)
+  flag output, which Pallas keeps resident across the sequential grid
+  (revisited output block), exactly like ``fused_select``.
+* |L'| arrives as a (1,1) i32 input (traced scalar, not a Python
+  constant — it changes every step).
+* BN x BW tiles: lane-aligned (BW % 128 == 0 at full width), sublane-
+  aligned (BN % 8 == 0); default working set 512x256x4B = 512 KiB << VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(*refs, n_wblocks: int, with_counts: bool):
+    (adj_ref, mask_ref, nlp_ref, qact_ref, pact_ref,
+     viol_ref, full_ref, part_ref, nz_ref) = refs[:9]
+    counts_ref = refs[9] if with_counts else None
+    acc_ref = refs[-1]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_viol():
+        viol_ref[...] = jnp.zeros_like(viol_ref)
+
+    @pl.when(j == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    tile = adj_ref[...] & mask_ref[...]
+    pc = jax.lax.population_count(tile).astype(jnp.int32)
+    acc_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+
+    @pl.when(j == n_wblocks - 1)
+    def _emit():
+        c = acc_ref[...]                               # (BN, 1) int32
+        nlp = nlp_ref[0, 0]
+        q = qact_ref[...] > 0
+        p = pact_ref[...] > 0
+        eq = c == nlp
+        viol_ref[0, 0] = viol_ref[0, 0] | jnp.any(q & eq).astype(jnp.int32)
+        full_ref[...] = (p & eq).astype(jnp.int32)
+        part_ref[...] = (p & (c > 0) & (c < nlp)).astype(jnp.int32)
+        nz_ref[...] = (c > 0).astype(jnp.int32)
+        if with_counts:
+            counts_ref[...] = c
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_w",
+                                             "interpret", "with_counts"))
+def fused_check_pallas(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
+                       q_act: jax.Array, p_act: jax.Array, *,
+                       block_n: int = 512, block_w: int = 256,
+                       interpret: bool = False, with_counts: bool = False):
+    """adj: (N, W) u32; mask: (W,) u32; n_mask: () i32 (= popcount(mask));
+    q_act/p_act: (N,) i32 (0/1 activity flags).
+    -> (viol () i32, full (N,) i32, part (N,) i32, nz (N,) i32[, counts]).
+    N % block_n == 0 and W % block_w == 0 (ops.py pads)."""
+    n, w = adj.shape
+    assert n % block_n == 0 and w % block_w == 0, (n, w, block_n, block_w)
+    grid = (n // block_n, w // block_w)
+    kern = functools.partial(_kernel, n_wblocks=grid[1],
+                             with_counts=with_counts)
+    flag_spec = pl.BlockSpec((block_n, 1), lambda i, j: (i, 0))
+    flag_shape = jax.ShapeDtypeStruct((n, 1), jnp.int32)
+    out_specs = [pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                 flag_spec, flag_spec, flag_spec]
+    out_shape = [jax.ShapeDtypeStruct((1, 1), jnp.int32),
+                 flag_shape, flag_shape, flag_shape]
+    if with_counts:
+        out_specs.append(flag_spec)
+        out_shape.append(flag_shape)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_w), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_w), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            flag_spec,
+            flag_spec,
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.int32)],
+        interpret=interpret,
+    )(adj, mask[None, :],
+      jnp.asarray(n_mask, jnp.int32).reshape(1, 1),
+      q_act.astype(jnp.int32)[:, None], p_act.astype(jnp.int32)[:, None])
+    viol, full, part, nz = out[0][0, 0], out[1][:, 0], out[2][:, 0], \
+        out[3][:, 0]
+    counts = out[4][:, 0] if with_counts else None
+    return viol, full, part, nz, counts

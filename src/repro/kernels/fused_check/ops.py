@@ -1,0 +1,79 @@
+"""Dispatch wrapper for the fused check/partition kernel (pads, picks impl).
+
+``impl`` follows the shared contract (``repro.kernels.dispatch``):
+``"jnp"`` delegates to ``ref.py``, ``"pallas"`` runs the Pallas kernel
+(interpret mode off-TPU), ``"auto"`` picks pallas on TPU backends and jnp
+elsewhere.
+
+Returned flags are bools (the engines AND them into bitmasks); ``viol``
+is a scalar bool; ``counts`` is an (N,) int32 vector when
+``with_counts=True`` (the dense engine's ``cstack`` cache) and None
+otherwise.
+
+``fused_check_gathered`` is the compact-array variant: one call over the
+gathered rows ``adj[idx]`` where ``idx`` concatenates the Q and P compact
+arrays, so the maximality check AND the expansion partition come from a
+single pass (the unfused compact path pays one ``intersect_count`` per
+array).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import (default_interpret, pad_axis,
+                                    resolve_impl)
+from repro.kernels.fused_check.kernel import fused_check_pallas
+from repro.kernels.fused_check.ref import fused_check_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_w",
+                                             "interpret", "with_counts"))
+def fused_check(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
+                q_act: jax.Array, p_act: jax.Array, *, impl: str = "auto",
+                block_n: int = 512, block_w: int = 256,
+                interpret: bool | None = None, with_counts: bool = False):
+    """One pass over (N, W) adjacency rows vs the L' ``mask``:
+    Q-violation flag + full/partial partition flags (+ optional counts).
+
+    ``n_mask`` is popcount(mask) = |L'| (a traced scalar); ``q_act`` /
+    ``p_act`` are (N,) 0/1 activity vectors.  Returns
+    ``(viol, full, part, nz, counts)`` — see kernel.py for definitions.
+    """
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return fused_check_ref(adj, mask, n_mask, q_act, p_act,
+                               with_counts=with_counts)
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = adj.shape
+    bn = min(block_n, max(8, (n + 7) // 8 * 8))
+    bw = min(block_w, max(8, w))
+    adj_p = pad_axis(pad_axis(adj, 0, bn), 1, bw)
+    mask_p = pad_axis(mask, 0, bw)
+    qa_p = pad_axis(q_act.astype(jnp.int32), 0, bn)    # pad rows inactive
+    pa_p = pad_axis(p_act.astype(jnp.int32), 0, bn)
+    viol, full, part, nz, counts = fused_check_pallas(
+        adj_p, mask_p, n_mask, qa_p, pa_p, block_n=bn, block_w=bw,
+        interpret=interpret, with_counts=with_counts)
+    # padded rows are q/p-inactive so viol is exact; flags slice back.
+    # nz (and counts) are activity-independent, hence exact after slicing:
+    # a zero-padded row has count 0.
+    return (viol > 0, full[:n] > 0, part[:n] > 0, nz[:n] > 0,
+            None if counts is None else counts[:n])
+
+
+def fused_check_gathered(adj: jax.Array, idx: jax.Array, mask: jax.Array,
+                         n_mask: jax.Array, q_act: jax.Array,
+                         p_act: jax.Array, *, impl: str = "auto",
+                         block_n: int = 512, block_w: int = 256,
+                         interpret: bool | None = None,
+                         with_counts: bool = False):
+    """``fused_check`` over the gathered rows ``adj[idx]`` — the
+    compact-array access pattern.  Flags are returned in ``idx``
+    (position) order."""
+    return fused_check(adj[idx], mask, n_mask, q_act, p_act, impl=impl,
+                       block_n=block_n, block_w=block_w,
+                       interpret=interpret, with_counts=with_counts)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for fused_check.
+
+Computes the same five outputs as the kernel from one materialized counts
+vector — the unfused shape of the computation the kernel collapses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.intersect_count.ref import intersect_count_ref
+
+
+def fused_check_ref(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
+                    q_act: jax.Array, p_act: jax.Array, *,
+                    with_counts: bool = False):
+    """adj (N, W) u32, mask (W,) u32, n_mask () i32, q_act/p_act (N,) 0/1.
+    -> (viol bool, full (N,) bool, part (N,) bool, nz (N,) bool,
+    counts (N,) i32 | None)."""
+    c = intersect_count_ref(adj, mask)
+    nlp = jnp.asarray(n_mask, jnp.int32)
+    eq = c == nlp
+    viol = jnp.any((q_act > 0) & eq)
+    full = (p_act > 0) & eq
+    part = (p_act > 0) & (c > 0) & (c < nlp)
+    nz = c > 0
+    return viol, full, part, nz, (c if with_counts else None)

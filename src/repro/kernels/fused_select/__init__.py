@@ -1,1 +1,2 @@
-from repro.kernels.fused_select.ops import fused_select  # noqa: F401
+from repro.kernels.fused_select.ops import (  # noqa: F401
+    fused_select, fused_select_gathered)

@@ -1,4 +1,16 @@
-"""Dispatch wrapper for fused candidate selection (pads, picks impl)."""
+"""Dispatch wrapper for fused candidate selection (pads, picks impl).
+
+``impl`` follows the shared contract (``repro.kernels.dispatch``):
+``"jnp"`` delegates to the pure-jnp oracle in ``ref.py``, ``"pallas"``
+runs the Pallas kernel (interpret mode off-TPU), ``"auto"`` picks pallas
+on TPU backends and jnp elsewhere — matching ``intersect_count/ops.py``.
+
+``fused_select_gathered`` is the compact-array engine's variant: the
+selection scans the gathered rows ``adj[idx]`` (the order the compact
+array induces), so first-minimum tie-breaking happens in *position*
+order, which is what makes the fused traversal byte-identical to the
+unfused one.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,41 +18,44 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import (default_interpret, pad_axis,
+                                    resolve_impl)
 from repro.kernels.fused_select.kernel import fused_select_pallas
 from repro.kernels.fused_select.ref import fused_select_ref
 
 _INF = jnp.int32(0x7FFFFFFF)
 
 
-def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 @functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_w",
                                              "interpret"))
 def fused_select(adj: jax.Array, mask: jax.Array, active: jax.Array, *,
                  impl: str = "auto", block_n: int = 512,
-                 block_w: int = 256, interpret: bool = False
+                 block_w: int = 256, interpret: bool | None = None
                  ) -> tuple[jax.Array, jax.Array]:
     """First active row minimizing popcount(adj & mask); see kernel.py."""
-    if impl == "auto":
-        impl = "pallas" if any(d.platform == "tpu"
-                               for d in jax.devices()) else "jnp"
+    impl = resolve_impl(impl)
     if impl == "jnp":
         return fused_select_ref(adj, mask, active)
-    assert impl == "pallas", impl
-    n = adj.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = adj.shape
     bn = min(block_n, max(8, (n + 7) // 8 * 8))
-    adj_p = _pad_axis(_pad_axis(adj, 0, bn), 1, block_w)
-    mask_p = _pad_axis(mask, 0, block_w)
-    act_p = _pad_axis(active.astype(jnp.int32), 0, bn)  # pad rows inactive
+    bw = min(block_w, max(8, w))
+    adj_p = pad_axis(pad_axis(adj, 0, bn), 1, bw)
+    mask_p = pad_axis(mask, 0, bw)
+    act_p = pad_axis(active.astype(jnp.int32), 0, bn)   # pad rows inactive
     idx, val = fused_select_pallas(
-        adj_p, mask_p, act_p, block_n=bn,
-        block_w=min(block_w, adj_p.shape[1]),
-        interpret=interpret or jax.devices()[0].platform != "tpu")
+        adj_p, mask_p, act_p, block_n=bn, block_w=bw, interpret=interpret)
     return idx, val
+
+
+def fused_select_gathered(adj: jax.Array, idx: jax.Array, mask: jax.Array,
+                          active: jax.Array, *, impl: str = "auto",
+                          block_n: int = 512, block_w: int = 256,
+                          interpret: bool | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """``fused_select`` over the gathered rows ``adj[idx]`` — the
+    compact-array access pattern (selection in compact-array position
+    order; the returned index is a POSITION into ``idx``)."""
+    return fused_select(adj[idx], mask, active, impl=impl, block_n=block_n,
+                        block_w=block_w, interpret=interpret)

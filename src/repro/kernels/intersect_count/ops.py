@@ -1,6 +1,6 @@
 """Dispatching wrapper for the intersect-count primitive.
 
-``impl``:
+``impl`` follows the shared contract (``repro.kernels.dispatch``):
   * "jnp"     — pure-jnp reference path (fast on CPU; what benchmarks use).
   * "pallas"  — the Pallas TPU kernel; on CPU pass ``interpret=True``.
   * "auto"    — pallas on TPU backends, jnp elsewhere.
@@ -10,43 +10,28 @@ popcounts, so padding is free) and slices the result back.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.dispatch import (default_interpret, pad_axis,
+                                    resolve_impl)
 from repro.kernels.intersect_count.kernel import intersect_count_pallas
 from repro.kernels.intersect_count.ref import intersect_count_ref
-
-
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    n = x.shape[axis]
-    pad = (-n) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 def intersect_count(adj: jax.Array, mask: jax.Array, *, impl: str = "auto",
                     block_n: int = 512, block_w: int = 256,
                     interpret: bool | None = None) -> jax.Array:
     """counts[i] = popcount(adj[i] & mask). adj (N,W) u32, mask (W,) u32."""
-    if impl == "auto":
-        impl = ("pallas"
-                if jax.default_backend() in ("tpu",) else "jnp")
+    impl = resolve_impl(impl)
     if impl == "jnp":
         return intersect_count_ref(adj, mask)
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = default_interpret()
     n, w = adj.shape
     bn = min(block_n, max(8, n))
     bw = min(block_w, max(8, w))
-    adj_p = _pad_to(_pad_to(adj, 0, bn), 1, bw)
-    mask_p = _pad_to(mask, 0, bw)
+    adj_p = pad_axis(pad_axis(adj, 0, bn), 1, bw)
+    mask_p = pad_axis(mask, 0, bw)
     out = intersect_count_pallas(adj_p, mask_p, block_n=bn, block_w=bw,
                                  interpret=interpret)
     return out[:n]

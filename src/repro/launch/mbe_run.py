@@ -47,6 +47,13 @@ def main(argv=None) -> dict:
                     help="stealing workers per device (default: cumbe "
                          "SMOKE)")
     ap.add_argument("--steps-per-round", type=int, default=4096)
+    ap.add_argument("--steps-per-call", type=int, default=1,
+                    help="engine-loop inner unroll per compiled round "
+                         "segment (byte-identical results)")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="step-kernel path: fused Pallas kernels vs "
+                         "unfused jnp ops ('auto' = pallas on TPU)")
     ap.add_argument("--no-work-stealing", action="store_true")
     ap.add_argument("--order", default="deg", choices=["deg", "input"])
     ap.add_argument("--verbose", action="store_true")
@@ -64,9 +71,11 @@ def main(argv=None) -> dict:
     workers = args.workers or SMOKE.dist.workers_per_device
     client = MBEClient(MBEOptions(
         engine=args.engine, order_mode=args.order,
+        kernel_impl=args.kernel_impl,
         bucket_mode="exact",            # one graph: no padding wanted
         big_graph_threshold=1,          # the whole run IS the big route
         steps_per_round=args.steps_per_round,
+        steps_per_call=args.steps_per_call,
         mesh="auto" if n_dev > 1 else None,
         workers_per_device=workers, big_workers=workers,
         work_stealing=not args.no_work_stealing))

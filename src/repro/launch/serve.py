@@ -80,7 +80,9 @@ def serve_mbe(args) -> dict:
     spr = args.steps_per_round if args.continuous else 0
     client = MBEClient(MBEOptions(
         engine=args.engine, bucket_mode=args.policy,
+        kernel_impl=args.kernel_impl,
         max_batch=args.max_batch, steps_per_round=spr,
+        steps_per_call=args.steps_per_call,
         big_graph_threshold=args.big_graph_threshold,
         mesh=args.mesh or None))
     t0 = time.perf_counter()
@@ -92,10 +94,14 @@ def serve_mbe(args) -> dict:
     _print_routing(client)
     print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
           f"engine={stats['engine']}, executor={stats['executor']}, "
+          f"kernels={stats['kernel_impl']} "
+          f"(x{stats['steps_per_call']}/call), "
           f"{mode}: {n_max} maximal bicliques, "
           f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
           f"occupancy {stats['occupancy']:.2f}, "
+          f"{stats['busy_steps'] / dt:.0f} steps/s "
+          f"({stats['steps_per_poll']:.0f} steps/poll), "
           f"{dt:.2f}s ({args.requests / dt:.1f} graphs/s)")
     return dict(requests=args.requests, n_max=n_max, wall_s=dt, **stats)
 
@@ -116,6 +122,15 @@ def serve(argv=None) -> dict:
                          "mid-flight lane refill")
     ap.add_argument("--steps-per-round", type=int, default=64,
                     help="MBE continuous mode: engine steps per round")
+    ap.add_argument("--steps-per-call", type=int, default=1,
+                    help="MBE: engine-loop inner unroll (candidate steps "
+                         "per while-loop iteration in one compiled round "
+                         "segment; byte-identical results)")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="MBE: step-kernel path — 'pallas' = fused "
+                         "fused_select/fused_check kernels (interpret "
+                         "off-TPU), 'auto' = pallas on TPU, jnp elsewhere")
     ap.add_argument("--mesh", type=int, default=0,
                     help="MBE: serve through ShardedExecutor on a 1-D "
                          "mesh over N host devices (0 = LocalExecutor)")

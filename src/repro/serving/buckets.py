@@ -46,6 +46,15 @@ class BucketPolicy:
     #                           (whole-batch flush semantics); > 0 bounds
     #                           every engine call so finished lanes can be
     #                           refilled mid-flight from the pending queue
+    steps_per_call: int = 1   # engine-loop inner unroll: candidate steps
+    #                           advanced per while-loop iteration inside
+    #                           one compiled round segment.  Amortizes the
+    #                           per-step loop carry/cond dispatch and lets
+    #                           XLA fuse across consecutive steps; the
+    #                           in-graph early exit (done lanes, round
+    #                           budget) is preserved, so results and step
+    #                           counts are byte-identical to 1.  Baked
+    #                           into the round executable (cache key).
     big_graph_threshold: int | None = None
     #                           routing: a (canonical) graph with n_u >=
     #                           threshold root tasks is NOT placed in a

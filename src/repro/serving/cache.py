@@ -128,28 +128,34 @@ class ExecutableCache:
 
     def get_round(self, cfg: ed.EngineConfig, batch: int,
                   max_steps: int | None = None,
-                  engine: Engine | None = None) -> CacheEntry:
+                  engine: Engine | None = None,
+                  unroll: int = 1) -> CacheEntry:
         """Local-backend batched enumeration executable: (ctx, state) ->
         state, where all leaves carry a leading axis of size ``batch``.
         ``max_steps`` bounds every lane to that many engine steps per call
         (None = run to completion); it is baked into the executable, hence
-        part of the cache key.  ``engine`` selects the enumeration engine
-        (``repro.core.engine`` registry; default dense).  The dense engine
-        keeps the legacy bare-``EngineConfig`` key; other engines qualify
-        the config slot with their name — ``EngineConfig`` is shared
-        between engines, so an unqualified compact entry would collide
-        with the dense executable for the same bucket."""
+        part of the cache key, as is ``unroll`` (the multi-step
+        compiled-segment knob, ``BucketPolicy.steps_per_call``).
+        ``engine`` selects the enumeration engine (``repro.core.engine``
+        registry; default dense).  The dense engine keeps the legacy
+        bare-``EngineConfig`` key; other engines qualify the config slot
+        with their name — ``EngineConfig`` is shared between engines, so
+        an unqualified compact entry would collide with the dense
+        executable for the same bucket.  Likewise ``unroll=1`` keeps the
+        legacy 3-slot key."""
         eng = engine or DENSE
 
         def build():
             @jax.jit
             def fn(ctx, s):
                 return eng.run_batch(ctx, cfg, s, max_steps=max_steps,
-                                     ctx_batched=True)
+                                     ctx_batched=True, unroll=unroll)
             return fn
 
         head = cfg if eng.name == DENSE.name else (eng.name, cfg)
-        return self.get_entry((head, batch, max_steps), build)
+        key = (head, batch, max_steps) if unroll == 1 \
+            else (head, batch, max_steps, unroll)
+        return self.get_entry(key, build)
 
     def get(self, cfg: ed.EngineConfig, batch: int) -> CacheEntry:
         """Run-to-completion executable (drain entry)."""

@@ -162,9 +162,13 @@ class Executor(abc.ABC):
     # -- execution ------------------------------------------------------
     @abc.abstractmethod
     def run_round(self, pool: LanePool, cache: ExecutableCache,
-                  budget: int | None) -> RoundTelemetry:
+                  budget: int | None, unroll: int = 1) -> RoundTelemetry:
         """Advance every lane by one bounded round (``budget`` engine steps
-        per lane; None = run to completion) through a cached executable."""
+        per lane; None = run to completion) through a cached executable.
+        ``unroll`` is the multi-step compiled-segment knob
+        (``BucketPolicy.steps_per_call``): candidate steps per while-loop
+        iteration inside the round executable (baked into the cache
+        key; byte-identical results)."""
 
     # -- demux views ----------------------------------------------------
     def lane(self, pool: LanePool, i: int) -> ed.DenseState:
@@ -189,10 +193,12 @@ class Executor(abc.ABC):
     @abc.abstractmethod
     def big_lane(self, cfg: ed.EngineConfig, ctx, n_roots: int,
                  cache: ExecutableCache, budget: int | None,
-                 engine: Engine | None = None) -> "BigGraphLane":
+                 engine: Engine | None = None,
+                 steps_per_call: int = 1) -> "BigGraphLane":
         """Work-stealing lane for one routed-big graph on this backend
         (``engine`` selects the enumeration engine, default dense; the
-        executor's ``work_stealing`` flag selects the noWS ablation)."""
+        executor's ``work_stealing`` flag selects the noWS ablation;
+        ``steps_per_call`` is the in-round engine-loop unroll)."""
 
     def _pool_sharding(self):
         return None                 # single-device backends
@@ -215,9 +221,9 @@ class LocalExecutor(Executor):
         return plan_batch_size(n_pending, policy)
 
     def run_round(self, pool: LanePool, cache: ExecutableCache,
-                  budget: int | None) -> RoundTelemetry:
+                  budget: int | None, unroll: int = 1) -> RoundTelemetry:
         entry = cache.get_round(pool.cfg, pool.B, budget,
-                                engine=pool.engine)
+                                engine=pool.engine, unroll=unroll)
         before = np.asarray(pool.state.steps)
         out, wall, compile_s = entry.timed_call(pool.ctx, pool.state)
         pool.state = out
@@ -227,11 +233,13 @@ class LocalExecutor(Executor):
     def placement(self, n_lanes: int) -> str:
         return f"1 device x {n_lanes} vmap lanes"
 
-    def big_lane(self, cfg, ctx, n_roots, cache, budget, engine=None):
+    def big_lane(self, cfg, ctx, n_roots, cache, budget, engine=None,
+                 steps_per_call=1):
         mesh = Mesh(np.array(jax.devices()[:1]), (MBE_LANE_AXIS,))
         return BigGraphLane(self.name, cfg, mesh, MBE_LANE_AXIS,
                             self.big_workers, ctx, n_roots, cache, budget,
-                            engine=engine, work_stealing=self.work_stealing)
+                            engine=engine, work_stealing=self.work_stealing,
+                            steps_per_call=steps_per_call)
 
 
 class ShardedExecutor(Executor):
@@ -273,17 +281,20 @@ class ShardedExecutor(Executor):
         return ((b + n_dev - 1) // n_dev) * n_dev   # divisible placement
 
     def run_round(self, pool: LanePool, cache: ExecutableCache,
-                  budget: int | None) -> RoundTelemetry:
+                  budget: int | None, unroll: int = 1) -> RoundTelemetry:
         cfg, B = pool.cfg, pool.B
         wpd = B // self.n_devices
         key = ((self.name, pool.engine.name, self.mesh, self.axis, wpd,
                 cfg), B, budget)
+        if unroll != 1:
+            key = key + (unroll,)
 
         def build():
             dist = dd.DistConfig(
                 steps_per_round=(budget if budget is not None
                                  else cfg.max_steps),
-                workers_per_device=wpd, work_stealing=False)
+                workers_per_device=wpd, work_stealing=False,
+                steps_per_call=unroll)
             fn, _, _ = dd.make_round_fn(cfg, self.mesh, (self.axis,), dist,
                                         ctx_batched=True,
                                         with_telemetry=True,
@@ -304,11 +315,13 @@ class ShardedExecutor(Executor):
         return (f"{self.n_devices} devices x {wpd} lanes "
                 f"(axis {self.axis!r})")
 
-    def big_lane(self, cfg, ctx, n_roots, cache, budget, engine=None):
+    def big_lane(self, cfg, ctx, n_roots, cache, budget, engine=None,
+                 steps_per_call=1):
         return BigGraphLane(self.name, cfg, self.mesh, self.axis,
                             self.big_workers_per_device, ctx, n_roots,
                             cache, budget, engine=engine,
-                            work_stealing=self.work_stealing)
+                            work_stealing=self.work_stealing,
+                            steps_per_call=steps_per_call)
 
 
 class BigGraphLane:
@@ -327,7 +340,8 @@ class BigGraphLane:
     def __init__(self, backend: str, cfg: ed.EngineConfig, mesh: Mesh,
                  axis: str, workers_per_device: int, ctx,
                  n_roots: int, cache: ExecutableCache, budget: int | None,
-                 engine: Engine | None = None, work_stealing: bool = True):
+                 engine: Engine | None = None, work_stealing: bool = True,
+                 steps_per_call: int = 1):
         self.cfg = cfg
         self.mesh = mesh
         self.axis = axis
@@ -338,10 +352,13 @@ class BigGraphLane:
                             else DEFAULT_BIG_ROUND_STEPS)
         dist = dd.DistConfig(steps_per_round=self.round_steps,
                              workers_per_device=workers_per_device,
-                             work_stealing=work_stealing)
+                             work_stealing=work_stealing,
+                             steps_per_call=steps_per_call)
         key = (("ws", backend, self.engine.name, work_stealing, mesh, axis,
                 workers_per_device, cfg),
                self.n_workers, self.round_steps)
+        if steps_per_call != 1:
+            key = key + (steps_per_call,)
 
         def build():
             fn, _, _ = dd.make_round_fn(cfg, mesh, (axis,), dist,

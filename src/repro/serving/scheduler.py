@@ -264,7 +264,8 @@ class _LanePool:
         """One bounded executor round over all lanes; occupancy
         accounting."""
         tel = server.executor.run_round(self.pool, server.cache,
-                                        server._round_budget())
+                                        server._round_budget(),
+                                        unroll=server.policy.steps_per_call)
         exec_s = max(tel.wall_s - tel.compile_s, 0.0)
         adv = tel.adv                                   # per-lane steps
         busy = int(adv.sum())
@@ -351,6 +352,7 @@ class MBEServer:
     def __init__(self, policy: BucketPolicy | None = None,
                  collect_cap: int = 1, collect: bool = False,
                  order_mode: str = "deg", impl: str = "jnp",
+                 kernel_impl: str = "auto",
                  max_graph_steps: int | None = None,
                  executor: Executor | None = None,
                  cache_capacity: int | None =
@@ -361,6 +363,7 @@ class MBEServer:
         self.collect = collect
         self.order_mode = order_mode
         self.impl = impl
+        self.kernel_impl = kernel_impl
         self.max_graph_steps = max_graph_steps
         self.executor = executor or LocalExecutor()
         self.engine = get_engine(engine)
@@ -440,7 +443,8 @@ class MBEServer:
     def _engine_config(self, bucket: BucketSpec):
         return bucket.engine_config(collect_cap=self.collect_cap,
                                     order_mode=self.order_mode,
-                                    impl=self.impl)
+                                    impl=self.impl,
+                                    kernel_impl=self.kernel_impl)
 
     def _round_budget(self) -> int | None:
         spr = self.policy.steps_per_round
@@ -506,7 +510,9 @@ class MBEServer:
         ctx = self.engine.make_context(req.graph, cfg)
         lane = self.executor.big_lane(cfg, ctx, req.graph.n_u, self.cache,
                                       self.policy.steps_per_round or None,
-                                      engine=self.engine)
+                                      engine=self.engine,
+                                      steps_per_call=
+                                      self.policy.steps_per_call)
         self._big = _BigSlot(lane, req,
                              queue_s=time.perf_counter() - req.t_admit)
         self.routing_log.append(dict(
@@ -794,6 +800,14 @@ class MBEServer:
                     # the round's critical path (vmap imbalance)
                     idle_lane_steps=total - self._busy_steps,
                     occupancy=(self._busy_steps / total) if total else 0.0,
+                    # kernel/segment knobs + the per-poll step volume, so
+                    # scheduler-level and kernel-level wins are separable
+                    # in one stats read (benchmarks/serving.py reports
+                    # steps/s alongside occupancy from these)
+                    kernel_impl=self.kernel_impl,
+                    steps_per_call=self.policy.steps_per_call,
+                    steps_per_poll=(self._busy_steps / self._n_rounds
+                                    if self._n_rounds else 0.0),
                     executor=self.executor.name,
                     engine=self.engine.name,
                     cancelled=self._n_cancelled,

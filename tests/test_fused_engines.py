@@ -1,0 +1,156 @@
+"""Differential tests for the fused step-kernel path and the multi-step
+compiled segments.
+
+``kernel_impl="pallas"`` swaps both engines' per-branch count passes for
+the fused ``fused_select``/``fused_check`` Pallas kernels (interpret mode
+on CPU, so the REAL kernel bodies execute); it must be byte-identical to
+the unfused ``"jnp"`` path — same ``(n_max, cs)``, same decoded biclique
+sets, and (because the fused kernels change WHAT computes a step, never
+WHICH step runs) the same step/node counts.
+
+``unroll``/``steps_per_call`` packs several candidate steps into one
+while-loop iteration of a compiled round segment; the in-graph early exit
+must make it state-identical to single-stepping, lane by lane, at every
+round boundary.
+"""
+import numpy as np
+import jax
+import pytest
+from _graphs import random_graph as _random_graph
+from _hyp import given, settings, st
+
+from repro.baselines import bicliques_to_key_set
+from repro.core import engine_compact as ec
+from repro.core import engine_dense as ed
+from repro.core.engine import get_engine
+
+
+@given(st.integers(1, 8), st.integers(1, 12),
+       st.floats(0.05, 0.85), st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_dense_pallas_byte_identical_to_jnp(n_u, n_v, density, seed):
+    g = _random_graph(n_u, n_v, density, seed)
+    cap = 64
+    j = ed.enumerate_dense(g, collect_cap=cap, kernel_impl="jnp")
+    p = ed.enumerate_dense(g, collect_cap=cap, kernel_impl="pallas")
+    assert (int(j.n_max), int(j.cs)) == (int(p.n_max), int(p.cs))
+    assert (int(j.steps), int(j.nodes)) == (int(p.steps), int(p.nodes))
+    cfg = ed.make_config(g, collect_cap=cap)
+    assert bicliques_to_key_set(
+        ed.collected_bicliques(cfg, j, g.n_u, g.n_v)) == \
+        bicliques_to_key_set(ed.collected_bicliques(cfg, p, g.n_u, g.n_v))
+
+
+@given(st.integers(1, 8), st.integers(1, 12),
+       st.floats(0.05, 0.85), st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_compact_pallas_byte_identical_to_jnp(n_u, n_v, density, seed):
+    g = _random_graph(n_u, n_v, density, seed)
+    cap = 64
+    j = ec.enumerate_compact(g, collect_cap=cap, kernel_impl="jnp")
+    p = ec.enumerate_compact(g, collect_cap=cap, kernel_impl="pallas")
+    assert (int(j.n_max), int(j.cs)) == (int(p.n_max), int(p.cs))
+    assert (int(j.steps), int(j.nodes)) == (int(p.steps), int(p.nodes))
+    cfg = ed.make_config(g, collect_cap=cap)
+    assert bicliques_to_key_set(
+        ed.collected_bicliques(cfg, j, g.n_u, g.n_v)) == \
+        bicliques_to_key_set(ed.collected_bicliques(cfg, p, g.n_u, g.n_v))
+
+
+@pytest.mark.parametrize("order", ["deg", "deg_nocache", "input"])
+def test_dense_pallas_all_orderings(order):
+    # deg exercises the counts-cache refill (with_counts=True),
+    # deg_nocache the fused_select selection pass, input the
+    # selection-free fused_check-only shape
+    g = _random_graph(7, 11, 0.35, 42)
+    j = ed.enumerate_dense(g, order_mode=order, kernel_impl="jnp")
+    p = ed.enumerate_dense(g, order_mode=order, kernel_impl="pallas")
+    assert (int(j.n_max), int(j.cs), int(j.steps)) == \
+        (int(p.n_max), int(p.cs), int(p.steps))
+
+
+@pytest.mark.parametrize("engine", ["dense", "compact"])
+def test_engine_protocol_kernel_impl(engine):
+    # the registry-level enumerate carries the knob too
+    g = _random_graph(6, 9, 0.3, 7)
+    eng = get_engine(engine)
+    j = eng.enumerate(g, kernel_impl="jnp")
+    p = eng.enumerate(g, kernel_impl="pallas")
+    assert (int(j.n_max), int(j.cs)) == (int(p.n_max), int(p.cs))
+
+
+# ---------------------------------------------------------------------------
+# multi-step compiled segments (unroll / steps_per_call)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["dense", "compact"])
+@pytest.mark.parametrize("unroll", [2, 5])
+def test_unroll_state_identical_across_rounds(engine, unroll):
+    """Bounded rounds with an inner unroll must reproduce the
+    single-step state EXACTLY at every round boundary (every leaf —
+    the resumability contract the serving refill relies on)."""
+    eng = get_engine(engine)
+    g = _random_graph(8, 12, 0.4, 3)
+    cfg = eng.make_config(g)
+    ctx = eng.make_context(g, cfg)
+    s1 = eng.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+    sk = jax.tree.map(lambda x: x, s1)
+    run1 = jax.jit(lambda s: eng.run(ctx, cfg, s, max_steps=13, unroll=1))
+    runk = jax.jit(lambda s: eng.run(ctx, cfg, s, max_steps=13,
+                                     unroll=unroll))
+    for _ in range(30):
+        s1, sk = run1(s1), runk(sk)
+        for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(sk)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if bool(eng.done(s1)):
+            break
+    assert bool(eng.done(s1)), "graph did not finish in 30 rounds"
+
+
+def test_unroll_batched_lanes_identical():
+    """run_batch with unroll: per-lane early exit must hold under vmap
+    (a finished lane must not advance inside an unrolled segment)."""
+    eng = get_engine("dense")
+    graphs = [_random_graph(5 + i, 8 + i, 0.3, i) for i in range(3)]
+    n_u = max(g.n_u for g in graphs)
+    n_v = max(g.n_v for g in graphs)
+    cfg = ed.EngineConfig(n_u=n_u, n_v=n_v, m_real=n_u, depth=n_u + 2)
+    ctxs = [eng.make_context(g, cfg) for g in graphs]
+    states = [eng.fresh_lane_state(cfg, g.n_u) for g in graphs]
+    ctx = jax.tree.map(lambda *xs: np.stack(xs), *ctxs)
+    st0 = jax.tree.map(lambda *xs: np.stack(xs), *states)
+    outs = {}
+    for unroll in (1, 4):
+        fn = jax.jit(lambda c, s: eng.run_batch(
+            c, cfg, s, max_steps=9, ctx_batched=True, unroll=unroll))
+        s = jax.tree.map(np.copy, st0)
+        for _ in range(40):
+            s = fn(ctx, s)
+            if bool(np.asarray(eng.done(s)).all()):
+                break
+        outs[unroll] = s
+    for a, b in zip(jax.tree.leaves(outs[1]), jax.tree.leaves(outs[4])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_client_steps_per_call_and_pallas_end_to_end():
+    """The serving stack with kernel_impl='pallas' + steps_per_call > 1
+    serves the same stream byte-identically to the defaults."""
+    from repro.api import MBEClient, MBEOptions
+    graphs = [_random_graph(5 + i % 3, 8 + i % 4, 0.3, 100 + i)
+              for i in range(5)]
+    base = MBEClient(MBEOptions(collect=True, collect_cap=64,
+                                steps_per_round=8))
+    ref = base.enumerate_many(graphs)
+    tuned = MBEClient(MBEOptions(collect=True, collect_cap=64,
+                                 steps_per_round=8, steps_per_call=4,
+                                 kernel_impl="pallas"))
+    got = tuned.enumerate_many(graphs)
+    for a, b in zip(ref, got):
+        assert (a.n_max, a.cs) == (b.n_max, b.cs)
+        assert bicliques_to_key_set(a.bicliques) == \
+            bicliques_to_key_set(b.bicliques)
+    st = tuned.stats()
+    assert st["kernel_impl"] == "pallas"
+    assert st["steps_per_call"] == 4
+    assert st["steps_per_poll"] > 0

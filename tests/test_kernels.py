@@ -135,3 +135,172 @@ def test_fused_select_tiebreak_first_min():
                             jnp.asarray(act), impl="pallas",
                             interpret=True, block_n=8, block_w=8)
     assert (int(i_p), int(v_p)) == (5, 4)
+
+
+def test_fused_select_auto_falls_back_to_jnp_and_rejects_unknown():
+    # "auto" off-TPU must take the jnp reference path (not assert), and an
+    # unknown impl must raise ValueError — intersect_count/ops.py behavior
+    rng = np.random.default_rng(3)
+    adj = rng.integers(0, 2 ** 32, size=(17, 3), dtype=np.uint32)
+    mask = rng.integers(0, 2 ** 32, size=(3,), dtype=np.uint32)
+    act = rng.integers(0, 2, size=(17,)).astype(np.int32)
+    i_a, v_a = fused_select(jnp.asarray(adj), jnp.asarray(mask),
+                            jnp.asarray(act), impl="auto")
+    assert (int(i_a), int(v_a)) == _host_select(adj, mask, act)
+    i_j, v_j = fused_select(jnp.asarray(adj), jnp.asarray(mask),
+                            jnp.asarray(act), impl="jnp")
+    assert (int(i_a), int(v_a)) == (int(i_j), int(v_j))
+    with pytest.raises(ValueError, match="unknown impl"):
+        fused_select(jnp.asarray(adj), jnp.asarray(mask),
+                     jnp.asarray(act), impl="cuda")
+
+
+def test_fused_select_gathered_matches_host():
+    from repro.kernels.fused_select import fused_select_gathered
+    rng = np.random.default_rng(9)
+    adj = rng.integers(0, 2 ** 32, size=(40, 6), dtype=np.uint32)
+    idx = rng.permutation(40).astype(np.int32)
+    mask = rng.integers(0, 2 ** 32, size=(6,), dtype=np.uint32)
+    act = rng.integers(0, 2, size=(40,)).astype(np.int32)
+    want = _host_select(adj[idx], mask, act)
+    for impl in ("jnp", "pallas"):
+        i, v = fused_select_gathered(
+            jnp.asarray(adj), jnp.asarray(idx), jnp.asarray(mask),
+            jnp.asarray(act), impl=impl, interpret=True,
+            block_n=16, block_w=8)
+        assert (int(i), int(v)) == want, impl
+
+
+# ---------------------------------------------------------------------------
+# fused_check (fused maximality check + expansion partition)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.fused_check import (                        # noqa: E402
+    fused_check, fused_check_gathered, fused_check_ref)
+
+
+def _host_check(adj, mask, nlp, qa, pa):
+    c = _host_counts(adj, mask)
+    viol = bool(np.any((qa > 0) & (c == nlp)))
+    full = (pa > 0) & (c == nlp)
+    part = (pa > 0) & (c > 0) & (c < nlp)
+    nz = c > 0
+    return viol, full, part, nz, c
+
+
+def _check_case(adj, mask, nlp, qa, pa, block=(16, 8), with_counts=False):
+    """Assert kernel AND ref both match the host model."""
+    want = _host_check(adj, mask, nlp, qa, pa)
+    args = (jnp.asarray(adj), jnp.asarray(mask), jnp.int32(nlp),
+            jnp.asarray(qa), jnp.asarray(pa))
+    for impl in ("jnp", "pallas"):
+        got = fused_check(*args, impl=impl, interpret=True,
+                          block_n=block[0], block_w=block[1],
+                          with_counts=with_counts)
+        assert bool(got[0]) == want[0], impl
+        for g_, w_ in zip(got[1:4], want[1:4]):
+            np.testing.assert_array_equal(np.asarray(g_), w_, err_msg=impl)
+        if with_counts:
+            np.testing.assert_array_equal(np.asarray(got[4]), want[4])
+        else:
+            assert got[4] is None
+
+
+@pytest.mark.parametrize("n,w", [(1, 1), (8, 8), (63, 7), (130, 33),
+                                 (512, 256)])
+@pytest.mark.parametrize("block", [(8, 8), (64, 32), (256, 128)])
+@pytest.mark.parametrize("with_counts", [False, True])
+def test_fused_check_sweep(n, w, block, with_counts):
+    rng = np.random.default_rng(n * 31 + w)
+    adj = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    mask = rng.integers(0, 2 ** 32, size=(w,), dtype=np.uint32)
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    qa = rng.integers(0, 2, size=n).astype(np.int32)
+    pa = rng.integers(0, 2, size=n).astype(np.int32)
+    _check_case(adj, mask, nlp, qa, pa, block=block,
+                with_counts=with_counts)
+
+
+@given(st.integers(1, 80), st.integers(1, 9), st.integers(0, 2 ** 31),
+       st.sampled_from([0.0, 0.4, 1.0]))
+@settings(max_examples=20, deadline=None)
+def test_fused_check_property(n, w, seed, p_q):
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    # engine-shaped mask: a random subset, nlp = its true popcount
+    mask = (rng.integers(0, 2 ** 32, size=(w,), dtype=np.uint32)
+            & rng.integers(0, 2 ** 32, size=(w,), dtype=np.uint32))
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    qa = (rng.random(n) < p_q).astype(np.int32)
+    pa = (rng.random(n) < 0.5).astype(np.int32)
+    _check_case(adj, mask, nlp, qa, pa)
+
+
+def test_fused_check_q_empty_edge_case():
+    # Q empty (no active Q rows): viol must be False even when some row's
+    # count hits |L'| exactly — the maximality check has nothing to check
+    n, w = 24, 2
+    adj = np.full((n, w), 0xFFFFFFFF, np.uint32)
+    mask = np.full(w, 0xFFFFFFFF, np.uint32)
+    nlp = 64                               # every row's count == nlp
+    qa = np.zeros(n, np.int32)             # Q empty
+    pa = np.ones(n, np.int32)
+    _check_case(adj, mask, nlp, qa, pa)
+    _, full, part, _, _ = _host_check(adj, mask, nlp, qa, pa)
+    assert full.all() and not part.any()   # the all-full-partition regime
+
+
+def test_fused_check_all_full_partition_edge_case():
+    # every active P row fully contains L' -> full everywhere, part empty
+    # (has_child False in the engine: the branch closes as maximal)
+    n, w = 16, 1
+    mask = np.asarray([0b1111], np.uint32)
+    adj = np.full((n, w), 0b1111, np.uint32)
+    nlp = 4
+    qa = np.zeros(n, np.int32)
+    pa = np.ones(n, np.int32)
+    _check_case(adj, mask, nlp, qa, pa, with_counts=True)
+    viol, full, part, nz, c = _host_check(adj, mask, nlp, qa, pa)
+    assert not viol and full.all() and not part.any() and (c == 4).all()
+
+
+def test_fused_check_empty_mask():
+    # |L'| == 0: no counts, no violation, no partition (nonempty guards
+    # this in the engine, but the kernel must still be well-defined)
+    n, w = 12, 3
+    rng = np.random.default_rng(5)
+    adj = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    mask = np.zeros(w, np.uint32)
+    _check_case(adj, mask, 0, np.ones(n, np.int32), np.ones(n, np.int32))
+
+
+def test_fused_check_gathered_matches_host():
+    rng = np.random.default_rng(11)
+    adj = rng.integers(0, 2 ** 32, size=(30, 4), dtype=np.uint32)
+    idx = rng.integers(0, 30, size=(60,)).astype(np.int32)  # Q ++ P layout
+    mask = rng.integers(0, 2 ** 32, size=(4,), dtype=np.uint32)
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    qa = np.concatenate([np.ones(30, np.int32), np.zeros(30, np.int32)])
+    pa = 1 - qa
+    want = _host_check(adj[idx], mask, nlp, qa, pa)
+    for impl in ("jnp", "pallas"):
+        got = fused_check_gathered(
+            jnp.asarray(adj), jnp.asarray(idx), jnp.asarray(mask),
+            jnp.int32(nlp), jnp.asarray(qa), jnp.asarray(pa), impl=impl,
+            interpret=True, block_n=16, block_w=8)
+        assert bool(got[0]) == want[0]
+        for g_, w_ in zip(got[1:4], want[1:4]):
+            np.testing.assert_array_equal(np.asarray(g_), w_)
+
+
+def test_fused_check_auto_and_unknown_impl():
+    adj = np.ones((8, 1), np.uint32)
+    mask = np.ones(1, np.uint32)
+    got = fused_check(jnp.asarray(adj), jnp.asarray(mask), jnp.int32(1),
+                      jnp.ones(8, jnp.int32), jnp.ones(8, jnp.int32),
+                      impl="auto")
+    assert bool(got[0])                    # every row hits |L'| = 1
+    with pytest.raises(ValueError, match="unknown impl"):
+        fused_check(jnp.asarray(adj), jnp.asarray(mask), jnp.int32(1),
+                    jnp.ones(8, jnp.int32), jnp.ones(8, jnp.int32),
+                    impl="triton")
