@@ -1,26 +1,39 @@
 """Kernel microbenchmark: the fused step-kernel path vs the unfused ops.
 
-Three levels, all emitted into one ``--json`` artifact (CI uploads
-``BENCH_5.json`` — the perf trajectory for the enumeration hot step):
+Three levels, all emitted into one ``--json`` artifact (``BENCH_6.json``
+is the committed baseline — the perf trajectory for the enumeration hot
+step):
 
 * **op level** — one candidate-branch worth of work at a benchmark shape:
   ``unfused`` = ``intersect_count`` + the separate argmin / compare /
   reduce XLA ops the engines used to issue; ``fused`` = one
-  ``fused_select`` / ``fused_check`` call.  Both variants run per impl
-  (``jnp`` and ``pallas``).
+  ``fused_select`` / ``fused_check`` call; ``fused_packed`` = the
+  packed-uint32-activity variants the engines actually call (no
+  ``to_bool`` expansion).  Every variant runs per impl (``jnp`` and
+  ``pallas``).  The shape grid includes the n=2048 regression shapes
+  where PR-5's row-striped blocking made pallas 8x SLOWER than jnp.
 * **engine level** — full enumeration per graph x engine x
   ``kernel_impl``: wall time and steps/sec, asserted byte-identical
   (``n_max``/``cs``) between impls.
 * **segment level** — bounded rounds with a ``steps_per_call`` inner
-  unroll (the multi-step compiled-segment knob): polls, wall, steps/sec.
+  unroll (the multi-step compiled-segment knob — backed by the
+  VMEM-resident segment kernel on the pallas path): polls, wall,
+  steps/sec.
 
 On CPU the pallas impl runs in **interpret mode**, so parity (or worse)
 is expected there — the artifact records ``backend`` and carries BOTH
 impls so TPU runs slot into the same trajectory and the fused speedup
 becomes visible where it is real.
 
-  python -m benchmarks.kernels --json BENCH_5.json
-  python -m benchmarks.kernels --smoke
+``--regress BASELINE.json`` replays the comparison that would have caught
+the n=2048 regression: every current op-level wall time is checked
+against the committed baseline per ``(op, variant, impl, n, w)`` key.
+Slowdowns beyond ``--regress-tol`` HARD-FAIL when the baseline was
+recorded on the same backend; cross-backend comparisons only warn (an
+interpret-mode CPU wall says nothing about a TPU wall).
+
+  python -m benchmarks.kernels --json BENCH_6.json
+  python -m benchmarks.kernels --smoke --regress BENCH_6.json
 """
 from __future__ import annotations
 
@@ -32,11 +45,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitset
 from repro.core import engine_dense as ed
 from repro.core.engine import get_engine
 from repro.data.generators import random_bipartite
-from repro.kernels.fused_check.ops import fused_check
-from repro.kernels.fused_select.ops import fused_select
+from repro.kernels.fused_check.ops import fused_check, fused_check_packed
+from repro.kernels.fused_select.ops import (fused_select,
+                                            fused_select_packed)
 from repro.kernels.intersect_count.ops import intersect_count
 
 _INF = jnp.int32(0x7FFFFFFF)
@@ -94,10 +109,26 @@ def bench_ops(n: int, w: int, repeats: int, seed: int = 0) -> list:
         return jax.jit(lambda adj, mask, nlp, qa, pa: fused_check(
             adj, mask, nlp, qa, pa, impl=impl))
 
+    # packed-activity variants: the words the engines now keep end to end
+    act_w = bitset.from_bool(act > 0)
+    qa_w = bitset.from_bool(qa > 0)
+    pa_w = bitset.from_bool(pa > 0)
+
+    def select_packed(impl):
+        return jax.jit(lambda adj, mask, aw: fused_select_packed(
+            adj, mask, aw, impl=impl))
+
+    def check_packed(impl):
+        return jax.jit(lambda adj, mask, nlp, qw, pw: fused_check_packed(
+            adj, mask, nlp, qw, pw, impl=impl))
+
     cases = [("select", "unfused", select_unfused, (adj, mask, act)),
              ("select", "fused", select_fused, (adj, mask, act)),
+             ("select", "fused_packed", select_packed, (adj, mask, act_w)),
              ("check", "unfused", check_unfused, (adj, mask, nlp, qa, pa)),
-             ("check", "fused", check_fused, (adj, mask, nlp, qa, pa))]
+             ("check", "fused", check_fused, (adj, mask, nlp, qa, pa)),
+             ("check", "fused_packed", check_packed,
+              (adj, mask, nlp, qa_w, pa_w))]
     rows = []
     for op, variant, make, args in cases:
         for impl in ("jnp", "pallas"):
@@ -190,6 +221,48 @@ def bench_segments(g, steps_per_round: int, unrolls: list[int],
 
 
 # ---------------------------------------------------------------------------
+# --regress: wall-time comparison against a committed baseline artifact
+# ---------------------------------------------------------------------------
+
+def regress_check(rows: list, backend: str, baseline_path: str,
+                  tol: float) -> int:
+    """Compare current op-level wall times against ``baseline_path`` per
+    ``(op, variant, impl, n, w)`` key.  Returns the number of HARD
+    failures: slowdowns beyond ``tol`` x with both runs on the same
+    backend.  Cross-backend slowdowns (or keys missing on either side)
+    only warn — the artifact schema carries both impls precisely so runs
+    from different platforms can coexist in one trajectory."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_backend = base.get("summary", {}).get("backend")
+    same = base_backend == backend
+    base_walls = {
+        (r["op"], r["variant"], r["impl"], r["n"], r["w"]): r["wall_us"]
+        for r in base.get("rows", []) if r.get("level") == "op"}
+    failures = compared = 0
+    for r in rows:
+        if r.get("level") != "op":
+            continue
+        key = (r["op"], r["variant"], r["impl"], r["n"], r["w"])
+        ref = base_walls.get(key)
+        if ref is None or ref <= 0:
+            continue
+        compared += 1
+        ratio = r["wall_us"] / ref
+        if ratio <= tol:
+            continue
+        tag = "FAIL" if same else "warn (cross-backend)"
+        print(f"[kernels] regress {tag}: {key} {ref:.1f}us -> "
+              f"{r['wall_us']:.1f}us ({ratio:.2f}x > {tol:.2f}x)")
+        failures += same
+    print(f"[kernels] regress vs {baseline_path}: {compared} keys "
+          f"compared (baseline backend={base_backend}, current={backend}"
+          f"{', same platform' if same else ', cross-platform'}), "
+          f"{failures} hard failure(s)")
+    return failures
+
+
+# ---------------------------------------------------------------------------
 
 def main() -> int:
     ap = argparse.ArgumentParser()
@@ -198,15 +271,30 @@ def main() -> int:
     ap.add_argument("--repeats", type=int, default=None)
     ap.add_argument("--steps-per-round", type=int, default=64)
     ap.add_argument("--json", type=str, default=None, metavar="OUT",
-                    help="write the artifact (e.g. BENCH_5.json)")
+                    help="write the artifact (e.g. BENCH_6.json)")
+    ap.add_argument("--regress", type=str, default=None, metavar="BASE",
+                    help="compare op-level walls against this committed "
+                         "artifact; exit 1 on same-backend slowdowns "
+                         "beyond --regress-tol")
+    ap.add_argument("--regress-tol", type=float, default=5.0,
+                    help="max allowed wall-time ratio vs baseline "
+                         "(generous: interpret-mode walls at the "
+                         "50-300us scale swing several-fold run to "
+                         "run, but the blocking-regression class this "
+                         "gate exists for is 7-8x)")
     args = ap.parse_args()
-    repeats = args.repeats or (1 if args.smoke else 3)
+    # min-of-5 even for smoke: --regress compares wall times, and small
+    # sample counts let one bad scheduling window through the min
+    repeats = args.repeats or 5
 
     if args.smoke:
-        op_shapes = [(64, 8)]
+        op_shapes = [(64, 8), (2048, 64)]
         graphs = [random_bipartite(10, 18, p=0.3, seed=0, name="rand-10x18")]
     else:
-        op_shapes = [(512, 64), (2048, 256)]
+        # (64, 8) keeps the smoke grid a subset so CI's --regress always
+        # finds its keys; the (2048, *) rows pin the regression shapes
+        op_shapes = [(64, 8), (512, 64), (2048, 64), (2048, 128),
+                     (2048, 256)]
         graphs = [
             random_bipartite(16, 32, p=0.3, seed=0, name="rand-16x32"),
             random_bipartite(24, 48, p=0.2, seed=1, name="rand-24x48"),
@@ -243,6 +331,9 @@ def main() -> int:
             json.dump(dict(benchmark="kernels", summary=summary, rows=rows),
                       f, indent=2, sort_keys=True)
         print(f"[kernels] wrote {args.json}")
+    if args.regress:
+        return 1 if regress_check(rows, summary["backend"], args.regress,
+                                  args.regress_tol) else 0
     return 0
 
 

@@ -115,6 +115,27 @@ def from_bool(mask: jax.Array) -> jax.Array:
     return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
 
 
+def masked_argmin(values: jax.Array, words: jax.Array) -> jax.Array:
+    """First index minimizing ``values`` among members of the packed set
+    ``words`` (0 when the set is empty — matching ``jnp.argmin`` over an
+    all-INF vector, the engines' historical convention).
+
+    Semantically identical to
+    ``argmin(where(to_bool(words, n), values, INF))`` but expands the
+    membership bits with a reshape instead of ``to_bool``'s per-bit word
+    gather — no gathered (n,) intermediate, so it is safe inside fused
+    step kernels and cheap as the per-step selection primitive.
+    """
+    n = values.shape[-1]
+    nw = words.shape[-1]
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)    # (..., nw, 32)
+    flat = bits.reshape(bits.shape[:-2] + (nw * WORD,))[..., :n]
+    inf = jnp.int32(0x7FFFFFFF)
+    return jnp.argmin(jnp.where(flat != 0, values, inf),
+                      axis=-1).astype(jnp.int32)
+
+
 def intersect_count(rows: jax.Array, mask: jax.Array) -> jax.Array:
     """|row_i AND mask| for every row. rows: (..., m, nw), mask: (..., nw)."""
     return count(rows & mask[..., None, :], axis=-1)

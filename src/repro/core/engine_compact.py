@@ -32,10 +32,12 @@ two is the repo's "reverse scanning" ablation analog (benchmarks Fig. 6).
 **Kernel paths** (``EngineConfig.kernel_impl``, DESIGN.md §8): on the
 ``"pallas"`` path the three per-branch count passes collapse to two fused
 VMEM-resident kernels over the SAME gathered access pattern —
-``fused_select_gathered`` over ``adj[P]`` (counts + first-minimum argmin
-in position order) and one ``fused_check_gathered`` over the concatenated
-``adj[Q ++ P']`` rows (maximality check + expansion partition in one
-pass).  Byte-identical to ``"jnp"`` (``tests/test_fused_engines.py``).
+``fused_select_gathered_prefix`` over ``adj[P]`` (counts + first-minimum
+argmin in position order, activity = the level pointer scalar) and one
+``fused_check_gathered_prefix2`` over the concatenated ``adj[Q ++ P']``
+rows (maximality check + expansion partition in one pass, activity = the
+``(q_ptr, p_ptr)`` scalar pair).  Byte-identical to ``"jnp"``
+(``tests/test_fused_engines.py``).
 
 Registered as ``"compact"`` in ``repro.core.engine``, so the paper's data
 structure is servable end to end:
@@ -54,8 +56,8 @@ import jax.numpy as jnp
 from repro.core import bitset
 from repro.core.engine_dense import EngineConfig, make_config  # shared cfg
 from repro.core.graph import BipartiteGraph
-from repro.kernels.fused_check.ops import fused_check_gathered
-from repro.kernels.fused_select.ops import fused_select_gathered
+from repro.kernels.fused_check.ops import fused_check_gathered_prefix2
+from repro.kernels.fused_select.ops import fused_select_gathered_prefix
 from repro.kernels.intersect_count.ops import intersect_count
 
 _INF = jnp.int32(0x7FFFFFFF)
@@ -95,13 +97,17 @@ class CompactState(NamedTuple):
 
 
 def make_context(g: BipartiteGraph, cfg: EngineConfig) -> CompactContext:
-    src = g if (g.n_u == cfg.n_u and g.n_v == cfg.n_v) else \
-        BipartiteGraph.from_edges(cfg.n_u, cfg.n_v,
-                                  [tuple(e) for e in g.edges], name=g.name)
-    adj = src.adj_u.astype(np.uint32)
-    deg = adj_deg = np.array(
-        [bin(int.from_bytes(adj[u].tobytes(), "little")).count("1")
-         for u in range(g.n_u)], dtype=np.int64)
+    assert g.n_u <= cfg.n_u and g.n_v <= cfg.n_v
+    # Zero-extended word copy: packed rows are prefix-compatible under
+    # padding (bit v stays at word v//32), so no edge-list round-trip —
+    # see engine_dense.make_context.
+    adj = np.zeros((cfg.n_u, cfg.wv), dtype=np.uint32)
+    src_rows = np.asarray(g.adj_u, dtype=np.uint32)
+    adj[: g.n_u, : src_rows.shape[1]] = src_rows
+    # one vectorized popcount pass (the per-row Python bin() loop cost
+    # O(n_u) interpreted big-int conversions per admitted graph)
+    deg = np.unpackbits(adj[: g.n_u].view(np.uint8), axis=1) \
+        .sum(axis=1, dtype=np.int64)
     order_real = np.argsort(deg, kind="stable").astype(np.int32)
     m = g.n_u
     order = np.full(cfg.n_u, -1, dtype=np.int32)
@@ -183,13 +189,15 @@ def _branch_candidate(g: CompactContext, cfg: EngineConfig,
         if cfg.fused:
             # one VMEM-resident pass over the gathered rows adj[P]:
             # counts + first-minimum argmin in POSITION order (the
-            # compact-array order), counts never written to HBM.  The
-            # -1 "no active row" sentinel only occurs when p == 0, where
-            # this branch's result is discarded (case_id != 2) or the
-            # forced root overrides x — clamp so the swap indexing below
-            # stays in range.
-            i_x, _ = fused_select_gathered(
-                g.adj, s.P, L, (pos < p).astype(jnp.int32), impl="pallas")
+            # compact-array order), counts never written to HBM, and the
+            # level pointer itself is the activity (a scalar — no (N,)
+            # comparison vector materialized per step).  The -1 "no
+            # active row" sentinel only occurs when p == 0, where this
+            # branch's result is discarded (case_id != 2) or the forced
+            # root overrides x — clamp so the swap indexing below stays
+            # in range.
+            i_x, _ = fused_select_gathered_prefix(
+                g.adj, s.P, L, p, impl="pallas")
             i_x = jnp.maximum(i_x, 0)
         else:
             rows_p = g.adj[s.P]                             # gathered rows
@@ -220,13 +228,13 @@ def _branch_candidate(g: CompactContext, cfg: EngineConfig,
     # flag and both partition flag vectors from ONE fused_check pass —
     # the counts never round-trip to HBM.
     if cfg.fused:
-        zeros = jnp.zeros((cfg.n_u,), bool)
-        q_act = jnp.concatenate([pos < s.q_ptr[lvl], zeros])
-        p_act = jnp.concatenate([zeros, pos < p_work])
-        viol_f, full2, part2, _, _ = fused_check_gathered(
+        # activity is the (q_ptr, p_ptr) level-pointer pair itself —
+        # two scalars instead of two (2N,) comparison vectors built and
+        # shipped per step; the kernel rebuilds the position predicates
+        # from its iota against the static Q/P split.
+        viol_f, full2, part2, _, _ = fused_check_gathered_prefix2(
             g.adj, jnp.concatenate([s.Q, P1]), Lp, nLp,
-            q_act.astype(jnp.int32), p_act.astype(jnp.int32),
-            impl="pallas")
+            s.q_ptr[lvl], p_work, impl="pallas")
         viol = viol_f & nonempty
         fullb = full2[cfg.n_u:]                   # per-position flags
         partb = part2[cfg.n_u:]

@@ -60,9 +60,11 @@ import jax.numpy as jnp
 from repro.core import bitset
 from repro.core.graph import BipartiteGraph
 from repro.kernels.dispatch import resolve_impl
-from repro.kernels.fused_check.ops import fused_check
-from repro.kernels.fused_select.ops import fused_select
+from repro.kernels.fused_check.ops import fused_check_packed
+from repro.kernels.fused_select.ops import fused_select_packed
 from repro.kernels.intersect_count.ops import intersect_count
+from repro.kernels.resident_step.ops import (resident_segment,
+                                             resident_supported)
 
 _INF = jnp.int32(0x7FFFFFFF)
 
@@ -87,12 +89,24 @@ class EngineConfig:
     #                             mode off-TPU), 'auto' = pallas on TPU,
     #                             jnp elsewhere (kernels.dispatch)
     max_steps: int = 1 << 30    # safety/round bound on loop iterations
+    resident: bool = True       # pallas path only: back run/run_batch
+    #                             with the VMEM-resident multi-step
+    #                             segment kernel (kernels.resident_step)
+    #                             whenever the state fits its VMEM budget;
+    #                             False pins the per-step fused kernels
+    #                             (DESIGN.md §9)
 
     @property
     def fused(self) -> bool:
         """Whether branches take the fused Pallas step-kernel path
         (resolved at trace time — 'auto' is backend-dependent)."""
         return resolve_impl(self.kernel_impl) == "pallas"
+
+    @property
+    def resident_active(self) -> bool:
+        """Whether ``run`` backs its loop with the resident segment
+        kernel: pallas path, opted in, and the state fits VMEM."""
+        return self.fused and self.resident and resident_supported(self)
 
     @property
     def wu(self) -> int:
@@ -147,13 +161,16 @@ class DenseState(NamedTuple):
 
 def make_context(g: BipartiteGraph, cfg: EngineConfig) -> GraphContext:
     assert g.n_u <= cfg.n_u and g.n_v <= cfg.n_v
+    # Packed rows are PREFIX-COMPATIBLE under padding: bit v lives at word
+    # v//32 regardless of the total word count, so padding n_v only appends
+    # zero words and padding n_u only appends zero rows.  A zero-extended
+    # word copy of g.adj_u is therefore byte-identical to re-packing — the
+    # old Python edge-list round-trip (BipartiteGraph.from_edges over
+    # g.edges) cost O(|E|) interpreted work on EVERY bucketed admission,
+    # i.e. nearly every request on the serving path.
     adj = np.zeros((cfg.n_u, cfg.wv), dtype=np.uint32)
-    gp = g if (g.n_v == cfg.n_v and g.n_u == cfg.n_u) else None
-    # re-pack for the padded word count
-    src = BipartiteGraph.from_edges(
-        cfg.n_u, cfg.n_v, [tuple(e) for e in g.edges], name=g.name) \
-        if gp is None else g
-    adj[:, :] = src.adj_u
+    src_rows = np.asarray(g.adj_u, dtype=np.uint32)
+    adj[: g.n_u, : src_rows.shape[1]] = src_rows
     # Host-side vectorized degree: one popcount pass over the packed rows
     # (a per-row jnp round-trip here costs O(n_u) device dispatches per
     # admitted graph — a real per-request cost on the serving path).
@@ -292,23 +309,20 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
     # -- Step 1: candidate selection ------------------------------------
     if cfg.order_mode == "deg":
         # counts cache: level lvl holds |N(v) & lmask[lvl]| already —
-        # selection is a cheap (NU,) argmin, zero adjacency passes on
-        # EITHER kernel path (the cache is refilled by the check pass)
-        c_sel = s.cstack[lvl]
-        active = bitset.to_bool(pm, cfg.n_u)
-        x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)).astype(jnp.int32)
+        # selection is a cheap packed-masked argmin, zero adjacency
+        # passes on EITHER kernel path (the cache is refilled by the
+        # check pass)
+        x_sel = bitset.masked_argmin(s.cstack[lvl], pm)
     elif cfg.order_mode == "deg_nocache":
-        active = bitset.to_bool(pm, cfg.n_u)
         if cfg.fused:
             # one VMEM-resident pass: counts + masked argmin, nothing
-            # round-trips to HBM (x_sel is -1 when P is empty, which only
-            # happens under a forced root where x_sel is overridden)
-            x_sel, _ = fused_select(g.adj, L, active.astype(jnp.int32),
-                                    impl="pallas")
+            # round-trips to HBM and the activity mask travels PACKED
+            # (x_sel is -1 when P is empty, which only happens under a
+            # forced root where x_sel is overridden)
+            x_sel, _ = fused_select_packed(g.adj, L, pm, impl="pallas")
         else:
             c_sel = intersect_count(g.adj, L, impl=cfg.impl)   # (NU,)
-            x_sel = jnp.argmin(jnp.where(active, c_sel, _INF)) \
-                .astype(jnp.int32)
+            x_sel = bitset.masked_argmin(c_sel, pm)
     else:  # 'input': no ordering heuristic (noES ablation)
         x_sel = bitset.first_member(pm)
     x = jnp.where(forced, s.forced_x, x_sel)
@@ -324,29 +338,32 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
     # materializes that counts vector once (c2) and derives the flags
     # with separate elementwise/reduce ops, the pallas path emits the
     # violation flag and the partition flags from ONE kernel pass
-    # (fused_check) — plus the counts themselves only when the 'deg'
-    # cache needs refilling.
-    qb = bitset.to_bool(s.qmask[lvl], cfg.n_u)
-    pb = bitset.to_bool(pm_after, cfg.n_u)
+    # (fused_check_packed: qmask/pmask rows in, flag WORDS out — no
+    # to_bool/from_bool expansion per step) — plus the counts themselves
+    # only when the 'deg' cache needs refilling.
     if cfg.fused:
         with_counts = cfg.order_mode == "deg"
-        viol_f, fullb, partb, nzb, c2 = fused_check(
-            g.adj, Lp, nLp, qb.astype(jnp.int32), pb.astype(jnp.int32),
+        viol_f, fullw, partw, nzw, c2 = fused_check_packed(
+            g.adj, Lp, nLp, s.qmask[lvl], pm_after,
             impl="pallas", with_counts=with_counts)
         viol = viol_f & nonempty
         c_row = c2 if with_counts else jnp.zeros((cfg.n_u,), jnp.int32)
-        q_keep = bitset.from_bool(nzb)
+        q_keep = nzw
+        part_row = partw
+        has_part = jnp.any(partw != 0)
     else:
+        qb = bitset.to_bool(s.qmask[lvl], cfg.n_u)
+        pb = bitset.to_bool(pm_after, cfg.n_u)
         c2 = intersect_count(g.adj, Lp, impl=cfg.impl)         # (NU,)
         viol = jnp.any(qb & (c2 == nLp)) & nonempty
-        fullb = pb & (c2 == nLp)
-        partb = pb & (c2 > 0) & (c2 < nLp)
+        fullw = bitset.from_bool(pb & (c2 == nLp))
+        part_row = bitset.from_bool(pb & (c2 > 0) & (c2 < nLp))
+        has_part = jnp.any(part_row != 0)
         c_row = c2
         q_keep = bitset.from_bool(c2 > 0)
     is_max = nonempty & ~viol
-    Rp = s.rmask[lvl] | bitset.singleton(x, cfg.wu) \
-        | bitset.from_bool(fullb)
-    has_child = is_max & jnp.any(partb)
+    Rp = s.rmask[lvl] | bitset.singleton(x, cfg.wu) | fullw
+    has_child = is_max & has_part
 
     # -- descend / finish -------------------------------------------------
     # after a forced (root-task) candidate, the level-0 P must empty so the
@@ -363,7 +380,7 @@ def _branch_candidate(g: GraphContext, cfg: EngineConfig,
         l_row=Lp, l_idx=child, l_en=has_child,
         c_row=c_row,
         pa_row=pm_final, pa_idx=lvl, pa_en=jnp.bool_(True),
-        pb_row=bitset.from_bool(partb),
+        pb_row=part_row,
         q_row=jnp.where(has_child, q_child, q_lvl),
         q_idx=jnp.where(has_child, child, lvl), q_en=jnp.bool_(True),
         r_row=Rp,
@@ -448,6 +465,15 @@ def run(g: GraphContext, cfg: EngineConfig, s: DenseState,
     steps 2..unroll are guarded by the same done/budget predicate the
     loop condition checks, so the step trajectory (and therefore every
     counter and result) is byte-identical to ``unroll=1``.
+
+    On the pallas path (``cfg.resident_active``) the whole unrolled
+    segment collapses into ONE launch of the VMEM-resident multi-step
+    kernel (``kernels.resident_step``): the lane state stays on-chip for
+    all ``unroll`` steps instead of round-tripping HBM between per-step
+    kernel calls.  The segment guards every internal step with the same
+    predicate, so the trajectory stays byte-identical to the jnp path
+    (the differential suite checks every state leaf at every segment
+    boundary).
     """
     budget = cfg.max_steps if max_steps is None else max_steps
     start = s.steps
@@ -455,12 +481,18 @@ def run(g: GraphContext, cfg: EngineConfig, s: DenseState,
     def active(st):
         return (~_done(st)) & (st.steps - start < budget)
 
-    def body(st):
-        st = step(g, cfg, st)       # loop cond guarantees the first step
-        for _ in range(unroll - 1):
-            st = jax.lax.cond(active(st),
-                              lambda t: step(g, cfg, t), lambda t: t, st)
-        return st
+    if cfg.resident_active:
+        def body(st):
+            return resident_segment(g, cfg, st, start=start, budget=budget,
+                                    steps_per_call=unroll)
+    else:
+        def body(st):
+            st = step(g, cfg, st)   # loop cond guarantees the first step
+            for _ in range(unroll - 1):
+                st = jax.lax.cond(active(st),
+                                  lambda t: step(g, cfg, t), lambda t: t,
+                                  st)
+            return st
 
     return jax.lax.while_loop(active, body, s)
 

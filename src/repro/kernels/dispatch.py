@@ -46,3 +46,60 @@ def pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+# Default per-tile budget for the row-accumulate step kernels'
+# (block_n, block_w) adjacency tile.  Well under one TPU core's ~16 MiB
+# VMEM (the tile shares VMEM with the mask row, activity vectors, flag
+# outputs and the counts scratch), and large enough that every benchmark
+# bucket up to (4096, 512 words) runs as a SINGLE grid cell.
+DEFAULT_TILE_BYTES = 8 * 1024 * 1024
+
+_LANE = 128      # TPU lane width (words per vector register row)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def plan_blocks(n: int, w: int, block_n: int | None = None,
+                block_w: int | None = None, *, row_mult: int = 8,
+                tile_bytes: int = DEFAULT_TILE_BYTES) -> tuple[int, int]:
+    """Pick ``(block_n, block_w)`` for an (n, w) row-accumulate kernel.
+
+    Explicit ``block_n``/``block_w`` are honoured (clamped to the array,
+    alignment-rounded) — the test sweeps exercise fixed blockings.  The
+    ``None`` auto policy fixes the PR-5 large-n regression (BENCH_5.json:
+    fused select 1576us pallas vs 190us jnp at n=2048): the old defaults
+    split n=2048 into four full-width row blocks, so every grid cell
+    re-streamed the mask and paid per-cell launch/interpret overhead while
+    the (1,1) running argmin output was revisited four times.  The fix is
+    **width-tiled blocking**:
+
+    * keep ALL rows resident in one row block whenever the full (n, w)
+      tile fits ``tile_bytes`` — one grid cell, one pass, counts never
+      leave VMEM;
+    * when it does not fit, tile the WIDTH first (grid = (1, w/bw)): the
+      per-row counts accumulator carries across width blocks for free,
+      while an extra ROW block would re-stream the mask and serialize the
+      argmin fold;
+    * tile rows only when a single 128-lane column stripe of all rows
+      still exceeds the budget (n > tile_bytes / 512 — far above any
+      serving bucket).
+
+    ``row_mult`` is the row-block alignment (8 sublanes; the packed-mask
+    variants need 32 so activity words align with row blocks).
+    """
+    if block_n is not None or block_w is not None:
+        bn = min(block_n or 512, max(row_mult, _round_up(n, row_mult)))
+        bw = min(block_w or 256, max(8, w))
+        return _round_up(bn, row_mult), bw
+    words = tile_bytes // 4
+    bn = _round_up(n, row_mult)
+    if bn * w <= words:
+        return bn, w                        # one resident tile
+    bw = max(_LANE, (words // bn) // _LANE * _LANE)
+    if bn * bw <= words:
+        return bn, bw                       # width-tiled, rows resident
+    bn = max(row_mult, (words // bw) // row_mult * row_mult)
+    return bn, bw                           # giant n: row-tile the stripe

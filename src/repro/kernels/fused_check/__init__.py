@@ -1,3 +1,5 @@
 from repro.kernels.fused_check.ops import (  # noqa: F401
-    fused_check, fused_check_gathered)
-from repro.kernels.fused_check.ref import fused_check_ref  # noqa: F401
+    fused_check, fused_check_gathered, fused_check_gathered_prefix2,
+    fused_check_packed, fused_check_prefix2)
+from repro.kernels.fused_check.ref import (  # noqa: F401
+    fused_check_packed_ref, fused_check_prefix2_ref, fused_check_ref)

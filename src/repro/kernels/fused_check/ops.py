@@ -3,18 +3,19 @@
 ``impl`` follows the shared contract (``repro.kernels.dispatch``):
 ``"jnp"`` delegates to ``ref.py``, ``"pallas"`` runs the Pallas kernel
 (interpret mode off-TPU), ``"auto"`` picks pallas on TPU backends and jnp
-elsewhere.
+elsewhere.  Blocking defaults to ``dispatch.plan_blocks`` (single cell /
+width-tiled); explicit blocks keep the legacy clamp for the test sweeps.
 
-Returned flags are bools (the engines AND them into bitmasks); ``viol``
-is a scalar bool; ``counts`` is an (N,) int32 vector when
-``with_counts=True`` (the dense engine's ``cstack`` cache) and None
-otherwise.
+Variants (see kernel.py for the encodings):
 
-``fused_check_gathered`` is the compact-array variant: one call over the
-gathered rows ``adj[idx]`` where ``idx`` concatenates the Q and P compact
-arrays, so the maximality check AND the expansion partition come from a
-single pass (the unfused compact path pays one ``intersect_count`` per
-array).
+* ``fused_check``        — dense (N,) activity in, bool flags out.
+* ``fused_check_packed`` — uint32 bitset words in AND out: the dense
+  engine passes its qmask/pmask rows directly and ORs the returned words
+  straight into its stacks — no ``to_bool``/``from_bool`` per step.
+* ``fused_check_gathered``         — compact [Q ++ P] order, dense
+  activity vectors.
+* ``fused_check_gathered_prefix2`` — compact [Q ++ P] order with the two
+  level pointers as scalar bounds (no (2N,) activity vectors).
 """
 from __future__ import annotations
 
@@ -24,16 +25,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import (default_interpret, pad_axis,
-                                    resolve_impl)
+                                    plan_blocks, resolve_impl)
 from repro.kernels.fused_check.kernel import fused_check_pallas
-from repro.kernels.fused_check.ref import fused_check_ref
+from repro.kernels.fused_check.ref import (fused_check_packed_ref,
+                                           fused_check_prefix2_ref,
+                                           fused_check_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_w",
                                              "interpret", "with_counts"))
 def fused_check(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
                 q_act: jax.Array, p_act: jax.Array, *, impl: str = "auto",
-                block_n: int = 512, block_w: int = 256,
+                block_n: int | None = None, block_w: int | None = None,
                 interpret: bool | None = None, with_counts: bool = False):
     """One pass over (N, W) adjacency rows vs the L' ``mask``:
     Q-violation flag + full/partial partition flags (+ optional counts).
@@ -49,8 +52,7 @@ def fused_check(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
     if interpret is None:
         interpret = default_interpret()
     n, w = adj.shape
-    bn = min(block_n, max(8, (n + 7) // 8 * 8))
-    bw = min(block_w, max(8, w))
+    bn, bw = plan_blocks(n, w, block_n, block_w)
     adj_p = pad_axis(pad_axis(adj, 0, bn), 1, bw)
     mask_p = pad_axis(mask, 0, bw)
     qa_p = pad_axis(q_act.astype(jnp.int32), 0, bn)    # pad rows inactive
@@ -65,10 +67,82 @@ def fused_check(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
             None if counts is None else counts[:n])
 
 
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_w",
+                                             "interpret", "with_counts"))
+def fused_check_packed(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
+                       q_words: jax.Array, p_words: jax.Array, *,
+                       impl: str = "auto", block_n: int | None = None,
+                       block_w: int | None = None,
+                       interpret: bool | None = None,
+                       with_counts: bool = False):
+    """``fused_check`` with PACKED masks on both sides: ``q_words`` /
+    ``p_words`` are (ceil(N/32),) uint32 activity bitsets (bits >= N
+    clear) and ``full``/``part``/``nz`` return as (ceil(N/32),) uint32
+    words ready to OR into the engine's packed stacks.  ``counts`` stays
+    an (N,) i32 vector (it feeds the dense cstack cache)."""
+    impl = resolve_impl(impl)
+    nw_out = (adj.shape[0] + 31) // 32
+    if impl == "jnp":
+        return fused_check_packed_ref(adj, mask, n_mask, q_words, p_words,
+                                      with_counts=with_counts)
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = adj.shape
+    bn, bw = plan_blocks(n, w, block_n, block_w, row_mult=32)
+    adj_p = pad_axis(pad_axis(adj, 0, bn), 1, bw)
+    mask_p = pad_axis(mask, 0, bw)
+    np_ = adj_p.shape[0]
+    qa_p = pad_axis(q_words, 0, np_ // 32)[: np_ // 32]
+    pa_p = pad_axis(p_words, 0, np_ // 32)[: np_ // 32]
+    viol, full, part, nz, counts = fused_check_pallas(
+        adj_p, mask_p, n_mask, qa_p, pa_p, block_n=bn, block_w=bw,
+        interpret=interpret, with_counts=with_counts, act_kind="packed")
+    # padded rows: q/p-inactive (their activity bits are zero) and their
+    # adjacency rows are zero so nz bits are zero — slicing words back to
+    # the unpadded word count is exact.
+    return (viol > 0, full[:nw_out], part[:nw_out], nz[:nw_out],
+            None if counts is None else counts[:n])
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_n", "block_w",
+                                             "interpret", "with_counts",
+                                             "split"))
+def fused_check_prefix2(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
+                        q_hi: jax.Array, p_hi: jax.Array, *, split: int,
+                        impl: str = "auto", block_n: int | None = None,
+                        block_w: int | None = None,
+                        interpret: bool | None = None,
+                        with_counts: bool = False):
+    """``fused_check`` over a [first-half ++ second-half] row layout with
+    PREFIX activity: rows [0, q_hi) of [0, split) are q-active, rows
+    [split, split + p_hi) are p-active (``q_hi``/``p_hi`` traced scalars,
+    ``split`` the static concatenation point)."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return fused_check_prefix2_ref(adj, mask, n_mask, q_hi, p_hi,
+                                       split=split, with_counts=with_counts)
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = adj.shape
+    bn, bw = plan_blocks(n, w, block_n, block_w)
+    adj_p = pad_axis(pad_axis(adj, 0, bn), 1, bw)
+    mask_p = pad_axis(mask, 0, bw)
+    # padded rows have global index >= n >= split + p_hi, hence inactive
+    # by the prefix rule itself (q_hi <= split and p_hi <= n - split for
+    # every engine call).
+    viol, full, part, nz, counts = fused_check_pallas(
+        adj_p, mask_p, n_mask, q_hi, p_hi, block_n=bn, block_w=bw,
+        interpret=interpret, with_counts=with_counts, act_kind="prefix2",
+        split=split)
+    return (viol > 0, full[:n] > 0, part[:n] > 0, nz[:n] > 0,
+            None if counts is None else counts[:n])
+
+
 def fused_check_gathered(adj: jax.Array, idx: jax.Array, mask: jax.Array,
                          n_mask: jax.Array, q_act: jax.Array,
                          p_act: jax.Array, *, impl: str = "auto",
-                         block_n: int = 512, block_w: int = 256,
+                         block_n: int | None = None,
+                         block_w: int | None = None,
                          interpret: bool | None = None,
                          with_counts: bool = False):
     """``fused_check`` over the gathered rows ``adj[idx]`` — the
@@ -77,3 +151,20 @@ def fused_check_gathered(adj: jax.Array, idx: jax.Array, mask: jax.Array,
     return fused_check(adj[idx], mask, n_mask, q_act, p_act, impl=impl,
                        block_n=block_n, block_w=block_w,
                        interpret=interpret, with_counts=with_counts)
+
+
+def fused_check_gathered_prefix2(adj: jax.Array, idx: jax.Array,
+                                 mask: jax.Array, n_mask: jax.Array,
+                                 q_hi: jax.Array, p_hi: jax.Array, *,
+                                 impl: str = "auto",
+                                 block_n: int | None = None,
+                                 block_w: int | None = None,
+                                 interpret: bool | None = None,
+                                 with_counts: bool = False):
+    """``fused_check_gathered`` over the compact engine's concatenated
+    [Q ++ P] index vector with the two level pointers as scalar activity
+    bounds (split = len(idx) // 2)."""
+    return fused_check_prefix2(adj[idx], mask, n_mask, q_hi, p_hi,
+                               split=idx.shape[0] // 2, impl=impl,
+                               block_n=block_n, block_w=block_w,
+                               interpret=interpret, with_counts=with_counts)

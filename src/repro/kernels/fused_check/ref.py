@@ -1,6 +1,6 @@
-"""Pure-jnp oracle for fused_check.
+"""Pure-jnp oracle for fused_check (all activity/flag encodings).
 
-Computes the same five outputs as the kernel from one materialized counts
+Computes the same outputs as the kernel from one materialized counts
 vector — the unfused shape of the computation the kernel collapses.
 """
 from __future__ import annotations
@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import bitset
 from repro.kernels.intersect_count.ref import intersect_count_ref
 
 
@@ -25,3 +26,34 @@ def fused_check_ref(adj: jax.Array, mask: jax.Array, n_mask: jax.Array,
     part = (p_act > 0) & (c > 0) & (c < nlp)
     nz = c > 0
     return viol, full, part, nz, (c if with_counts else None)
+
+
+def fused_check_packed_ref(adj: jax.Array, mask: jax.Array,
+                           n_mask: jax.Array, q_words: jax.Array,
+                           p_words: jax.Array, *,
+                           with_counts: bool = False):
+    """Packed oracle: dense oracle over expanded activity, flags packed
+    back to words — the two conversions the packed kernel removes."""
+    n = adj.shape[0]
+    qb = bitset.to_bool(q_words, n)
+    pb = bitset.to_bool(p_words, n)
+    viol, full, part, nz, counts = fused_check_ref(
+        adj, mask, n_mask, qb.astype(jnp.int32), pb.astype(jnp.int32),
+        with_counts=with_counts)
+    return (viol, bitset.from_bool(full), bitset.from_bool(part),
+            bitset.from_bool(nz), counts)
+
+
+def fused_check_prefix2_ref(adj: jax.Array, mask: jax.Array,
+                            n_mask: jax.Array, q_hi: jax.Array,
+                            p_hi: jax.Array, *, split: int,
+                            with_counts: bool = False):
+    """Prefix2 oracle: rows [0, q_hi) q-active, [split, split + p_hi)
+    p-active (the compact engine's concatenated [Q ++ P] layout)."""
+    n = adj.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    q_act = (pos < split) & (pos < q_hi)
+    p_act = (pos >= split) & (pos - split < p_hi)
+    return fused_check_ref(adj, mask, n_mask, q_act.astype(jnp.int32),
+                           p_act.astype(jnp.int32),
+                           with_counts=with_counts)

@@ -1,2 +1,5 @@
 from repro.kernels.fused_select.ops import (  # noqa: F401
-    fused_select, fused_select_gathered)
+    fused_select, fused_select_gathered, fused_select_gathered_prefix,
+    fused_select_packed, fused_select_prefix)
+from repro.kernels.fused_select.ref import (  # noqa: F401
+    fused_select_packed_ref, fused_select_prefix_ref, fused_select_ref)

@@ -19,8 +19,21 @@ TPU mapping
   keeps resident in VMEM across the sequential grid (revisited output
   blocks).
 * first-minimum-wins tie-breaking (strict <) matches jnp.argmin.
-* BN x BW tiles: lane-aligned (BW % 128 == 0), sublane-aligned
-  (BN % 8 == 0), default working set 512x256x4B = 512 KiB << VMEM.
+* blocking comes from ``dispatch.plan_blocks``: one grid cell whenever the
+  (N, W) tile fits the VMEM budget, width-tiled (rows resident) otherwise
+  — the old fixed 512-row blocking re-streamed the mask and serialized the
+  argmin fold per row block, which is what regressed n=2048 in BENCH_5.
+
+Activity encodings (``act_kind``) — how "v ∈ P" reaches the kernel:
+
+* ``"dense"``  — (BN, 1) int32 0/1 rows, the original calling convention.
+* ``"packed"`` — uint32 words, 32 activity bits per lane; the engines pass
+  their pmask row directly instead of ``to_bool``-expanding it to an (N,)
+  vector every step (a 32x HBM-traffic blowup on the hot operand).  The
+  kernel expands bits in VMEM via a one-hot word-select (no gather).
+* ``"prefix"`` — a single (1, 1) int32 bound ``p``: row i is active iff
+  i < p.  The compact engine's level-pointer activity, as a scalar instead
+  of a materialized (N,) comparison vector.
 """
 from __future__ import annotations
 
@@ -33,9 +46,26 @@ from jax.experimental.pallas import tpu as pltpu
 
 _INF = 0x7FFFFFFF  # python int: a traced constant may not be captured
 
+ACT_KINDS = ("dense", "packed", "prefix")
+
+
+def expand_act_words(words: jax.Array, block_n: int) -> jax.Array:
+    """(1, BN/32) uint32 activity words -> (BN, 1) bool, kernel-safe.
+
+    The resident kernel's reshape idiom instead of a gather: each word
+    fans out to 32 lanes via a broadcast shift, then a reshape lays the
+    bits down the row axis — row v reads bit v%32 of word v//32
+    (``bitset.to_bool`` order).  BN % 32 == 0.
+    """
+    nw = block_n // 32
+    w3 = jnp.reshape(words, (nw, 1))
+    sh = jax.lax.broadcasted_iota(jnp.uint32, (1, 32), 1)
+    bits = (w3 >> sh) & jnp.uint32(1)                    # (nw, 32)
+    return jnp.reshape(bits, (block_n, 1)) != 0
+
 
 def _kernel(adj_ref, mask_ref, act_ref, val_ref, idx_ref, counts_ref, *,
-            block_n: int, n_wblocks: int):
+            block_n: int, n_wblocks: int, act_kind: str):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -54,7 +84,15 @@ def _kernel(adj_ref, mask_ref, act_ref, val_ref, idx_ref, counts_ref, *,
 
     @pl.when(j == n_wblocks - 1)
     def _fold():
-        c = jnp.where(act_ref[...] > 0, counts_ref[...], _INF)[:, 0]
+        if act_kind == "dense":
+            actb = act_ref[...] > 0                       # (BN, 1)
+        elif act_kind == "packed":
+            actb = expand_act_words(act_ref[...], block_n)
+        else:  # prefix
+            rows_g = i * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_n, 1), 0)
+            actb = rows_g < act_ref[0, 0]
+        c = jnp.where(actb, counts_ref[...], _INF)[:, 0]
         bmin = jnp.min(c)
         # first minimum within the block
         rows = jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
@@ -65,28 +103,42 @@ def _kernel(adj_ref, mask_ref, act_ref, val_ref, idx_ref, counts_ref, *,
                                   idx_ref[0, 0])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_w", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "block_w",
+                                             "interpret", "act_kind"))
 def fused_select_pallas(adj: jax.Array, mask: jax.Array,
                         active: jax.Array, *, block_n: int = 512,
                         block_w: int = 256,
-                        interpret: bool = False
+                        interpret: bool = False, act_kind: str = "dense"
                         ) -> tuple[jax.Array, jax.Array]:
-    """adj: (N, W) u32; mask: (W,) u32; active: (N,) i32 (0/1).
+    """adj: (N, W) u32; mask: (W,) u32; active per ``act_kind``:
+    dense (N,) i32 / packed (N/32,) u32 (N % 32 == 0) / prefix () i32.
     -> (idx i32, val i32): first row minimizing popcount(adj&mask) among
     active rows; (-1, INT32_MAX) if none active.
     N % block_n == 0 and W % block_w == 0 (ops.py pads)."""
     n, w = adj.shape
     assert n % block_n == 0 and w % block_w == 0, (n, w, block_n, block_w)
+    assert act_kind in ACT_KINDS, act_kind
     grid = (n // block_n, w // block_w)
-    kern = functools.partial(_kernel, block_n=block_n, n_wblocks=grid[1])
+    kern = functools.partial(_kernel, block_n=block_n, n_wblocks=grid[1],
+                             act_kind=act_kind)
+    if act_kind == "dense":
+        act_arg = active[:, None].astype(jnp.int32)
+        act_spec = pl.BlockSpec((block_n, 1), lambda i, j: (i, 0))
+    elif act_kind == "packed":
+        assert block_n % 32 == 0 and active.shape == (n // 32,), \
+            (block_n, active.shape)
+        act_arg = active.reshape(n // block_n, block_n // 32)
+        act_spec = pl.BlockSpec((1, block_n // 32), lambda i, j: (i, 0))
+    else:  # prefix
+        act_arg = jnp.asarray(active, jnp.int32).reshape(1, 1)
+        act_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     val, idx = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, block_w), lambda i, j: (i, j)),
             pl.BlockSpec((1, block_w), lambda i, j: (0, j)),
-            pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            act_spec,
         ],
         out_specs=[
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
@@ -96,5 +148,5 @@ def fused_select_pallas(adj: jax.Array, mask: jax.Array,
                    jax.ShapeDtypeStruct((1, 1), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.int32)],
         interpret=interpret,
-    )(adj, mask[None, :], active[:, None].astype(jnp.int32))
+    )(adj, mask[None, :], act_arg)
     return idx[0, 0], val[0, 0]

@@ -1,0 +1,4 @@
+from repro.kernels.resident_step.ops import (  # noqa: F401
+    RESIDENT_STATE_BYTES, resident_segment, resident_state_bytes,
+    resident_supported)
+from repro.kernels.resident_step.ref import resident_segment_ref  # noqa: F401

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the resident segment.
+
+Defined DIRECTLY in terms of the dense engine's unfused step function:
+``steps_per_call`` guarded applications of ``engine_dense.step`` under
+the run loop's done/budget predicate.  Byte-identity of the kernel
+against this oracle IS byte-identity against the jnp engine — there is
+no second implementation of the step semantics to drift.
+
+Imports of ``engine_dense`` are deferred into the function body: the
+engine imports ``resident_step.ops`` at module scope for its pallas run
+path, so a top-level import here would be circular.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def resident_segment_ref(g, cfg, s, *, start, budget,
+                         steps_per_call: int = 1):
+    """Advance ``s`` by up to ``steps_per_call`` guarded unfused steps."""
+    from repro.core import engine_dense as ed
+
+    cfg_jnp = dataclasses.replace(cfg, kernel_impl="jnp")
+
+    def active(st):
+        return (~ed._done(st)) & (st.steps - start < budget)
+
+    for _ in range(steps_per_call):
+        s = jax.lax.cond(active(s),
+                         lambda t: ed.step(g, cfg_jnp, t), lambda t: t, s)
+    return s

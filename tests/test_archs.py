@@ -43,6 +43,7 @@ def test_smoke_forward_shapes_no_nan(arch):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg = get_smoke(arch)

@@ -13,10 +13,12 @@ from _hyp import given, settings, st
 from repro.baselines import bicliques_to_key_set, enumerate_bruteforce
 from repro.core import engine_compact as ec
 from repro.core import engine_dense as ed
+import pytest
 
 
 @given(st.integers(1, 8), st.integers(1, 12),
        st.floats(0.05, 0.85), st.integers(0, 10_000))
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 def test_engines_agree_with_bruteforce(n_u, n_v, density, seed):
     g = _random_graph(n_u, n_v, density, seed)
@@ -41,6 +43,7 @@ def test_engines_agree_with_bruteforce(n_u, n_v, density, seed):
 @given(st.integers(1, 8), st.integers(1, 12),
        st.floats(0.05, 0.85), st.integers(0, 10_000),
        st.sampled_from(["deg", "input"]))
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 def test_engines_agree_across_orderings(n_u, n_v, density, seed, order):
     """Candidate-selection heuristics change the traversal, never the

@@ -62,6 +62,7 @@ def test_compact_engine_matches_oracle(name, order):
 
 @given(st.integers(1, 10), st.integers(1, 14),
        st.floats(0.05, 0.85), st.integers(0, 10_000))
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 def test_engines_property_random_graphs(n_u, n_v, density, seed):
     g = _random_graph(n_u, n_v, density, seed)
@@ -148,3 +149,50 @@ def test_make_context_vectorized_degrees_match_reference():
         rank = np.asarray(ctx.rank)
         assert np.array_equal(rank[ref_order], np.arange(g.n_u))
         assert (rank[g.n_u:] == 2 * cfg.n_u).all()
+
+
+def test_make_context_padded_fast_path_byte_identical(monkeypatch):
+    """Bucketed admission (request shape != bucket shape) must NOT
+    round-trip the graph through a Python edge-list re-pack: packed rows
+    are prefix-compatible under padding, so a zero-extended word copy of
+    ``g.adj_u`` is byte-identical to ``from_edges`` at the padded shape.
+    Checked for BOTH engines against an independent edge-packing oracle,
+    then re-run with ``from_edges`` poisoned to prove the fast path never
+    iterates edges in Python."""
+    for n_u, n_v, pad_u, pad_v, seed in [(11, 19, 5, 13, 0),
+                                         (8, 40, 0, 24, 1),
+                                         (15, 9, 17, 0, 2)]:
+        g = _random_graph(n_u, n_v, 0.35, seed, canonical=False)
+        cfg = ed.EngineConfig(n_u=g.n_u + pad_u, n_v=g.n_v + pad_v,
+                              m_real=g.n_u, depth=g.n_u + 2)
+        # independent oracle: re-pack the edge list at the padded shape
+        # (the old slow path's result, built WITHOUT the graph's arrays)
+        want_adj = np.zeros((cfg.n_u, cfg.wv), np.uint32)
+        for u, v in g.edges:
+            want_adj[u, v // 32] |= np.uint32(1) << np.uint32(v % 32)
+        want_deg = np.unpackbits(want_adj[: g.n_u].view(np.uint8),
+                                 axis=1).sum(axis=1)
+
+        ctx_d = ed.make_context(g, cfg)
+        np.testing.assert_array_equal(np.asarray(ctx_d.adj), want_adj)
+        np.testing.assert_array_equal(
+            np.asarray(ctx_d.root_counts)[: g.n_u], want_deg)
+        ctx_c = ec.make_context(g, cfg)
+        np.testing.assert_array_equal(np.asarray(ctx_c.adj), want_adj)
+        np.testing.assert_array_equal(
+            np.asarray(ctx_c.order)[: g.n_u],
+            np.argsort(want_deg, kind="stable").astype(np.int32))
+
+        # poison the slow path: the fast path must never call it
+        def _boom(*a, **k):
+            raise AssertionError("make_context fell back to the Python "
+                                 "edge-list round-trip")
+        monkeypatch.setattr(BipartiteGraph, "from_edges",
+                            staticmethod(_boom))
+        ctx_d2 = ed.make_context(g, cfg)
+        ctx_c2 = ec.make_context(g, cfg)
+        monkeypatch.undo()
+        for a, b in zip(ctx_d, ctx_d2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(ctx_c, ctx_c2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

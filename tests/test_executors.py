@@ -63,6 +63,7 @@ def test_routing_log_records_decisions():
 # LocalExecutor: the interface wraps the original path unchanged
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_explicit_local_executor_identical_to_default():
     graphs = random_graph_stream(8, seed=5)
     pol = BucketPolicy(mode="pow2", max_batch=4, steps_per_round=16)
@@ -121,6 +122,7 @@ def test_big_lane_respects_step_cap():
 # ShardedExecutor on a 1-device mesh (placement degenerate, semantics full)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_sharded_executor_single_device_mesh_identity():
     graphs = random_graph_stream(10, seed=2)
     pol = BucketPolicy(mode="pow2", max_batch=4, steps_per_round=24)

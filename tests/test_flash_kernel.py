@@ -73,6 +73,7 @@ def test_bf16_inputs():
 
 @given(st.integers(1, 2), st.integers(1, 40), st.integers(1, 4),
        st.integers(3, 16), st.booleans(), st.integers(0, 1000))
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 def test_property_random_shapes(B, Sq, KVg, hd, causal, seed):
     KV = KVg

@@ -27,6 +27,7 @@ from repro.core.engine import get_engine
 
 @given(st.integers(1, 8), st.integers(1, 12),
        st.floats(0.05, 0.85), st.integers(0, 10_000))
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 def test_dense_pallas_byte_identical_to_jnp(n_u, n_v, density, seed):
     g = _random_graph(n_u, n_v, density, seed)
@@ -43,6 +44,7 @@ def test_dense_pallas_byte_identical_to_jnp(n_u, n_v, density, seed):
 
 @given(st.integers(1, 8), st.integers(1, 12),
        st.floats(0.05, 0.85), st.integers(0, 10_000))
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 def test_compact_pallas_byte_identical_to_jnp(n_u, n_v, density, seed):
     g = _random_graph(n_u, n_v, density, seed)
@@ -107,6 +109,7 @@ def test_unroll_state_identical_across_rounds(engine, unroll):
     assert bool(eng.done(s1)), "graph did not finish in 30 rounds"
 
 
+@pytest.mark.slow
 def test_unroll_batched_lanes_identical():
     """run_batch with unroll: per-lane early exit must hold under vmap
     (a finished lane must not advance inside an unrolled segment)."""
@@ -154,3 +157,73 @@ def test_client_steps_per_call_and_pallas_end_to_end():
     assert st["kernel_impl"] == "pallas"
     assert st["steps_per_call"] == 4
     assert st["steps_per_poll"] > 0
+
+
+# ---------------------------------------------------------------------------
+# VMEM-resident multi-step segment kernel (kernels/resident_step)
+# ---------------------------------------------------------------------------
+
+import dataclasses                                             # noqa: E402
+import functools                                               # noqa: E402
+
+from repro.kernels.resident_step import (                      # noqa: E402
+    resident_segment, resident_segment_ref, resident_supported)
+
+
+@pytest.mark.parametrize("order", ["deg", "deg_nocache", "input"])
+def test_resident_segment_boundary_state_identity(order):
+    """The resident kernel must reproduce the jnp engine's state EXACTLY
+    (every leaf, including stacks and output buffers) at every segment
+    boundary, for all three order modes, from init to done."""
+    g = _random_graph(7, 11, 0.35, 5)
+    cfg = ed.make_config(g, order_mode=order, collect_cap=8,
+                         kernel_impl="pallas")
+    assert cfg.resident_active
+    ctx = ed.make_context(g, cfg)
+    sk = ed.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+    sr = jax.tree.map(lambda x: x, sk)
+    ref = jax.jit(functools.partial(
+        resident_segment_ref, ctx, cfg, start=0, budget=1 << 30,
+        steps_per_call=3))
+    for _ in range(300):
+        sk = resident_segment(ctx, cfg, sk, start=0, budget=1 << 30,
+                              steps_per_call=3, interpret=True)
+        sr = ref(sr)
+        for name, a, b in zip(sk._fields, sk, sr):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{order}:{name}")
+        if bool(ed._done(sr)):
+            break
+    assert bool(ed._done(sr)), "graph did not finish"
+
+
+def test_resident_opt_out_full_state_parity():
+    """resident=False pins run() to the per-step fused kernels; in 'deg'
+    mode (where both paths maintain the counts cache) the two pallas
+    backings must agree on EVERY state leaf, not just the counters."""
+    g = _random_graph(8, 12, 0.4, 9)
+    outs = {}
+    for resident in (True, False):
+        cfg = dataclasses.replace(
+            ed.make_config(g, collect_cap=16, kernel_impl="pallas"),
+            resident=resident)
+        assert cfg.resident_active == resident
+        ctx = ed.make_context(g, cfg)
+        s = ed.init_state(cfg, np.arange(g.n_u, dtype=np.int32))
+        outs[resident] = jax.jit(
+            lambda st, c=ctx, k=cfg: ed.run(c, k, st, unroll=4))(s)
+    for name, a, b in zip(outs[True]._fields, outs[True], outs[False]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_resident_vmem_gate():
+    """Configs whose state overflows the residency budget must fall back
+    (resident_active False) instead of pinning an over-budget kernel —
+    run() still works through the per-step fused path."""
+    small = ed.make_config(_random_graph(6, 6, 0.5, 0),
+                           kernel_impl="pallas")
+    assert resident_supported(small) and small.resident_active
+    big = ed.EngineConfig(n_u=4096, n_v=4096, m_real=4096, depth=4098,
+                          kernel_impl="pallas")
+    assert not resident_supported(big) and not big.resident_active

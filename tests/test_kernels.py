@@ -304,3 +304,189 @@ def test_fused_check_auto_and_unknown_impl():
         fused_check(jnp.asarray(adj), jnp.asarray(mask), jnp.int32(1),
                     jnp.ones(8, jnp.int32), jnp.ones(8, jnp.int32),
                     impl="triton")
+
+
+# ---------------------------------------------------------------------------
+# regression shapes (the n=2048 blocking bug) + packed/prefix activity
+# variants (ISSUE 6)
+# ---------------------------------------------------------------------------
+# PR-5's default (512, 256) blocking split large-n ops into row-striped
+# grid cells that each re-streamed the full-width mask (BENCH_5.json:
+# pallas 8x SLOWER than jnp at n=2048).  plan_blocks now keeps rows
+# resident and tiles width only when the single tile overflows VMEM;
+# these sweeps pin every op variant at the shapes where the old blocking
+# bit.  Auto blocks (block_n=block_w=None) exercise the planner itself.
+
+import dataclasses                                             # noqa: E402
+import functools                                               # noqa: E402
+
+import jax                                                     # noqa: E402
+
+from repro.core import bitset                                  # noqa: E402
+from repro.core import engine_dense as ed                      # noqa: E402
+from repro.core.graph import BipartiteGraph                    # noqa: E402
+from repro.kernels.fused_check import (                        # noqa: E402
+    fused_check_gathered_prefix2, fused_check_packed, fused_check_prefix2)
+from repro.kernels.fused_select import (                       # noqa: E402
+    fused_select_gathered, fused_select_gathered_prefix,
+    fused_select_packed, fused_select_prefix)
+from repro.kernels.resident_step import (                      # noqa: E402
+    resident_segment, resident_segment_ref)
+
+REGRESSION_SHAPES = [(2048, 64), (2048, 128)]
+
+
+def _rand_case(n, w, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    mask = rng.integers(0, 2 ** 32, size=(w,), dtype=np.uint32)
+    return rng, adj, mask
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_select_regression_shapes(n, w):
+    rng, adj, mask = _rand_case(n, w, n * 7 + w)
+    act = rng.integers(0, 2, size=(n,)).astype(np.int32)
+    want = _host_select(adj, mask, act)
+    i, v = fused_select(jnp.asarray(adj), jnp.asarray(mask),
+                        jnp.asarray(act), impl="pallas", interpret=True)
+    assert (int(i), int(v)) == want
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_select_packed_regression_shapes(n, w):
+    # packed-word activity: same result as the dense-activity host model
+    rng, adj, mask = _rand_case(n, w, n * 11 + w)
+    act = rng.integers(0, 2, size=(n,)).astype(np.int32)
+    act_w = bitset.from_bool(jnp.asarray(act > 0))
+    want = _host_select(adj, mask, act)
+    i, v = fused_select_packed(jnp.asarray(adj), jnp.asarray(mask),
+                               act_w, impl="pallas", interpret=True)
+    assert (int(i), int(v)) == want
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+@pytest.mark.parametrize("p", [0, 100, 2048])
+def test_fused_select_prefix_regression_shapes(n, w, p):
+    # prefix activity (compact engine's level pointer): active = pos < p
+    rng, adj, mask = _rand_case(n, w, n * 13 + w)
+    act = (np.arange(n) < p).astype(np.int32)
+    want = _host_select(adj, mask, act)
+    i, v = fused_select_prefix(jnp.asarray(adj), jnp.asarray(mask),
+                               jnp.int32(p), impl="pallas", interpret=True)
+    assert (int(i), int(v)) == want
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_select_gathered_regression_shapes(n, w):
+    rng, adj, mask = _rand_case(n, w, n * 17 + w)
+    idx = rng.permutation(n).astype(np.int32)
+    act = rng.integers(0, 2, size=(n,)).astype(np.int32)
+    want = _host_select(adj[idx], mask, act)
+    i, v = fused_select_gathered(
+        jnp.asarray(adj), jnp.asarray(idx), jnp.asarray(mask),
+        jnp.asarray(act), impl="pallas", interpret=True)
+    assert (int(i), int(v)) == want
+    p = n // 3
+    want_p = _host_select(adj[idx], mask,
+                          (np.arange(n) < p).astype(np.int32))
+    i2, v2 = fused_select_gathered_prefix(
+        jnp.asarray(adj), jnp.asarray(idx), jnp.asarray(mask),
+        jnp.int32(p), impl="pallas", interpret=True)
+    assert (int(i2), int(v2)) == want_p
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_check_regression_shapes(n, w):
+    rng, adj, mask = _rand_case(n, w, n * 19 + w)
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    qa = rng.integers(0, 2, size=n).astype(np.int32)
+    pa = rng.integers(0, 2, size=n).astype(np.int32)
+    _check_case(adj, mask, nlp, qa, pa, block=(None, None),
+                with_counts=True)
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_check_packed_regression_shapes(n, w):
+    # packed words in AND out: flags round-trip through from_bool
+    rng, adj, mask = _rand_case(n, w, n * 23 + w)
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    qa = rng.integers(0, 2, size=n).astype(np.int32)
+    pa = rng.integers(0, 2, size=n).astype(np.int32)
+    want = _host_check(adj, mask, nlp, qa, pa)
+    viol, fullw, partw, nzw, c = fused_check_packed(
+        jnp.asarray(adj), jnp.asarray(mask), jnp.int32(nlp),
+        bitset.from_bool(jnp.asarray(qa > 0)),
+        bitset.from_bool(jnp.asarray(pa > 0)),
+        impl="pallas", interpret=True, with_counts=True)
+    assert bool(viol) == want[0]
+    for got_w, want_b in zip((fullw, partw, nzw), want[1:4]):
+        np.testing.assert_array_equal(
+            np.asarray(bitset.to_bool(got_w, n)), want_b)
+    np.testing.assert_array_equal(np.asarray(c), want[4])
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_check_prefix2_regression_shapes(n, w):
+    # two-prefix activity over a static [Q ++ P] split (compact engine)
+    rng, adj, mask = _rand_case(n, w, n * 29 + w)
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    split = n // 2
+    q_hi, p_hi = split // 3, (n - split) // 2
+    pos = np.arange(n)
+    qa = ((pos < split) & (pos < q_hi)).astype(np.int32)
+    pa = ((pos >= split) & (pos - split < p_hi)).astype(np.int32)
+    want = _host_check(adj, mask, nlp, qa, pa)
+    got = fused_check_prefix2(
+        jnp.asarray(adj), jnp.asarray(mask), jnp.int32(nlp),
+        jnp.int32(q_hi), jnp.int32(p_hi), split=split,
+        impl="pallas", interpret=True)
+    assert bool(got[0]) == want[0]
+    for g_, w_ in zip(got[1:4], want[1:4]):
+        np.testing.assert_array_equal(np.asarray(g_), w_)
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_fused_check_gathered_prefix2_regression_shapes(n, w):
+    rng, adj, mask = _rand_case(n, w, n * 31 + w)
+    idx = rng.integers(0, n, size=(2 * n,)).astype(np.int32)
+    nlp = int(np.unpackbits(mask.view(np.uint8)).sum())
+    q_hi, p_hi = n // 3, n // 2
+    pos = np.arange(2 * n)
+    qa = ((pos < n) & (pos < q_hi)).astype(np.int32)
+    pa = ((pos >= n) & (pos - n < p_hi)).astype(np.int32)
+    want = _host_check(adj[idx], mask, nlp, qa, pa)
+    got = fused_check_gathered_prefix2(
+        jnp.asarray(adj), jnp.asarray(idx), jnp.asarray(mask),
+        jnp.int32(nlp), jnp.int32(q_hi), jnp.int32(p_hi),
+        impl="pallas", interpret=True)
+    assert bool(got[0]) == want[0]
+    for g_, w_ in zip(got[1:4], want[1:4]):
+        np.testing.assert_array_equal(np.asarray(g_), w_)
+
+
+@pytest.mark.parametrize("n,w", REGRESSION_SHAPES)
+def test_resident_step_regression_shapes(n, w):
+    # the resident segment kernel at the regression width: two segments,
+    # full-state byte identity against the jnp oracle at each boundary.
+    # depth is clamped to bound interpret-mode state (8 steps never
+    # descend past lvl 8); the kernel itself is depth-agnostic.
+    rng = np.random.default_rng(n * 37 + w)
+    nv = w * 32
+    uu, vv = np.nonzero(rng.random((n, nv)) < 4.0 / nv)
+    g = BipartiteGraph.from_edges(n, nv, list(zip(uu.tolist(), vv.tolist())))
+    cfg = dataclasses.replace(
+        ed.make_config(g, kernel_impl="pallas", collect_cap=4), depth=32)
+    ctx = ed.make_context(g, cfg)
+    s_k = ed.init_state(cfg, np.arange(8, dtype=np.int32))
+    s_r = s_k
+    ref = jax.jit(functools.partial(
+        resident_segment_ref, ctx, cfg, start=0, budget=1 << 30,
+        steps_per_call=4))
+    for _ in range(2):
+        s_k = resident_segment(ctx, cfg, s_k, start=0, budget=1 << 30,
+                               steps_per_call=4, interpret=True)
+        s_r = ref(s_r)
+        for name, a, b in zip(s_k._fields, s_k, s_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)

@@ -202,6 +202,7 @@ def test_server_reuses_executables_across_flushes():
 # batched vs single-graph equality
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["pow2", "linear", "exact"])
 def test_mixed_stream_matches_single_graph_runs(mode):
     suite = dataset_suite("test")
