@@ -240,6 +240,11 @@ def regress_check(rows: list, backend: str, baseline_path: str,
         (r["op"], r["variant"], r["impl"], r["n"], r["w"]): r["wall_us"]
         for r in base.get("rows", []) if r.get("level") == "op"}
     failures = compared = 0
+    # the full per-key ratio table is printed on PASS too — a silent
+    # "0 failures" hides drift creeping toward the tolerance
+    print(f"[kernels] regress table (tol {tol:.2f}x):")
+    print(f"  {'op':<14} {'variant':<10} {'impl':<7} {'n':>5} {'w':>3} "
+          f"{'base_us':>9} {'now_us':>9} {'ratio':>6}")
     for r in rows:
         if r.get("level") != "op":
             continue
@@ -249,12 +254,13 @@ def regress_check(rows: list, backend: str, baseline_path: str,
             continue
         compared += 1
         ratio = r["wall_us"] / ref
-        if ratio <= tol:
-            continue
-        tag = "FAIL" if same else "warn (cross-backend)"
-        print(f"[kernels] regress {tag}: {key} {ref:.1f}us -> "
-              f"{r['wall_us']:.1f}us ({ratio:.2f}x > {tol:.2f}x)")
-        failures += same
+        bad = ratio > tol
+        tag = ("" if not bad
+               else "  FAIL" if same else "  warn (cross-backend)")
+        print(f"  {key[0]:<14} {key[1]:<10} {key[2]:<7} {key[3]:>5} "
+              f"{key[4]:>3} {ref:>9.1f} {r['wall_us']:>9.1f} "
+              f"{ratio:>5.2f}x{tag}")
+        failures += bad and same
     print(f"[kernels] regress vs {baseline_path}: {compared} keys "
           f"compared (baseline backend={base_backend}, current={backend}"
           f"{', same platform' if same else ', cross-platform'}), "

@@ -3,8 +3,11 @@ policies on a mixed-size request stream, a skewed-stream comparison of
 whole-batch flush vs continuous lane refill, and a mixed big+small stream
 served across a multi-device host mesh through the pluggable executors.
 Every mode drives the serving stack through the unified client
-(``repro.api.MBEClient``) and takes ``--engine {dense,compact}`` — the
-same stream served by either registered engine (``repro.core.engine``).
+(``repro.api.MBEClient``) and takes ``--engine NAME`` for any registered
+engine (``repro.core.engine``): the policy sweep is engine-generic
+(``--engine count`` checks the counting engine against per-graph runs;
+``--engine mce`` serves a unipartite stream), while the skewed and
+mixed-mesh modes exercise the MBE-result engines (dense, compact).
 
 Part 1 (``run``) — three serving configurations against the
 one-compile-per-graph baseline (a fresh jitted per-graph run — what a
@@ -67,34 +70,58 @@ import jax
 from repro.api import MBEClient, MBEOptions
 from repro.baselines import bicliques_to_key_set
 from repro.core.engine import get_engine, list_engines
+from repro.core.results import MBEResult
 from repro.data.generators import (dense_small, random_bipartite,
-                                   random_graph_stream)
+                                   random_graph_stream, random_unipartite)
 
 COLLECT_CAP = 4096
 
 
+def _stream(engine: str, n_requests: int, seed: int) -> list:
+    """The mixed-size request stream matched to the engine's workload:
+    unipartite engines (mce) get symmetric embeds."""
+    if get_engine(engine).unipartite:
+        rng = np.random.default_rng(seed)
+        return [random_unipartite(int(rng.integers(8, 24)),
+                                  float(rng.uniform(0.2, 0.5)),
+                                  seed=int(rng.integers(1 << 30)),
+                                  name=f"req{i}-uni")
+                for i in range(n_requests)]
+    return random_graph_stream(n_requests, seed=seed)
+
+
 def _baseline(graphs, engine: str) -> tuple[list, list, float, int]:
     """One fresh jit per graph: per-request latencies + reference results
-    (+ total engine steps, for the steps/sec column)."""
+    (+ total engine steps, for the steps/sec column).  References are
+    engine-generic: headline metric + fingerprint (when the result type
+    carries one) + decoded biclique set for MBE-result engines."""
     eng = get_engine(engine)
+    collect_sets = issubclass(eng.result_type, MBEResult)
     refs, lats = [], []
     steps = 0
     t0 = time.perf_counter()
     for g in graphs:
         t1 = time.perf_counter()
-        out = eng.enumerate(g, collect_cap=COLLECT_CAP)
+        kw = dict(collect_cap=COLLECT_CAP) if collect_sets else {}
+        out = eng.enumerate(g, **kw)
         lats.append(time.perf_counter() - t1)
         steps += int(out.steps)
-        cfg = eng.make_config(g, collect_cap=COLLECT_CAP)
-        refs.append((int(out.n_max), int(out.cs),
-                     bicliques_to_key_set(
-                         eng.collected(cfg, out, g.n_u, g.n_v))))
+        cfg = eng.make_config(g, **kw)
+        payload = eng.finish(cfg, out, n_u=g.n_u, n_v=g.n_v,
+                             collect=collect_sets)
+        res = eng.make_result(rid=-1, name=g.name, latency_s=0.0,
+                              **payload)
+        ref_set = (bicliques_to_key_set(res.bicliques)
+                   if collect_sets else None)
+        refs.append((int(res.metric), int(getattr(res, "cs", 0)), ref_set))
     return refs, lats, time.perf_counter() - t0, steps
 
 
 def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
         engine: str = "dense") -> list:
-    graphs = random_graph_stream(n_requests, seed=seed)
+    eng = get_engine(engine)
+    collect_sets = issubclass(eng.result_type, MBEResult)
+    graphs = _stream(engine, n_requests, seed)
     refs, base_lats, base_wall, base_steps = _baseline(graphs, engine)
     rows = [dict(policy="per-graph", engine=engine,
                  wall_s=round(base_wall, 3),
@@ -112,7 +139,7 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
     for mode in ("exact", "linear", "pow2"):
         client = MBEClient(MBEOptions(
             engine=engine, bucket_mode=mode, max_batch=max_batch,
-            collect=True, collect_cap=COLLECT_CAP))
+            collect=collect_sets, collect_cap=COLLECT_CAP))
         t0 = time.perf_counter()
         results = client.enumerate_many(graphs)
         wall = time.perf_counter() - t0
@@ -120,11 +147,12 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
         if mode == "pow2":
             pow2_results = results
         # --- byte-identical results, graph by graph -------------------
-        for g, r, (ref_n, ref_cs, ref_set) in zip(graphs, results, refs):
-            assert r.n_max == ref_n, (mode, g.name, r.n_max, ref_n)
-            assert r.cs == ref_cs, (mode, g.name)
-            assert bicliques_to_key_set(r.bicliques) == ref_set, \
-                (mode, g.name)
+        for g, r, (ref_m, ref_cs, ref_set) in zip(graphs, results, refs):
+            assert r.metric == ref_m, (mode, g.name, r.metric, ref_m)
+            assert getattr(r, "cs", 0) == ref_cs, (mode, g.name)
+            if collect_sets:
+                assert bicliques_to_key_set(r.bicliques) == ref_set, \
+                    (mode, g.name)
         # per-request service + compile charge: the baseline timings above
         # include each request's jit compile, so the comparison column
         # must too (the scheduler reports the split per request)
@@ -154,22 +182,32 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
                 (f"{mode}: {st['misses']} compiles vs {n_requests} "
                  f"one-per-graph — bucketing failed to amortize")
 
-    # --- cross-engine identity: the SAME stream through the other
-    # registered engine(s) must yield byte-identical biclique sets ------
-    others = [e for e in list_engines() if e != engine]
+    # --- cross-engine identity: the SAME stream through every OTHER
+    # engine computing the same result type (dense <-> compact) must
+    # yield byte-identical biclique sets.  Engines with a different
+    # result schema (count, mce) answer a different question and are
+    # checked against their own oracles in tests/, not here. ------------
+    others = [e for e in list_engines()
+              if e != engine
+              and get_engine(e).result_type is eng.result_type
+              and get_engine(e).unipartite == eng.unipartite]
     for other in others:
         cross = MBEClient(MBEOptions(
             engine=other, bucket_mode="pow2", max_batch=max_batch,
-            collect=True, collect_cap=COLLECT_CAP)).enumerate_many(graphs)
+            collect=collect_sets,
+            collect_cap=COLLECT_CAP)).enumerate_many(graphs)
         for g, a, b in zip(graphs, pow2_results, cross):
-            assert (a.n_max, a.cs) == (b.n_max, b.cs), \
-                (engine, other, g.name)
-            assert bicliques_to_key_set(a.bicliques) == \
-                bicliques_to_key_set(b.bicliques), (engine, other, g.name)
+            assert (a.metric, getattr(a, "cs", 0)) == \
+                (b.metric, getattr(b, "cs", 0)), (engine, other, g.name)
+            if collect_sets:
+                assert bicliques_to_key_set(a.bicliques) == \
+                    bicliques_to_key_set(b.bicliques), \
+                    (engine, other, g.name)
         print(f"[serving] cross-engine: {engine} == {other} "
               f"byte-identical on {n_requests} requests")
     for r in rows:
-        r["engines_identical"] = True          # the asserts above passed
+        # the asserts above passed (vacuously when no same-schema peer)
+        r["engines_identical"] = bool(others)
     return rows
 
 
@@ -375,10 +413,12 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", default="dense",
-                    choices=["dense", "compact"],
-                    help="enumeration engine (repro.core.engine registry); "
-                         "the policy sweep also cross-checks the other "
-                         "engine is byte-identical")
+                    help="workload engine by registry name "
+                         "(repro.core.engine; e.g. dense, compact, count, "
+                         "mce); the policy sweep also cross-checks every "
+                         "other engine with the same result schema is "
+                         "byte-identical; --skewed/--mixed-mesh take the "
+                         "MBE-result engines (dense, compact)")
     ap.add_argument("--max-batch", type=int, default=None,
                     help="lanes per batch (default: 8, or 4 with --skewed)")
     ap.add_argument("--skewed", action="store_true",

@@ -1,0 +1,81 @@
+"""Add your own engine: the registration walkthrough (DESIGN.md §10).
+
+    PYTHONPATH=src python examples/custom_engine.py
+
+The serving stack (buckets, executable cache, executors, big-graph
+routing, futures, cancellation, deadlines, ``stats()``) is
+engine-generic: it talks to workloads only through the ``Engine``
+contract (``repro.core.engine``).  Registering a new engine makes it a
+config-selectable axis — ``MBEOptions(engine="yours")`` — with every
+serving behavior inherited.
+
+A from-scratch engine implements, in order:
+
+1.  **Identity & traits** — class attrs ``name`` (the registry key),
+    ``result_type`` (an ``EngineResult`` subclass from
+    ``repro.core.results``, or your own), ``canonicalize`` (may the
+    scheduler transpose the graph to |U| <= |V|?), ``unipartite``
+    (square symmetric embeds only?), ``collectable``.
+2.  **State & context** — two ``NamedTuple`` pytrees.  Keep the shared
+    task-queue tail (``tasks/n_tasks/tpos``, ``lvl``, ``steps/nodes``):
+    lane surgery, continuous refill, and the big-graph work-stealing
+    re-deal touch ONLY those fields, which is what makes the executors
+    engine-generic.
+3.  **Construction hooks** — ``make_context(g, cfg)``,
+    ``init_state(cfg, tasks)``, ``fresh_lane_state``,
+    ``dummy_context`` (shape-only, for AOT compile), and a ``config``
+    override that consumes your engine-specific kwargs before
+    delegating (unknown keys are dropped by the base; params that must
+    split the executable cache belong ON ``EngineConfig``).
+4.  **Execution hooks** — ``step(ctx, cfg, s)`` (one branch-and-bound
+    transition; the base ``run``/``run_batch`` wrap it in a resumable
+    ``lax.while_loop`` with the compiled-segment ``unroll`` knob) and
+    ``done(s)``.
+5.  **Result schema** — ``counters``/``stacked_counters`` (host-side
+    scalars), ``finish``/``finish_workers`` (completed-lane payloads),
+    ``partial`` (cancel/deadline payload).  The scheduler builds every
+    result with ``make_result(**payload)`` — it never names your fields.
+6.  ``register_engine(YoursEngine())`` at module bottom; importing the
+    module is the installation.
+
+``repro.core.engine_count`` (scalar-accumulator workload, ~no collect)
+and ``repro.core.engine_mce`` (exclusion-set DFS, fused-kernel reuse,
+unipartite embeds) are the two reference implementations to crib from.
+
+This stub keeps the walkthrough runnable without re-deriving a DFS: it
+registers an "edges" engine — (1,1)-biclique counting, i.e. |E| — by
+specializing the count engine's config hook (steps 1 and 3; everything
+else is inherited), then serves it through the client front door.
+"""
+from repro import CountResult, MBEClient, MBEOptions, list_engines
+from repro.core.engine import register_engine
+from repro.core.engine_count import CountEngine
+from repro.core.graph import BipartiteGraph
+
+
+class EdgeCountEngine(CountEngine):
+    """(1,1)-biclique counting: every edge is a K_{1,1}."""
+
+    name = "edges"
+    result_type = CountResult
+
+    def config(self, n_u, n_v, depth, *, m_real=None, **kw):
+        # pin the workload, whatever the client's count_p/count_q say
+        kw["count_pq"] = (1, 1)
+        return super().config(n_u, n_v, depth, m_real=m_real, **kw)
+
+
+EDGES = register_engine(EdgeCountEngine())
+
+
+if __name__ == "__main__":
+    print(f"registered engines: {list_engines()}")
+    g = BipartiteGraph.from_edges(
+        4, 5, [(0, 0), (0, 1), (1, 1), (2, 3), (3, 4), (3, 0)],
+        name="demo")
+    res = MBEClient(MBEOptions(engine="edges")).enumerate(g)
+    assert isinstance(res, CountResult)
+    assert res.count == len(g.edges) == res.metric
+    print(f"[{g.name}] edges engine: count={res.count} "
+          f"(|E|={len(g.edges)}) status={res.status}")
+    print("custom engine served through the same front door — done.")

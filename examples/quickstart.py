@@ -4,14 +4,18 @@
 
 Builds the paper's Figure-1 example graph and enumerates it through
 ``MBEClient`` — the single public entry point (``repro.api``) — with
-BOTH engines: the dense TPU-native engine and the paper-faithful
-compact-array engine, checking they agree with each other and with the
-serial Algorithm-1 oracle.  Then serves a bigger power-law graph through
-the same client using the futures API.
+every MBE-result engine (the dense TPU-native engine and the
+paper-faithful compact-array engine), checking they agree with each
+other and with the serial Algorithm-1 oracle; then demos the other
+registered workloads ((p,q)-biclique counting and maximal clique
+enumeration) through the same client, and finally serves a bigger
+power-law graph using the futures API.  See examples/custom_engine.py
+for registering an engine of your own.
 """
 import numpy as np
 
-from repro import MBEClient, MBEOptions, list_engines
+from repro import (MBEClient, MBEOptions, MBEResult, get_engine,
+                   list_engines, unipartite_graph)
 from repro.baselines import enumerate_mbea, bicliques_to_key_set
 from repro.core.graph import BipartiteGraph
 from repro.data import powerlaw_bipartite
@@ -45,14 +49,34 @@ oracle = enumerate_mbea(g)
 assert res.n_max == len(bicliques_to_key_set(oracle))
 print("[fig1] matches the Algorithm-1 oracle")
 
-# same request, every registered engine, same answer ------------------------
-for name in list_engines():
+# same request, every MBE-result engine, same answer -----------------------
+# (the registry also holds engines answering DIFFERENT questions — count
+# returns a CountResult, mce a CliqueResult — so the identity check runs
+# over the engines that share the MBE result schema)
+mbe_engines = [n for n in list_engines()
+               if issubclass(get_engine(n).result_type, MBEResult)]
+for name in mbe_engines:
     r2 = MBEClient(MBEOptions(engine=name, collect=True,
                               collect_cap=32)).enumerate(g)
     assert (r2.n_max, r2.cs) == (res.n_max, res.cs), name
     assert bicliques_to_key_set(r2.bicliques) == \
         bicliques_to_key_set(res.bicliques), name
-print(f"[fig1] engines {list_engines()} agree byte-identically\n")
+print(f"[fig1] engines {mbe_engines} agree byte-identically\n")
+
+# --- the other workloads, same front door ----------------------------------
+# (p,q)-biclique counting: how many 2x2 complete bipartite subgraphs?
+cres = MBEClient(MBEOptions(engine="count", count_p=2,
+                            count_q=2)).enumerate(g)
+print(f"[fig1] count engine: {cres.count} (2,2)-bicliques "
+      f"(metric={cres.metric})")
+
+# maximal clique enumeration on a unipartite graph (a 4-cycle + chord)
+ug = unipartite_graph(4, [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)],
+                      name="house")
+mres = MBEClient(MBEOptions(engine="mce", collect=True,
+                            collect_cap=8)).enumerate(ug)
+print(f"[{ug.name}] mce engine: {mres.n_max} maximal cliques: "
+      f"{sorted(mres.cliques)}\n")
 
 # --- something bigger, via the futures API ---------------------------------
 big = powerlaw_bipartite(192, 384, m_edges=4000, alpha=1.4, seed=7,

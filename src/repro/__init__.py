@@ -15,12 +15,14 @@ Everything listed in ``__all__`` is covenant: the import-surface test
 importable as before; this module only names the stable surface.
 """
 from repro.api import (MBEClient, MBEFuture, MBEOptions,  # noqa: F401
-                       imbalance)
+                       engines, imbalance)
 from repro.core.engine import (Engine, get_engine,        # noqa: F401
                                list_engines, register_engine)
-from repro.core.graph import BipartiteGraph               # noqa: F401
-from repro.serving import (BucketPolicy, MBEResult,       # noqa: F401
-                           MBEServer)
+from repro.core.graph import (BipartiteGraph,             # noqa: F401
+                              unipartite_graph)
+from repro.core.results import (CliqueResult,             # noqa: F401
+                                CountResult, EngineResult, MBEResult)
+from repro.serving import BucketPolicy, MBEServer         # noqa: F401
 
 __version__ = "0.1.0"
 
@@ -30,11 +32,17 @@ __all__ = [
     "MBEClient",
     "MBEOptions",
     "MBEFuture",
+    # result schema (one variant per workload engine)
+    "EngineResult",
     "MBEResult",
+    "CountResult",
+    "CliqueResult",
     # graphs
     "BipartiteGraph",
+    "unipartite_graph",
     # engine registry
     "Engine",
+    "engines",
     "get_engine",
     "register_engine",
     "list_engines",

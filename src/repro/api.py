@@ -34,9 +34,14 @@ the big-graph routing threshold), and it selects the execution path:
   the work-stealing big-graph lane (the paper's decomposition); with
   ``big_graph_threshold=1`` every request takes that path, which is how
   ``launch/mbe_run.py`` serves one big graph end to end.
-* ``engine="dense" | "compact"`` — any engine registered in
-  ``repro.core.engine``; the compact array serves through the exact same
-  bucket/cache/executor stack.
+* ``engine="dense" | "compact" | "count" | "mce"`` — any engine
+  registered in ``repro.core.engine`` (``repro.engines()`` lists them);
+  the compact array, the (p,q)-biclique counter and the unipartite
+  maximal-clique engine all serve through the exact same
+  bucket/cache/executor stack.  Each engine returns its own
+  ``EngineResult`` variant (``MBEResult`` / ``CountResult`` /
+  ``CliqueResult``); ``result.metric`` is the engine-agnostic headline
+  scalar.
 
 Request lifecycle (DESIGN.md §7): pending -> placed -> running ->
 {done, cancelled, timed_out}.  ``MBEFuture.cancel()`` removes a pending
@@ -55,10 +60,18 @@ import dataclasses
 import time
 
 from repro.core.engine import Engine, get_engine, list_engines
-from repro.core.graph import BipartiteGraph
+from repro.core.graph import BipartiteGraph, unipartite_graph
+from repro.core.results import (CliqueResult, CountResult, EngineResult,
+                                MBEResult)
 from repro.serving import (BucketPolicy, ExecutableCache, LocalExecutor,
-                           MBEResult, MBEServer, ShardedExecutor,
-                           imbalance)
+                           MBEServer, ShardedExecutor, imbalance)
+
+
+def engines() -> list[str]:
+    """Names of every registered engine — what ``MBEOptions(engine=...)``
+    and the launchers' ``--engine`` flags accept (``repro.core.engine``
+    registry, built-ins included)."""
+    return list_engines()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +85,15 @@ class MBEOptions:
     """
 
     # -- engine (repro.core.engine registry) ---------------------------
-    engine: str = "dense"         # 'dense' | 'compact' | any registered
+    engine: str = "dense"         # 'dense' | 'compact' | 'count' | 'mce'
+    #                               | any registered name (repro.engines()
+    #                               lists them; unknown names raise
+    #                               ValueError at options construction)
+    count_p: int = 2              # the count engine's (p, q): count
+    count_q: int = 2              # (p,q)-bicliques = K_{p,q} subgraphs.
+    #                               Inert for enumeration engines; rides
+    #                               EngineConfig.count_pq into the
+    #                               executable-cache key
     order_mode: str = "deg"       # candidate ordering (EngineConfig)
     impl: str = "jnp"             # intersect_count impl (unfused path)
     kernel_impl: str = "auto"     # step-kernel path ('auto'|'jnp'|
@@ -118,6 +139,19 @@ class MBEOptions:
     #                               the big-graph lane
 
     # ------------------------------------------------------------------
+    def __post_init__(self):
+        get_engine(self.engine)     # unknown engine names fail HERE, at
+        #                             options construction, with a
+        #                             ValueError naming the available
+        #                             engines — not at first submit
+
+    def engine_params(self) -> dict:
+        """Engine-specific ``EngineConfig`` parameters threaded through
+        ``MBEServer._engine_config`` into every bucket config (and thus
+        every executable-cache key).  Engines ignore parameters they do
+        not consume."""
+        return dict(count_pq=(self.count_p, self.count_q))
+
     def bucket_policy(self) -> BucketPolicy:
         return BucketPolicy(
             mode=self.bucket_mode, step_u=self.step_u, step_v=self.step_v,
@@ -145,7 +179,8 @@ class MBEOptions:
             max_graph_steps=self.max_graph_steps,
             executor=self.make_executor(),
             cache_capacity=self.cache_capacity,
-            engine=get_engine(self.engine))
+            engine=get_engine(self.engine),
+            engine_params=self.engine_params())
 
 
 class MBEFuture:
@@ -156,7 +191,7 @@ class MBEFuture:
     other in-flight requests make progress while you wait.  ``done()``
     and ``cancel()`` never run a scheduling round.
 
-    The terminal ``MBEResult`` is *claimed* by the future on first
+    The terminal result is *claimed* by the future on first
     retrieval: it moves out of the client's mailbox onto the future
     object (``result()`` stays idempotent), so a long-lived client only
     holds results whose futures have not been asked yet.
@@ -168,9 +203,9 @@ class MBEFuture:
         self._client = client
         self.rid = rid
         self.name = name
-        self._result: MBEResult | None = None
+        self._result: EngineResult | None = None
 
-    def _claim(self) -> MBEResult | None:
+    def _claim(self) -> EngineResult | None:
         if self._result is None:
             res = self._client._mailbox.pop(self.rid, None)
             if res is not None:
@@ -196,9 +231,9 @@ class MBEFuture:
         self._client._harvest()
         return ok
 
-    def result(self, timeout: float | None = None) -> MBEResult:
+    def result(self, timeout: float | None = None) -> EngineResult:
         """Block until the request reaches a terminal state and return its
-        ``MBEResult`` (check ``result.status`` — a cancelled or
+        result (check ``result.status`` — a cancelled or
         deadline-expired request returns a flagged result rather than
         raising).  ``timeout`` bounds the wait in seconds; on expiry the
         request keeps running and ``TimeoutError`` is raised."""
@@ -247,7 +282,7 @@ class MBEClient:
         # retained — completion batches delivered to direct poll()/drain()
         # callers pass through without accumulating — so the client's
         # footprint is bounded by the futures the caller is still holding.
-        self._mailbox: dict[int, MBEResult] = {}
+        self._mailbox: dict[int, EngineResult] = {}
         self._watched: set[int] = set()
         # completion sink: results land in the mailbox at delivery time no
         # matter WHO drove the scheduling loop — futures stay coherent
@@ -255,7 +290,7 @@ class MBEClient:
         self.server.add_completion_sink(self._on_complete)
 
     # ------------------------------------------------------------------
-    def _on_complete(self, batch: dict[int, MBEResult]) -> None:
+    def _on_complete(self, batch: dict[int, EngineResult]) -> None:
         for rid, res in batch.items():
             if rid in self._watched:
                 self._mailbox[rid] = res
@@ -274,26 +309,26 @@ class MBEClient:
         return MBEFuture(self, rid, g.name)
 
     def enumerate(self, g: BipartiteGraph, priority: int = 0,
-                  deadline_s: float | None = None) -> MBEResult:
+                  deadline_s: float | None = None) -> EngineResult:
         """Synchronous single-graph enumeration through the serving
         stack (byte-identical to the engine's direct ``enumerate``)."""
         return self.submit(g, priority=priority,
                            deadline_s=deadline_s).result()
 
     def enumerate_many(self, graphs: list[BipartiteGraph]
-                       ) -> list[MBEResult]:
+                       ) -> list[EngineResult]:
         """Batched enumeration of a whole stream; results in submit
         order.  Shapes are bucketed so the stream shares executables."""
         futs = [self.submit(g) for g in graphs]
         self.server.drain()
         return [f.result() for f in futs]
 
-    def poll(self) -> dict[int, MBEResult]:
+    def poll(self) -> dict[int, EngineResult]:
         """One scheduling round; returns the requests that completed this
         round (results for outstanding futures are also kept claimable)."""
         return self.server.poll()
 
-    def drain(self) -> dict[int, MBEResult]:
+    def drain(self) -> dict[int, EngineResult]:
         """Serve everything pending; returns everything that completed."""
         return self.server.drain()
 
@@ -311,4 +346,6 @@ class MBEClient:
 
 
 __all__ = ["MBEClient", "MBEFuture", "MBEOptions", "MBEResult",
-           "imbalance", "Engine", "get_engine", "list_engines"]
+           "EngineResult", "CountResult", "CliqueResult", "engines",
+           "unipartite_graph", "imbalance", "Engine", "get_engine",
+           "list_engines"]

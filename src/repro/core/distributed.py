@@ -102,7 +102,11 @@ def _deal_strided(flat: jax.Array, total: jax.Array, w: jax.Array,
 
 
 def context_specs(cfg: ed.EngineConfig) -> ed.GraphContext:
-    """ShapeDtypeStructs for the device-resident graph (dry-run lowering)."""
+    """ShapeDtypeStructs for the device-resident graph (dry-run lowering).
+
+    DENSE-ENGINE ONLY: ``launch/dryrun.py``'s lowering helper.  The
+    serving stack never calls this — per-engine context shapes come from
+    ``Engine.dummy_context``/``make_context``."""
     return ed.GraphContext(
         adj=jax.ShapeDtypeStruct((cfg.n_u, cfg.wv), jnp.uint32),
         order=jax.ShapeDtypeStruct((cfg.n_u,), jnp.int32),
@@ -112,7 +116,9 @@ def context_specs(cfg: ed.EngineConfig) -> ed.GraphContext:
 
 
 def state_specs(cfg: ed.EngineConfig, n_workers: int) -> ed.DenseState:
-    """ShapeDtypeStructs of the stacked worker state (dim0 = workers)."""
+    """ShapeDtypeStructs of the stacked worker state (dim0 = workers).
+
+    DENSE-ENGINE ONLY, like ``context_specs`` (dry-run helper)."""
     s = jax.eval_shape(lambda: ed.init_state(
         cfg, np.zeros(cfg.m_real, np.int32)))
     return jax.tree.map(

@@ -1,0 +1,281 @@
+"""(p,q)-biclique counting engine — analytics without materialization.
+
+Counts the (p,q)-bicliques of a bipartite graph: pairs (R ⊆ U, L ⊆ V)
+with |R| = p, |L| = q and every (u, v) ∈ R × L an edge (Qiu et al.,
+PAPERS.md — the BCList-style combination DFS).  Unlike the enumeration
+engines nothing is materialized: the whole answer is ONE scalar
+accumulator, so the engine has no collect buffers, its per-level state is
+two packed masks, and a serving lane's demux transfer is a handful of
+scalars — the high-QPS analytics cousin of MBE served through the exact
+same lane pools.
+
+Algorithm (combination DFS over U, counting closed at depth p):
+
+* Root task i (the work-stealing unit, shared with every other engine):
+  the p-subsets of U whose **minimum-order** member is root i.  Task i
+  starts with R = {u_i}, L = N(u_i), candidates P = roots after i — the
+  same strided decomposition ``distributed.make_round_fn`` deals and
+  steals.
+* At a level with r = lvl+1 chosen vertices: pop the first candidate x,
+  shrink L' = L ∩ N(x).  If r+1 == p, add C(|L'|, q) to the accumulator
+  (every q-subset of the common neighborhood closes a (p,q)-biclique)
+  and keep scanning; otherwise descend when the branch is still viable
+  (|L'| >= q and enough candidates remain to reach p).  C(·, q) is a
+  host-precomputed lookup table in the context — no in-graph binomial
+  arithmetic.
+* P empty -> backtrack.  The parent's P only ever shrinks (the child
+  inherits the post-pop set), so each subset is visited exactly once and
+  workers' disjoint task lists partition the count.
+
+``p``/``q`` ride ``EngineConfig.count_pq`` (static — they shape the
+lookup table and the depth actually used), threaded from
+``MBEOptions.count_p``/``count_q`` through ``Engine.config`` and into
+the executable-cache key.  ``canonicalize`` is False: (p, q) is
+side-specific, so admission must not transpose the submitted graph.
+
+The counter is int32 (JAX's default-x64-off lane width): fine for the
+served/test scales, and documented as wrapping beyond 2^31-1 — the
+brute-force differential oracle is ``baselines.oracles.count_pq_bicliques``.
+
+Registered as ``"count"`` (lazily, on first registry lookup).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.engine import Engine, register_engine
+from repro.core.engine_dense import EngineConfig
+from repro.core.graph import BipartiteGraph
+from repro.core.results import CountResult
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+class CountContext(NamedTuple):
+    """Device-resident graph data for the counting DFS."""
+    adj: jax.Array      # (NU, WV) uint32
+    order: jax.Array    # (NU,) int32: root order (degree-ascending), -1 pad
+    rank: jax.Array     # (NU,) int32: rank[v] = position in order; padding
+    #                     vertices get rank = 2*NU (never candidates)
+    binom_q: jax.Array  # (NV+1,) int32: C(k, q) for k = 0..NV (clamped at
+    #                     int32 max), the "count without materializing"
+    #                     closure table
+
+
+class CountState(NamedTuple):
+    lmask: jax.Array    # (D, WV) u32: common neighborhood per level
+    pmask: jax.Array    # (D, WU) u32: remaining candidates per level
+    lvl: jax.Array      # i32 (-1 = between tasks); r = lvl+1 chosen
+    tasks: jax.Array    # (T,) i32 indices into global root order
+    n_tasks: jax.Array  # i32
+    tpos: jax.Array     # i32
+    steps: jax.Array    # i32 loop iterations (all branches)
+    nodes: jax.Array    # i32 candidate visits (search-tree nodes)
+    count: jax.Array    # i32 accumulator: (p,q)-bicliques counted so far
+
+
+# ---------------------------------------------------------------------------
+# host-side setup
+# ---------------------------------------------------------------------------
+
+def make_context(g: BipartiteGraph, cfg: EngineConfig) -> CountContext:
+    assert g.n_u <= cfg.n_u and g.n_v <= cfg.n_v
+    _, q = cfg.count_pq
+    # zero-extended word copy (prefix-compatible packing, as engine_dense)
+    adj = np.zeros((cfg.n_u, cfg.wv), dtype=np.uint32)
+    src = np.asarray(g.adj_u, dtype=np.uint32)
+    adj[: g.n_u, : src.shape[1]] = src
+    deg = np.unpackbits(adj[: g.n_u].view(np.uint8), axis=1) \
+        .sum(axis=1, dtype=np.int64)
+    order_real = np.argsort(deg, kind="stable").astype(np.int32)
+    order = np.full(cfg.n_u, -1, dtype=np.int32)
+    order[: g.n_u] = order_real
+    rank = np.full(cfg.n_u, 2 * cfg.n_u, dtype=np.int32)
+    rank[order_real] = np.arange(g.n_u, dtype=np.int32)
+    binom = np.array([min(math.comb(k, q), _I32_MAX) if k >= q else 0
+                      for k in range(cfg.n_v + 1)], dtype=np.int32)
+    return CountContext(adj=jnp.asarray(adj), order=jnp.asarray(order),
+                        rank=jnp.asarray(rank), binom_q=jnp.asarray(binom))
+
+
+def init_state(cfg: EngineConfig, tasks: np.ndarray) -> CountState:
+    t = np.full(max(len(tasks), 1), -1, dtype=np.int32)
+    t[: len(tasks)] = np.asarray(tasks, dtype=np.int32)
+    z32 = jnp.int32(0)
+    return CountState(
+        lmask=jnp.zeros((cfg.depth, cfg.wv), jnp.uint32),
+        pmask=jnp.zeros((cfg.depth, cfg.wu), jnp.uint32),
+        lvl=jnp.int32(-1),
+        tasks=jnp.asarray(t), n_tasks=jnp.int32(len(tasks)),
+        tpos=z32, steps=z32, nodes=z32, count=z32)
+
+
+# ---------------------------------------------------------------------------
+# the while-loop branches
+# ---------------------------------------------------------------------------
+
+def _branch_backtrack(ctx: CountContext, cfg: EngineConfig,
+                      s: CountState) -> CountState:
+    return s._replace(lvl=s.lvl - 1)
+
+
+def _branch_init_task(ctx: CountContext, cfg: EngineConfig,
+                      s: CountState) -> CountState:
+    p, q = cfg.count_pq
+    idx = s.tasks[jnp.minimum(s.tpos, s.tasks.shape[0] - 1)]
+    x = ctx.order[jnp.clip(idx, 0, cfg.n_u - 1)]
+    L0 = ctx.adj[x]
+    nL0 = bitset.count(L0)
+    in_p = (ctx.rank > idx) & (ctx.rank < cfg.m_real)
+    P0 = bitset.from_bool(in_p)
+    if p == 1:
+        # the task's whole contribution closes immediately; empty P so the
+        # next step backtracks out of the task
+        inc = ctx.binom_q[jnp.clip(nL0, 0, cfg.n_v)]
+        P0 = jnp.zeros_like(P0)
+    else:
+        inc = jnp.int32(0)
+        # branch-and-bound prune: L only shrinks, so |L0| < q can never
+        # close a biclique anywhere in this subtree
+        P0 = jnp.where(nL0 >= q, P0, jnp.zeros_like(P0))
+    return s._replace(
+        lmask=s.lmask.at[0].set(L0),
+        pmask=s.pmask.at[0].set(P0),
+        lvl=jnp.int32(0), tpos=s.tpos + 1,
+        nodes=s.nodes + 1, count=s.count + inc)
+
+
+def _branch_candidate(ctx: CountContext, cfg: EngineConfig,
+                      s: CountState) -> CountState:
+    p, q = cfg.count_pq
+    lvl = s.lvl
+    pm = s.pmask[lvl]
+    x = bitset.first_member(pm)     # any fixed pop order is valid for
+    #                                 combinations; first-set-bit is free
+    pm_after = bitset.remove(pm, jnp.maximum(x, 0))
+    Lp = s.lmask[lvl] & ctx.adj[jnp.clip(x, 0, cfg.n_u - 1)]
+    nLp = bitset.count(Lp)
+    # r = lvl+1 vertices chosen at this level; adding x makes r+1
+    at_p = (lvl + jnp.int32(2)) == jnp.int32(p)
+    inc = jnp.where(at_p, ctx.binom_q[jnp.clip(nLp, 0, cfg.n_v)],
+                    jnp.int32(0))
+    # descend only while viable: the shrunk L can still host a q-subset
+    # AND enough candidates remain to reach p choices
+    need = jnp.int32(p) - (lvl + jnp.int32(2))
+    viable = (~at_p) & (nLp >= q) & (bitset.count(pm_after) >= need)
+    child = jnp.minimum(lvl + 1, cfg.depth - 1)
+    lmask = s.lmask.at[child].set(
+        jnp.where(viable, Lp, s.lmask[child]))
+    pmask = s.pmask.at[lvl].set(pm_after)
+    pmask = pmask.at[child].set(
+        jnp.where(viable, pm_after, pmask[child]))
+    return s._replace(
+        lmask=lmask, pmask=pmask,
+        lvl=jnp.where(viable, lvl + 1, lvl),
+        nodes=s.nodes + 1, count=s.count + inc)
+
+
+def _case_id(s: CountState) -> jax.Array:
+    """0 = backtrack, 1 = init next task, 2 = process a candidate."""
+    lvl_safe = jnp.maximum(s.lvl, 0)
+    p_empty = bitset.count(s.pmask[lvl_safe]) == 0
+    return jnp.where(s.lvl < 0, 1,
+                     jnp.where(p_empty, 0, 2)).astype(jnp.int32)
+
+
+def step(ctx: CountContext, cfg: EngineConfig, s: CountState) -> CountState:
+    s = s._replace(steps=s.steps + 1)
+    return jax.lax.switch(
+        _case_id(s),
+        [lambda st: _branch_backtrack(ctx, cfg, st),
+         lambda st: _branch_init_task(ctx, cfg, st),
+         lambda st: _branch_candidate(ctx, cfg, st)],
+        s)
+
+
+# ---------------------------------------------------------------------------
+# the Engine registration
+# ---------------------------------------------------------------------------
+
+class CountEngine(Engine):
+    """(p,q)-biclique counting: scalar accumulator, no collect buffers."""
+
+    name = "count"
+    result_type = CountResult
+    collectable = False
+    canonicalize = False        # (p, q) is side-specific: p counts U-side
+    #                             vertices of the graph AS SUBMITTED
+
+    def config(self, n_u, n_v, depth, *, m_real=None, **kw):
+        kw.setdefault("count_pq", (2, 2))
+        p, q = kw["count_pq"]
+        if p < 1 or q < 1:
+            raise ValueError(f"count engine needs p >= 1 and q >= 1, "
+                             f"got (p, q) = ({p}, {q})")
+        kw["collect_cap"] = 1   # nothing is materialized
+        return super().config(n_u, n_v, depth, m_real=m_real, **kw)
+
+    def make_context(self, g, cfg):
+        return make_context(g, cfg)
+
+    def init_state(self, cfg, tasks):
+        return init_state(cfg, tasks)
+
+    def dummy_context(self, cfg):
+        return CountContext(
+            adj=jnp.zeros((cfg.n_u, cfg.wv), jnp.uint32),
+            order=jnp.zeros((cfg.n_u,), jnp.int32),
+            rank=jnp.zeros((cfg.n_u,), jnp.int32),
+            binom_q=jnp.zeros((cfg.n_v + 1,), jnp.int32))
+
+    def step(self, ctx, cfg, s):
+        return step(ctx, cfg, s)
+
+    def collected(self, cfg, s, n_u, n_v):
+        return []               # nothing is materialized
+
+    # -- result schema --------------------------------------------------
+    def counters(self, s) -> dict:
+        return dict(count=int(s.count), nodes=int(s.nodes),
+                    steps=int(s.steps))
+
+    def stacked_counters(self, stacked) -> dict:
+        return dict(count=int(np.asarray(stacked.count, np.int64).sum()),
+                    nodes=int(np.asarray(stacked.nodes).sum()),
+                    steps=int(np.asarray(stacked.steps).sum()))
+
+    def finish(self, cfg, s, *, n_u, n_v, swapped=False, collect=False):
+        p, q = cfg.count_pq
+        out = self.counters(s)
+        out.update(p=p, q=q)
+        return out
+
+    def finish_workers(self, cfg, stacked, n_workers, *, n_u, n_v,
+                       swapped=False, collect=False):
+        p, q = cfg.count_pq
+        out = self.stacked_counters(stacked)
+        out.update(p=p, q=q)
+        return out
+
+    def partial(self, counters, cfg=None):
+        c = counters or {}
+        p, q = cfg.count_pq if cfg is not None else (0, 0)
+        return dict(count=int(c.get("count", 0)),
+                    nodes=int(c.get("nodes", 0)),
+                    steps=int(c.get("steps", 0)), p=p, q=q)
+
+    # -- convenience ----------------------------------------------------
+    def count(self, g: BipartiteGraph, p: int = 2, q: int = 2,
+              **kw) -> int:
+        """Direct exact-shape count of the (p,q)-bicliques of ``g``."""
+        out = self.enumerate(g, count_pq=(p, q), **kw)
+        return int(out.count)
+
+
+COUNT = register_engine(CountEngine())

@@ -95,6 +95,12 @@ class EngineConfig:
     #                             whenever the state fits its VMEM budget;
     #                             False pins the per-step fused kernels
     #                             (DESIGN.md §9)
+    count_pq: tuple[int, int] = (2, 2)   # the 'count' engine's (p, q)
+    #                             parameters (repro.core.engine_count);
+    #                             inert for the enumeration engines but
+    #                             part of the shared config so it rides
+    #                             the executable-cache key like every
+    #                             other semantic knob
 
     @property
     def fused(self) -> bool:

@@ -1,0 +1,291 @@
+"""Maximal clique enumeration engine — the unipartite twin of MBE.
+
+Enumerates the maximal cliques of an undirected graph (Almasri et al.,
+PAPERS.md) with the same machinery cuMBE's MBE engines run on: packed
+uint32 bitsets (``core.bitset``), a recursion-free branch-and-bound DFS
+inside ``lax.while_loop``, the fused select kernel for candidate
+ordering, root-task decomposition and the big-graph work-stealing route.
+
+Algorithm — Bron–Kerbosch with vertex-order root decomposition:
+
+* The graph arrives as a **symmetric bipartite embed**
+  (``graph.unipartite_graph``: n_u == n_v, adjacency symmetric, no
+  self-loops).  The context keeps one U-side neighbor mask per vertex —
+  the V side is never touched.
+* Root task i (the shared work-stealing unit): vertex v_i of the degree
+  order, with R = {v_i}, P = N(v_i) ∩ {later roots}, X = N(v_i) ∩
+  {earlier roots} — the classic ordered BK decomposition, so workers'
+  disjoint task lists partition the search space exactly like MBE's.
+* Candidate step: pick x ∈ P (min |N(x) ∩ P| under ``order_mode='deg'``,
+  via ``fused_select_packed`` on the pallas path — one VMEM-resident
+  pass; first member under ``'input'``), pop it from P, descend with
+  R+x, P ∩ N(x), X ∩ N(x).
+* P empty: report R as maximal iff X is empty (count ``n_max``, add the
+  order-independent fingerprint, optionally collect the R mask), then
+  backtrack, moving the expanded candidate from the parent's P into its
+  X — the mirror of the MBE engines' Q bookkeeping.
+
+State pytree: P/X/R mask stacks over U words plus the shared scalar
+contract (``tasks``/``n_tasks``/``tpos``/``lvl``/``steps``/``nodes``)
+and the MBE-style result tail (``n_max``/``cs``/``out_n``/``out_r``; no
+``out_l`` — a clique has one side).  ``canonicalize`` is False (the
+embed is square; transposing buys nothing).
+
+Differential oracle: ``baselines.oracles.enumerate_maximal_cliques``.
+Registered as ``"mce"`` (lazily, on first registry lookup).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset
+from repro.core.engine import Engine, register_engine
+from repro.core.engine_dense import EngineConfig
+from repro.core.graph import BipartiteGraph
+from repro.core.results import CliqueResult
+from repro.kernels.fused_select.ops import fused_select_packed
+from repro.kernels.intersect_count.ops import intersect_count
+
+
+class CliqueContext(NamedTuple):
+    """Device-resident graph data: everything lives on the U side."""
+    adj: jax.Array      # (NU, WU) uint32: symmetric neighbor masks
+    order: jax.Array    # (NU,) int32: root order (degree-ascending), -1 pad
+    rank: jax.Array     # (NU,) int32: rank[v]; padding rank = 2*NU
+
+
+class CliqueState(NamedTuple):
+    pmask: jax.Array    # (D, WU) u32: BK candidate set per level
+    xmask: jax.Array    # (D, WU) u32: BK excluded set per level
+    rmask: jax.Array    # (D, WU) u32: current clique per level
+    xstack: jax.Array   # (D,) i32: candidate expanded at each level
+    lvl: jax.Array      # i32 (-1 = between tasks)
+    tasks: jax.Array    # (T,) i32 indices into global root order
+    n_tasks: jax.Array  # i32
+    tpos: jax.Array     # i32
+    steps: jax.Array    # i32 loop iterations (all branches)
+    nodes: jax.Array    # i32 candidate visits (search-tree nodes)
+    n_max: jax.Array    # i32 maximal cliques found
+    cs: jax.Array       # u32 enumeration fingerprint
+    out_n: jax.Array    # i32
+    out_r: jax.Array    # (C, WU) u32 collected clique masks
+
+
+# ---------------------------------------------------------------------------
+# host-side setup
+# ---------------------------------------------------------------------------
+
+def make_context(g: BipartiteGraph, cfg: EngineConfig) -> CliqueContext:
+    if g.n_u != g.n_v:
+        raise ValueError(
+            f"the mce engine enumerates unipartite graphs submitted as "
+            f"symmetric embeds (n_u == n_v, see graph.unipartite_graph); "
+            f"got n_u={g.n_u}, n_v={g.n_v}")
+    assert g.n_u <= cfg.n_u
+    # adj_v rows are packed over the U universe — for a symmetric embed
+    # that IS the neighbor mask of each vertex; zero-extend to the bucket
+    adj = np.zeros((cfg.n_u, cfg.wu), dtype=np.uint32)
+    src = np.asarray(g.adj_v, dtype=np.uint32)
+    adj[: g.n_u, : src.shape[1]] = src
+    for v in range(g.n_u):      # defensively drop self-loops (not cliques)
+        adj[v, v // 32] &= ~(np.uint32(1) << np.uint32(v % 32))
+    deg = np.unpackbits(adj[: g.n_u].view(np.uint8), axis=1) \
+        .sum(axis=1, dtype=np.int64)
+    order_real = np.argsort(deg, kind="stable").astype(np.int32)
+    order = np.full(cfg.n_u, -1, dtype=np.int32)
+    order[: g.n_u] = order_real
+    rank = np.full(cfg.n_u, 2 * cfg.n_u, dtype=np.int32)
+    rank[order_real] = np.arange(g.n_u, dtype=np.int32)
+    return CliqueContext(adj=jnp.asarray(adj), order=jnp.asarray(order),
+                         rank=jnp.asarray(rank))
+
+
+def init_state(cfg: EngineConfig, tasks: np.ndarray) -> CliqueState:
+    t = np.full(max(len(tasks), 1), -1, dtype=np.int32)
+    t[: len(tasks)] = np.asarray(tasks, dtype=np.int32)
+    D, WU, C = cfg.depth, cfg.wu, cfg.collect_cap
+    z32 = jnp.int32(0)
+    return CliqueState(
+        pmask=jnp.zeros((D, WU), jnp.uint32),
+        xmask=jnp.zeros((D, WU), jnp.uint32),
+        rmask=jnp.zeros((D, WU), jnp.uint32),
+        xstack=jnp.full((D,), -1, jnp.int32),
+        lvl=jnp.int32(-1),
+        tasks=jnp.asarray(t), n_tasks=jnp.int32(len(tasks)),
+        tpos=z32, steps=z32, nodes=z32, n_max=z32,
+        cs=jnp.uint32(0), out_n=z32,
+        out_r=jnp.zeros((C, WU), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# the while-loop branches
+# ---------------------------------------------------------------------------
+
+def _branch_report_backtrack(ctx: CliqueContext, cfg: EngineConfig,
+                             s: CliqueState) -> CliqueState:
+    """P empty: R is maximal iff X is empty (BK leaf), then backtrack,
+    moving the parent's expanded candidate from P (already popped) into
+    its X — the ordered-iteration bookkeeping that stops duplicates."""
+    lvl = jnp.maximum(s.lvl, 0)
+    maximal = bitset.count(s.xmask[lvl]) == 0
+    R = s.rmask[lvl]
+    cs_inc = jnp.where(maximal, bitset.pair_checksum(R, R), jnp.uint32(0))
+    C = cfg.collect_cap
+    w_idx = jnp.minimum(s.out_n, C - 1)
+    write = maximal & (s.out_n < C)
+    out_r = s.out_r.at[w_idx].set(jnp.where(write, R, s.out_r[w_idx]))
+    nl = s.lvl - 1
+    safe = jnp.maximum(nl, 0)
+    x = s.xstack[safe]
+    x_new = bitset.add(s.xmask[safe], jnp.maximum(x, 0))
+    xmask = s.xmask.at[safe].set(
+        jnp.where(nl >= 0, x_new, s.xmask[safe]))
+    return s._replace(
+        xmask=xmask, lvl=nl,
+        n_max=s.n_max + maximal.astype(jnp.int32),
+        cs=s.cs + cs_inc,
+        out_n=s.out_n + write.astype(jnp.int32), out_r=out_r)
+
+
+def _branch_init_task(ctx: CliqueContext, cfg: EngineConfig,
+                      s: CliqueState) -> CliqueState:
+    idx = s.tasks[jnp.minimum(s.tpos, s.tasks.shape[0] - 1)]
+    x = ctx.order[jnp.clip(idx, 0, cfg.n_u - 1)]
+    nbr = ctx.adj[x]
+    in_later = (ctx.rank > idx) & (ctx.rank < cfg.m_real)
+    in_earlier = ctx.rank < idx
+    return s._replace(
+        pmask=s.pmask.at[0].set(nbr & bitset.from_bool(in_later)),
+        xmask=s.xmask.at[0].set(nbr & bitset.from_bool(in_earlier)),
+        rmask=s.rmask.at[0].set(bitset.singleton(x, cfg.wu)),
+        lvl=jnp.int32(0), tpos=s.tpos + 1, nodes=s.nodes + 1)
+
+
+def _branch_candidate(ctx: CliqueContext, cfg: EngineConfig,
+                      s: CliqueState) -> CliqueState:
+    lvl = s.lvl
+    pm = s.pmask[lvl]
+    if cfg.order_mode == "input":
+        x = bitset.first_member(pm)
+    elif cfg.fused:
+        # one VMEM-resident pass: |N(v) ∩ P| + masked argmin over P —
+        # the MBE fused-select kernel verbatim, U-side operands
+        x, _ = fused_select_packed(ctx.adj, pm, pm, impl="pallas")
+    else:
+        c = intersect_count(ctx.adj, pm, impl=cfg.impl)
+        x = bitset.masked_argmin(c, pm)
+    x_safe = jnp.clip(x, 0, cfg.n_u - 1)
+    pm_after = bitset.remove(pm, jnp.maximum(x, 0))
+    nbr = ctx.adj[x_safe]
+    child = jnp.minimum(lvl + 1, cfg.depth - 1)
+    pmask = s.pmask.at[lvl].set(pm_after)
+    pmask = pmask.at[child].set(pm_after & nbr)
+    return s._replace(
+        pmask=pmask,
+        xmask=s.xmask.at[child].set(s.xmask[lvl] & nbr),
+        rmask=s.rmask.at[child].set(
+            bitset.add(s.rmask[lvl], x_safe)),
+        xstack=s.xstack.at[lvl].set(x),
+        lvl=lvl + 1, nodes=s.nodes + 1)
+
+
+def _case_id(s: CliqueState) -> jax.Array:
+    """0 = report/backtrack, 1 = init next task, 2 = expand a candidate."""
+    lvl_safe = jnp.maximum(s.lvl, 0)
+    p_empty = bitset.count(s.pmask[lvl_safe]) == 0
+    return jnp.where(s.lvl < 0, 1,
+                     jnp.where(p_empty, 0, 2)).astype(jnp.int32)
+
+
+def step(ctx: CliqueContext, cfg: EngineConfig,
+         s: CliqueState) -> CliqueState:
+    s = s._replace(steps=s.steps + 1)
+    return jax.lax.switch(
+        _case_id(s),
+        [lambda st: _branch_report_backtrack(ctx, cfg, st),
+         lambda st: _branch_init_task(ctx, cfg, st),
+         lambda st: _branch_candidate(ctx, cfg, st)],
+        s)
+
+
+def collected_cliques(cfg: EngineConfig, s: CliqueState,
+                      n: int) -> list[tuple]:
+    """Decode the collect buffer into vertex tuples."""
+    cnt = int(s.out_n)
+    assert cnt <= cfg.collect_cap, "collect buffer overflowed"
+    rows = np.asarray(s.out_r)
+    return [tuple(bitset.unpack(rows[i], n)) for i in range(cnt)]
+
+
+# ---------------------------------------------------------------------------
+# the Engine registration
+# ---------------------------------------------------------------------------
+
+class MceEngine(Engine):
+    """Bron–Kerbosch maximal clique enumeration on unipartite embeds."""
+
+    name = "mce"
+    result_type = CliqueResult
+    canonicalize = False        # the embed is square; nothing to gain
+    unipartite = True
+
+    def make_context(self, g, cfg):
+        return make_context(g, cfg)
+
+    def init_state(self, cfg, tasks):
+        return init_state(cfg, tasks)
+
+    def dummy_context(self, cfg):
+        return CliqueContext(
+            adj=jnp.zeros((cfg.n_u, cfg.wu), jnp.uint32),
+            order=jnp.zeros((cfg.n_u,), jnp.int32),
+            rank=jnp.zeros((cfg.n_u,), jnp.int32))
+
+    def step(self, ctx, cfg, s):
+        return step(ctx, cfg, s)
+
+    def collected(self, cfg, s, n_u, n_v):
+        return collected_cliques(cfg, s, n_u)
+
+    # -- result schema --------------------------------------------------
+    # counters/stacked_counters: the base MBE scalars (n_max/cs/nodes/
+    # steps) are exactly this engine's tail, so only the payload key
+    # names change
+    def finish(self, cfg, s, *, n_u, n_v, swapped=False, collect=False):
+        out = self.counters(s)
+        out.update(cliques=None, truncated=False)
+        if collect:
+            out["cliques"] = self.collected(cfg, s, n_u, n_v)
+            out["truncated"] = int(s.n_max) > int(s.out_n)
+        return out
+
+    def finish_workers(self, cfg, stacked, n_workers, *, n_u, n_v,
+                       swapped=False, collect=False):
+        out = self.stacked_counters(stacked)
+        out.update(cliques=None, truncated=False)
+        if collect:
+            cl = []
+            truncated = False
+            per_n_max = np.asarray(stacked.n_max)
+            per_out_n = np.asarray(stacked.out_n)
+            for w in range(n_workers):
+                ws = jax.tree.map(lambda a, w=w: a[w], stacked)
+                cl.extend(self.collected(cfg, ws, n_u, n_v))
+                truncated |= int(per_n_max[w]) > int(per_out_n[w])
+            out["cliques"] = cl
+            out["truncated"] = truncated
+        return out
+
+    def partial(self, counters, cfg=None):
+        c = counters or {}
+        return dict(n_max=int(c.get("n_max", 0)), cs=int(c.get("cs", 0)),
+                    nodes=int(c.get("nodes", 0)),
+                    steps=int(c.get("steps", 0)),
+                    cliques=None, truncated=False)
+
+
+MCE = register_engine(MceEngine())

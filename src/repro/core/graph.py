@@ -101,6 +101,26 @@ class BipartiteGraph:
                     n_edges=self.n_edges, edge_density=self.edge_density)
 
 
+def unipartite_graph(n: int, edges: Iterable[tuple[int, int]],
+                     name: str = "graph") -> BipartiteGraph:
+    """Embed an undirected graph as a symmetric bipartite graph.
+
+    Both sides are the same vertex set (n_u == n_v == n); every edge
+    (a, b) is materialized in both directions and self-loops are
+    dropped, so ``adj_u == adj_v`` is the packed symmetric adjacency
+    matrix. This is the submission format of unipartite engines
+    (``mce``): they read one side's masks and never touch the other.
+    """
+    es = set()
+    for a, b in edges:
+        a, b = int(a), int(b)
+        if a == b:
+            continue
+        es.add((a, b))
+        es.add((b, a))
+    return BipartiteGraph.from_edges(n, n, es, name=name)
+
+
 def validate(g: BipartiteGraph) -> None:
     """Invariant check: adj_u and adj_v describe the same edge set."""
     for u in range(g.n_u):

@@ -30,7 +30,7 @@ import os
 
 import numpy as np
 
-from repro.core.graph import BipartiteGraph
+from repro.core.graph import BipartiteGraph, unipartite_graph
 
 
 def _ensure_min_degree(n_u, n_v, edges, rng):
@@ -132,6 +132,27 @@ def load_konect(path: str, name: str | None = None) -> BipartiteGraph:
         n_u, n_v, zip(us, vs),
         name=name or os.path.basename(path))
     return g.canonical()
+
+
+def random_unipartite(n: int, p: float, seed: int = 0,
+                      name: str | None = None) -> BipartiteGraph:
+    """Erdos–Renyi undirected G(n, p) as a symmetric bipartite embed
+    (the ``mce`` engine's submission format)."""
+    rng = np.random.default_rng(seed)
+    mask = np.triu(rng.random((n, n)) < p, k=1)
+    a, b = np.nonzero(mask)
+    es = set(zip(a.tolist(), b.tolist()))
+    deg = np.zeros(n, dtype=np.int64)
+    for x, y in es:
+        deg[x] += 1
+        deg[y] += 1
+    for v in range(n):      # keep min-degree >= 1 like the bipartite gens
+        if deg[v] == 0:
+            w = int(rng.integers(n - 1))
+            w += w >= v
+            es.add((min(v, w), max(v, w)))
+            deg[w] += 1
+    return unipartite_graph(n, es, name=name or f"uni_er_{n}_p{p}")
 
 
 def random_graph_stream(n_requests: int, seed: int = 0

@@ -23,7 +23,8 @@ import time
 import numpy as np
 import jax
 
-from repro.api import MBEClient, MBEOptions, imbalance
+from repro.api import (MBEClient, MBEOptions, get_engine, imbalance,
+                       unipartite_graph)
 from repro.configs.cumbe import SMOKE
 from repro.data import dataset_suite, load_konect
 
@@ -41,8 +42,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--file", default=None,
                     help="Konect-format edge list instead of --dataset")
     ap.add_argument("--engine", default="dense",
-                    choices=["dense", "compact"],
-                    help="enumeration engine (repro.core.engine registry)")
+                    help="workload engine by registry name "
+                         "(repro.core.engine; e.g. dense, compact, "
+                         "count, mce — unknown names raise ValueError "
+                         "listing the available engines)")
+    ap.add_argument("--count-p", type=int, default=2,
+                    help="count engine: p of the (p,q)-biclique count")
+    ap.add_argument("--count-q", type=int, default=2,
+                    help="count engine: q of the (p,q)-biclique count")
     ap.add_argument("--workers", type=int, default=None,
                     help="stealing workers per device (default: cumbe "
                          "SMOKE)")
@@ -64,6 +71,13 @@ def main(argv=None) -> dict:
     else:
         name = args.dataset or _DEFAULT_DATASET[args.suite]
         g = dataset_suite(args.suite)[name]
+    if get_engine(args.engine).unipartite:
+        # unipartite engines (mce) take symmetric embeds: serve the
+        # dataset's incidence graph (U ∪ V vertices, one undirected edge
+        # per bipartite edge)
+        g = unipartite_graph(g.n_u + g.n_v,
+                             [(int(u), g.n_u + int(v)) for u, v in g.edges],
+                             name=f"{g.name}-incidence")
     print(f"[mbe] graph {g.name}: |U|={g.n_u} |V|={g.n_v} "
           f"|E|={len(g.edges)}")
 
@@ -71,6 +85,7 @@ def main(argv=None) -> dict:
     workers = args.workers or SMOKE.dist.workers_per_device
     client = MBEClient(MBEOptions(
         engine=args.engine, order_mode=args.order,
+        count_p=args.count_p, count_q=args.count_q,
         kernel_impl=args.kernel_impl,
         bucket_mode="exact",            # one graph: no padding wanted
         big_graph_threshold=1,          # the whole run IS the big route
@@ -97,12 +112,15 @@ def main(argv=None) -> dict:
     # stats()['big_imbalance']
     imb = imbalance(per_worker)
     assert abs(imb - st["big_imbalance"]) < 1e-12
-    print(f"[mbe] nMB={res.n_max} nodes={res.nodes} "
+    print(f"[mbe] metric={res.metric} nodes={res.nodes} "
           f"rounds={st['batches']} time={dt:.2f}s "
           f"engine={st['engine']} "
           f"imbalance(max/mean)={imb:.3f}")
-    return dict(n_max=res.n_max, nodes=res.nodes, rounds=st["batches"],
-                seconds=dt, imbalance=imb, engine=st["engine"])
+    out = dict(metric=res.metric, nodes=res.nodes, rounds=st["batches"],
+               seconds=dt, imbalance=imb, engine=st["engine"])
+    if hasattr(res, "n_max"):       # back-compat key for MBE/MCE callers
+        out["n_max"] = res.n_max
+    return out
 
 
 if __name__ == "__main__":

@@ -71,15 +71,31 @@ def _print_routing(server) -> None:
             print(f"[big]   rid={e['rid']} {e['graph']}: {e['placement']}")
 
 
+def _request_stream(engine_name: str, n_requests: int, seed: int):
+    """The synthetic request stream matched to the engine's workload:
+    unipartite engines (``mce``) get symmetric embeds, everything else
+    the mixed-size bipartite stream."""
+    from repro.core.engine import get_engine
+    from repro.data.generators import random_graph_stream, random_unipartite
+    if get_engine(engine_name).unipartite:
+        rng = np.random.default_rng(seed)
+        return [random_unipartite(int(rng.integers(8, 24)),
+                                  float(rng.uniform(0.2, 0.5)),
+                                  seed=int(rng.integers(1 << 30)),
+                                  name=f"req{i}-uni")
+                for i in range(n_requests)]
+    return random_graph_stream(n_requests, seed=seed)
+
+
 def serve_mbe(args) -> dict:
-    """Serve a synthetic mixed-size MBE request stream through the
-    unified client (``repro.api.MBEClient``)."""
+    """Serve a synthetic mixed-size request stream through the unified
+    client (``repro.api.MBEClient``), with any registered engine."""
     from repro.api import MBEClient, MBEOptions
-    from repro.data.generators import random_graph_stream
-    graphs = random_graph_stream(args.requests, seed=args.seed)
+    graphs = _request_stream(args.engine, args.requests, args.seed)
     spr = args.steps_per_round if args.continuous else 0
     client = MBEClient(MBEOptions(
-        engine=args.engine, bucket_mode=args.policy,
+        engine=args.engine, count_p=args.count_p, count_q=args.count_q,
+        bucket_mode=args.policy,
         kernel_impl=args.kernel_impl,
         max_batch=args.max_batch, steps_per_round=spr,
         steps_per_call=args.steps_per_call,
@@ -89,21 +105,22 @@ def serve_mbe(args) -> dict:
     results = client.enumerate_many(graphs)
     dt = time.perf_counter() - t0
     stats = client.stats()
-    n_max = sum(r.n_max for r in results)
+    # engine-agnostic headline: bicliques/cliques found, or the count
+    metric = sum(r.metric for r in results)
     mode = f"continuous(r={spr})" if args.continuous else "flush"
     _print_routing(client)
     print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
           f"engine={stats['engine']}, executor={stats['executor']}, "
           f"kernels={stats['kernel_impl']} "
           f"(x{stats['steps_per_call']}/call), "
-          f"{mode}: {n_max} maximal bicliques, "
+          f"{mode}: metric total {metric}, "
           f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
           f"occupancy {stats['occupancy']:.2f}, "
           f"{stats['busy_steps'] / dt:.0f} steps/s "
           f"({stats['steps_per_poll']:.0f} steps/poll), "
           f"{dt:.2f}s ({args.requests / dt:.1f} graphs/s)")
-    return dict(requests=args.requests, n_max=n_max, wall_s=dt, **stats)
+    return dict(requests=args.requests, metric=metric, wall_s=dt, **stats)
 
 
 def serve(argv=None) -> dict:
@@ -113,9 +130,14 @@ def serve(argv=None) -> dict:
     ap.add_argument("--policy", default="pow2",
                     choices=["pow2", "linear", "exact"])
     ap.add_argument("--engine", default="dense",
-                    choices=["dense", "compact"],
-                    help="MBE: enumeration engine "
-                         "(repro.core.engine registry)")
+                    help="MBE: workload engine by registry name "
+                         "(repro.core.engine; e.g. dense, compact, "
+                         "count, mce — unknown names raise ValueError "
+                         "listing the available engines)")
+    ap.add_argument("--count-p", type=int, default=2,
+                    help="count engine: p of the (p,q)-biclique count")
+    ap.add_argument("--count-q", type=int, default=2,
+                    help="count engine: q of the (p,q)-biclique count")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--continuous", action="store_true",
                     help="MBE: bounded-round slot scheduling with "

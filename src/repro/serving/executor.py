@@ -176,8 +176,7 @@ class Executor(abc.ABC):
         return jax.tree.map(lambda x, i=i: x[i], pool.state)
 
     def done_mask(self, pool: LanePool) -> np.ndarray:
-        return np.asarray((pool.state.lvl < 0)
-                          & (pool.state.tpos >= pool.state.n_tasks))
+        return np.asarray(pool.engine.done(pool.state))
 
     def steps(self, pool: LanePool) -> np.ndarray:
         """Per-lane cumulative engine steps (for step-cap enforcement) —
@@ -399,9 +398,7 @@ class BigGraphLane:
 
     @property
     def done(self) -> bool:
-        return bool(np.asarray((self.state.lvl < 0)
-                               & (self.state.tpos >= self.state.n_tasks))
-                    .all())
+        return bool(np.asarray(self.engine.done(self.state)).all())
 
     def max_worker_steps(self) -> int:
         return int(np.asarray(self.state.steps).max())

@@ -74,7 +74,7 @@ remain the supported low-level surface):
 
 Request lifecycle (DESIGN.md §7): pending -> placed -> running ->
 {done, cancelled, timed_out}; terminal states are reported on
-``MBEResult.status``, never raised.  Requests leave the pending queue
+``EngineResult.status``, never raised.  Requests leave the pending queue
 only when they are physically placed into a lane, so an exception
 mid-drain (e.g. a lane exceeding ``max_graph_steps``) cannot lose
 queued-but-unserved requests.
@@ -96,9 +96,12 @@ import time
 
 import numpy as np
 
-from repro.core.distributed import totals as dd_totals
 from repro.core.engine import Engine, get_engine
 from repro.core.graph import BipartiteGraph
+from repro.core.results import EngineResult, MBEResult  # noqa: F401  (MBEResult
+#                             re-exported: the historical import surface of
+#                             this module, now defined with the rest of the
+#                             result schema in repro.core.results)
 from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_bucket,
                                    plan_route)
 from repro.serving.cache import ExecutableCache
@@ -123,7 +126,8 @@ def imbalance(per_worker) -> float:
 @dataclasses.dataclass(frozen=True)
 class Request:
     rid: int
-    graph: BipartiteGraph       # canonical orientation (|U| <= |V|)
+    graph: BipartiteGraph       # served orientation (canonical when the
+    #                             engine allows transposition)
     bucket: BucketSpec
     swapped: bool               # True if submit() transposed the graph
     t_admit: float = 0.0        # perf_counter stamp at admission
@@ -172,49 +176,6 @@ class _PendingQueue:
 
     def __iter__(self):
         return (r for _, r in self._items)
-
-
-@dataclasses.dataclass(frozen=True)
-class MBEResult:
-    rid: int
-    name: str
-    n_max: int                  # maximal bicliques found
-    cs: int                     # enumeration fingerprint (order-independent,
-    #                             computed in the canonical orientation)
-    nodes: int                  # search-tree nodes visited
-    steps: int                  # engine loop iterations (summed over
-    #                             workers for big-graph requests)
-    latency_s: float            # queue_s + service_s + compile_s: the sum
-    #                             of the request's attributed components
-    #                             (host gaps between rounds and other
-    #                             buckets' rounds are not attributed)
-    bicliques: list | None      # decoded (L ⊆ V, R ⊆ U) tuples when
-    #                             collecting, in the orientation the graph
-    #                             was SUBMITTED in (demux un-swaps if the
-    #                             server canonicalized)
-    truncated: bool = False     # collecting AND n_max exceeded the collect
-    #                             buffer: the bicliques list is
-    #                             honest-but-short (always False when the
-    #                             server is not collecting)
-    queue_s: float = 0.0        # admit -> lane placement
-    service_s: float = 0.0      # execution wall while resident in a lane
-    #                             (compilation excluded)
-    compile_s: float = 0.0      # XLA compile time incurred while resident
-    #                             (0.0 when the executable was cached)
-    cancelled: bool = False     # request was cancelled (pending or
-    #                             in-flight); counters are the progress
-    #                             made before eviction, bicliques is None
-    timed_out: bool = False     # request's deadline expired before it
-    #                             finished; same partial-progress contract
-
-    @property
-    def status(self) -> str:
-        """Terminal lifecycle state: done | cancelled | timed_out."""
-        if self.cancelled:
-            return "cancelled"
-        if self.timed_out:
-            return "timed_out"
-        return "done"
 
 
 class _LanePool:
@@ -304,32 +265,26 @@ class _LanePool:
             f"{'; '.join(names)} exceeded max_graph_steps={cap} without "
             f"finishing; evicted (other requests remain servable)")
 
-    def demux(self, server: "MBEServer") -> dict[int, "MBEResult"]:
-        """Decode every finished lane into a result and free its slot."""
+    def demux(self, server: "MBEServer") -> dict[int, EngineResult]:
+        """Decode every finished lane into a result and free its slot.
+        The payload comes from ``Engine.finish`` — the scheduler never
+        names a concrete result class."""
         done = server.executor.done_mask(self.pool)
-        results: dict[int, MBEResult] = {}
+        results: dict[int, EngineResult] = {}
         for i, r in enumerate(self.reqs):
             if r is None or not done[i]:
                 continue
             lane = server.executor.lane(self.pool, i)
-            bic = None
-            if server.collect:
-                bic = server.engine.collected(self.cfg, lane, r.graph.n_u,
-                                              r.graph.n_v)
-                if r.swapped:   # back to the submitted orientation
-                    bic = [(R, L) for L, R in bic]
-            results[r.rid] = MBEResult(
-                rid=r.rid, name=r.graph.name, n_max=int(lane.n_max),
-                cs=int(lane.cs), nodes=int(lane.nodes),
-                steps=int(lane.steps),
+            payload = server.engine.finish(
+                self.cfg, lane, n_u=r.graph.n_u, n_v=r.graph.n_v,
+                swapped=r.swapped, collect=server.collect)
+            results[r.rid] = server.engine.make_result(
+                rid=r.rid, name=r.graph.name,
                 latency_s=(self._queue_s[i] + self._service_s[i]
                            + self._compile_s[i]),
-                bicliques=bic,
-                truncated=server.collect
-                and int(lane.n_max) > int(lane.out_n),
                 queue_s=self._queue_s[i],
                 service_s=self._service_s[i],
-                compile_s=self._compile_s[i])
+                compile_s=self._compile_s[i], **payload)
             self.reqs[i] = None
         return results
 
@@ -357,10 +312,12 @@ class MBEServer:
                  executor: Executor | None = None,
                  cache_capacity: int | None =
                  ExecutableCache.DEFAULT_CAPACITY,
-                 engine: str | Engine = "dense"):
+                 engine: str | Engine = "dense",
+                 engine_params: dict | None = None):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
+        self.engine_params = dict(engine_params or {})
         self.order_mode = order_mode
         self.impl = impl
         self.kernel_impl = kernel_impl
@@ -374,7 +331,7 @@ class MBEServer:
         self._big_queue: _PendingQueue = _PendingQueue()
         self._big: _BigSlot | None = None
         self._big_busy_per_worker: np.ndarray | None = None
-        self._completed: dict[int, MBEResult] = {}
+        self._completed: dict[int, EngineResult] = {}
         self._next_rid = 0
         self._n_rounds = 0
         self._n_lanes = 0
@@ -390,11 +347,15 @@ class MBEServer:
               deadline_s: float | None = None) -> int:
         """Enqueue one graph; returns the request id used to demux.
 
-        The graph is canonicalized (|U| <= |V|) internally for the engine;
-        decoded bicliques are swapped back to the submitted orientation at
-        demux, so callers always get (L ⊆ their V, R ⊆ their U).  Graphs
-        at/above ``policy.big_graph_threshold`` root tasks route to the
-        work-stealing big-graph lane instead of a bucket lane pool.
+        If the engine allows it (``Engine.canonicalize``), the graph is
+        canonicalized (|U| <= |V|) internally; decoded bicliques are
+        swapped back to the submitted orientation at demux, so callers
+        always get (L ⊆ their V, R ⊆ their U).  Engines whose semantics
+        depend on the submitted orientation (``count``'s side-specific
+        (p, q), ``mce``'s symmetric unipartite embed) are served exactly
+        as submitted.  Graphs at/above ``policy.big_graph_threshold``
+        root tasks route to the work-stealing big-graph lane instead of
+        a bucket lane pool.
 
         ``priority``: higher values are placed into freed lanes before
         lower ones within the same bucket queue (FIFO within a level).
@@ -403,7 +364,7 @@ class MBEServer:
         ``timed_out=True`` (pending: never compiled/placed; in-flight:
         lane evicted, counters report the partial progress).
         """
-        gc = g.canonical()
+        gc = g.canonical() if self.engine.canonicalize else g
         if gc.n_u < 1:
             raise ValueError("empty graphs are not servable")
         rid = self._next_rid
@@ -411,7 +372,8 @@ class MBEServer:
         route = plan_route(gc, self.policy)
         bucket = plan_bucket(gc, self.policy)
         t0 = time.perf_counter()
-        req = Request(rid, gc, bucket, swapped=g.n_u > g.n_v,
+        req = Request(rid, gc, bucket,
+                      swapped=self.engine.canonicalize and g.n_u > g.n_v,
                       t_admit=t0, big=route == "big", priority=priority,
                       deadline=None if deadline_s is None
                       else t0 + float(deadline_s))
@@ -441,10 +403,16 @@ class MBEServer:
 
     # ------------------------------------------------------------------
     def _engine_config(self, bucket: BucketSpec):
-        return bucket.engine_config(collect_cap=self.collect_cap,
-                                    order_mode=self.order_mode,
-                                    impl=self.impl,
-                                    kernel_impl=self.kernel_impl)
+        """The scheduler's ONE config entry point: the engine shapes its
+        own ``EngineConfig`` from the bucket + server knobs +
+        engine-specific ``engine_params`` (e.g. the count engine's
+        ``count_pq``); parameters ride the config into every
+        executable-cache key."""
+        return self.engine.config(
+            bucket.n_u, bucket.n_v, bucket.depth,
+            collect_cap=self.collect_cap, order_mode=self.order_mode,
+            impl=self.impl, kernel_impl=self.kernel_impl,
+            **self.engine_params)
 
     def _round_budget(self) -> int | None:
         spr = self.policy.steps_per_round
@@ -557,57 +525,42 @@ class MBEServer:
                 f"without finishing; evicted (other requests remain "
                 f"servable)")
 
-    def _demux_big(self, slot: _BigSlot) -> MBEResult:
-        """Merge the work-stealing workers into one result: counters are
-        summed via ``distributed.totals`` (the fingerprint is an
-        order-independent uint32 sum, so worker-wise addition reproduces
-        the serial value) and collect buffers concatenated."""
+    def _demux_big(self, slot: _BigSlot) -> EngineResult:
+        """Merge the work-stealing workers into one result via
+        ``Engine.finish_workers``: counters are summed across the stacked
+        worker states (the fingerprint is an order-independent uint32 sum,
+        so worker-wise addition reproduces the serial value) and collect
+        buffers concatenated."""
         lane, r = slot.lane, slot.req
-        st = lane.state
-        tot = dd_totals(st)
-        n_max, cs, nodes = tot["n_max"], tot["cs"], tot["nodes"]
-        steps = int(np.asarray(tot["steps"]).sum())
-        bic = None
-        truncated = False
-        if self.collect:
-            bic = []
-            per_n_max = np.asarray(st.n_max)
-            per_out_n = np.asarray(st.out_n)
-            for w in range(lane.n_workers):
-                ws = lane.worker_state(w)
-                bic.extend(self.engine.collected(
-                    lane.cfg, ws, r.graph.n_u, r.graph.n_v))
-                truncated |= int(per_n_max[w]) > int(per_out_n[w])
-            if r.swapped:
-                bic = [(R, L) for L, R in bic]
-        return MBEResult(
-            rid=r.rid, name=r.graph.name, n_max=n_max, cs=cs, nodes=nodes,
-            steps=steps,
+        payload = self.engine.finish_workers(
+            lane.cfg, lane.state, lane.n_workers,
+            n_u=r.graph.n_u, n_v=r.graph.n_v, swapped=r.swapped,
+            collect=self.collect)
+        return self.engine.make_result(
+            rid=r.rid, name=r.graph.name,
             latency_s=slot.queue_s + slot.service_s + slot.compile_s,
-            bicliques=bic, truncated=truncated,
             queue_s=slot.queue_s, service_s=slot.service_s,
-            compile_s=slot.compile_s)
+            compile_s=slot.compile_s, **payload)
 
     # -- request lifecycle ---------------------------------------------
     def _flagged_result(self, req: Request, *, queue_s: float,
                         service_s: float = 0.0, compile_s: float = 0.0,
                         counters: dict | None = None,
                         cancelled: bool = False,
-                        timed_out: bool = False) -> MBEResult:
+                        timed_out: bool = False) -> EngineResult:
         """Terminal result for a request that did not run to completion
         (cancelled or deadline-expired).  ``counters`` carries the partial
         progress read from the evicted lane (zeros for never-placed
-        requests); ``bicliques`` is always None — a partial collect
-        buffer is not an answer."""
-        c = counters or {}
-        res = MBEResult(
+        requests); ``Engine.partial`` shapes it into the engine's payload
+        with nothing materialized — a partial collect buffer is not an
+        answer."""
+        payload = self.engine.partial(
+            counters, cfg=self._engine_config(req.bucket))
+        res = self.engine.make_result(
             rid=req.rid, name=req.graph.name,
-            n_max=int(c.get("n_max", 0)), cs=int(c.get("cs", 0)),
-            nodes=int(c.get("nodes", 0)), steps=int(c.get("steps", 0)),
-            latency_s=queue_s + service_s + compile_s,
-            bicliques=None, truncated=False, queue_s=queue_s,
+            latency_s=queue_s + service_s + compile_s, queue_s=queue_s,
             service_s=service_s, compile_s=compile_s,
-            cancelled=cancelled, timed_out=timed_out)
+            cancelled=cancelled, timed_out=timed_out, **payload)
         self._n_cancelled += int(cancelled)
         self._n_timed_out += int(timed_out)
         self.routing_log.append(dict(
@@ -616,8 +569,7 @@ class MBEServer:
         return res
 
     def _lane_counters(self, lane) -> dict:
-        return dict(n_max=int(lane.n_max), cs=int(lane.cs),
-                    nodes=int(lane.nodes), steps=int(lane.steps))
+        return self.engine.counters(lane)
 
     def _drop_pool_if_idle(self, bucket: BucketSpec) -> None:
         pool = self._pools.get(bucket)
@@ -636,7 +588,7 @@ class MBEServer:
         * **completed / delivered / unknown** — returns ``False`` (too
           late to cancel; the result stands).
 
-        The cancelled request's ``MBEResult`` (flagged ``cancelled=True``)
+        The cancelled request's result (flagged ``cancelled=True``)
         is stashed and delivered by the next ``poll``/``reap``.
         """
         if rid in self._completed:
@@ -665,11 +617,11 @@ class MBEServer:
                 return True
         if self._big is not None and self._big.req.rid == rid:
             slot, self._big = self._big, None
-            tot = dd_totals(slot.lane.state)
-            tot["steps"] = int(np.asarray(tot["steps"]).sum())
+            counters = self.engine.stacked_counters(slot.lane.state)
             self._completed[rid] = self._flagged_result(
                 slot.req, queue_s=slot.queue_s, service_s=slot.service_s,
-                compile_s=slot.compile_s, counters=tot, cancelled=True)
+                compile_s=slot.compile_s, counters=counters,
+                cancelled=True)
             return True
         return False
 
@@ -702,11 +654,11 @@ class MBEServer:
         if big is not None and big.req.deadline is not None \
                 and now >= big.req.deadline:
             self._big = None
-            tot = dd_totals(big.lane.state)
-            tot["steps"] = int(np.asarray(tot["steps"]).sum())
+            counters = self.engine.stacked_counters(big.lane.state)
             self._completed[big.req.rid] = self._flagged_result(
                 big.req, queue_s=big.queue_s, service_s=big.service_s,
-                compile_s=big.compile_s, counters=tot, timed_out=True)
+                compile_s=big.compile_s, counters=counters,
+                timed_out=True)
 
     # ------------------------------------------------------------------
     def _poll_once(self) -> None:
@@ -734,7 +686,7 @@ class MBEServer:
                 del self._pools[bucket]    # fully drained; next wave may
                 #                            plan a different lane count
 
-    def _take_completed(self) -> dict[int, MBEResult]:
+    def _take_completed(self) -> dict[int, EngineResult]:
         out, self._completed = self._completed, {}
         if out:
             for sink in self._sinks:
@@ -742,14 +694,14 @@ class MBEServer:
         return out
 
     def add_completion_sink(self, fn) -> None:
-        """Register a callable invoked with every ``{rid: MBEResult}``
+        """Register a callable invoked with every ``{rid: result}``
         batch at delivery time — whichever caller drove the scheduling
         loop (``poll``/``drain``/``serve``/``reap``).  This is how
         ``MBEClient`` keeps its futures coherent even when the low-level
         server surface is driven directly."""
         self._sinks.append(fn)
 
-    def reap(self) -> dict[int, MBEResult]:
+    def reap(self) -> dict[int, EngineResult]:
         """Deliver results stashed since the last poll/reap WITHOUT running
         a scheduling round (cancellations and step-cap survivors land here
         between polls)."""
@@ -759,13 +711,13 @@ class MBEServer:
         """Whether any request is pending or in flight."""
         return self._has_work()
 
-    def poll(self) -> dict[int, MBEResult]:
+    def poll(self) -> dict[int, EngineResult]:
         """One scheduling round; returns {rid: result} for requests that
         finished (including any stashed by an earlier round that raised)."""
         self._poll_once()
         return self._take_completed()
 
-    def drain(self) -> dict[int, MBEResult]:
+    def drain(self) -> dict[int, EngineResult]:
         """Serve everything pending; returns {rid: result}.  After a
         step-cap RuntimeError, calling ``drain`` again serves the
         surviving requests and returns any stashed results."""
@@ -773,11 +725,11 @@ class MBEServer:
             self._poll_once()
         return self._take_completed()
 
-    def flush(self) -> dict[int, MBEResult]:
+    def flush(self) -> dict[int, EngineResult]:
         """Legacy whole-queue entry point (thin wrapper over ``drain``)."""
         return self.drain()
 
-    def serve(self, graphs: list[BipartiteGraph]) -> list[MBEResult]:
+    def serve(self, graphs: list[BipartiteGraph]) -> list[EngineResult]:
         """Submit a whole stream and drain; results in submit order."""
         rids = [self.admit(g) for g in graphs]
         res = self.drain()

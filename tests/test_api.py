@@ -52,12 +52,15 @@ def test_public_import_surface():
 
 
 def test_engine_registry():
-    assert {"dense", "compact"} <= set(list_engines())
+    assert {"dense", "compact", "count", "mce"} <= set(list_engines())
     assert get_engine("dense").name == "dense"
     eng = get_engine("compact")
     assert get_engine(eng) is eng                 # instances pass through
-    with pytest.raises(KeyError, match="unknown engine"):
+    # unknown names raise ValueError NAMING the available engines
+    with pytest.raises(ValueError, match="available engines"):
         get_engine("nonexistent")
+    with pytest.raises(ValueError, match="available engines"):
+        MBEOptions(engine="nonexistent")
 
 
 def test_options_subsume_bucket_policy():

@@ -13,6 +13,11 @@ from repro.models.layers import init_params
 from repro.training.optimizer import adamw
 from repro.training.step import make_train_step
 
+# seed-era LM infrastructure suite: quarantined from the tier-1
+# fast lane (pyproject addopts deselects seed_lm); CI's full-suite
+# leg still runs it
+pytestmark = pytest.mark.seed_lm
+
 
 def _batch(cfg, B=2, S=32, seed=0):
     rng = np.random.default_rng(seed)

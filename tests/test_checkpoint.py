@@ -12,6 +12,11 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager, latest_step, restore, save
 from repro.checkpoint.store import _COMMIT
 
+# seed-era LM infrastructure suite: quarantined from the tier-1
+# fast lane (pyproject addopts deselects seed_lm); CI's full-suite
+# leg still runs it
+pytestmark = pytest.mark.seed_lm
+
 
 def _tree(seed=0):
     rng = np.random.default_rng(seed)

@@ -10,6 +10,11 @@ from repro.datapipe import (DataConfig, MemmapSource, SyntheticSource,
                             make_pipeline)
 from repro.datapipe.pipeline import _feistel_perm
 
+# seed-era LM infrastructure suite: quarantined from the tier-1
+# fast lane (pyproject addopts deselects seed_lm); CI's full-suite
+# leg still runs it
+pytestmark = pytest.mark.seed_lm
+
 
 def _cfg(**kw):
     d = dict(batch=8, seq_len=16, vocab=101, seed=3)

@@ -1,0 +1,124 @@
+"""Maximal clique enumeration engine (``repro.core.engine_mce``) against
+the recursive Bron–Kerbosch oracle, and the MCE workload served through
+every route of the serving stack via the same ``MBEClient`` front door.
+
+MCE runs on *unipartite* graphs embedded as square symmetric bipartite
+adjacencies (``repro.core.graph.unipartite_graph``); the engine reuses
+the bitset kernels and the fused Pallas select dispatch of the MBE
+engines unchanged.
+"""
+import pytest
+
+from repro import CliqueResult, MBEClient, MBEOptions, unipartite_graph
+from repro.baselines.oracles import (cliques_to_key_set,
+                                     enumerate_maximal_cliques)
+from repro.core.engine import get_engine
+from repro.data.generators import random_unipartite
+from repro.serving import BucketPolicy, MBEServer, ShardedExecutor
+from repro.sharding.axes import mbe_serve_mesh
+
+MCE = get_engine("mce")
+
+
+def _suite():
+    return [random_unipartite(6, 0.5, seed=1),
+            random_unipartite(10, 0.35, seed=2),
+            random_unipartite(13, 0.3, seed=3),
+            random_unipartite(16, 0.25, seed=4),
+            random_unipartite(9, 0.6, seed=5)]
+
+
+# ---------------------------------------------------------------------------
+# differential: engine vs the Bron–Kerbosch oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order_mode", ["deg", "input"])
+def test_mce_matches_oracle(order_mode):
+    for g in _suite():
+        s = MCE.enumerate(g, order_mode=order_mode)
+        ref = enumerate_maximal_cliques(g)
+        assert int(s.n_max) == len(ref), (g.name, order_mode)
+
+
+def test_mce_collected_cliques_match_oracle():
+    for g in _suite():
+        s = MCE.enumerate(g, collect_cap=256)
+        cfg = MCE.make_config(g, collect_cap=256)
+        got = set(MCE.collected(cfg, s, g.n_u, g.n_v))
+        assert got == cliques_to_key_set(enumerate_maximal_cliques(g)), \
+            g.name
+
+
+def test_mce_fused_pallas_path_byte_identical():
+    """kernel_impl='pallas' routes candidate selection through
+    fused_select_packed (interpret mode off-TPU) and must be
+    byte-identical to the unfused jnp path."""
+    for g in _suite()[:3]:
+        a = MCE.enumerate(g, kernel_impl="jnp")
+        b = MCE.enumerate(g, kernel_impl="pallas")
+        assert (int(a.n_max), int(a.cs)) == (int(b.n_max), int(b.cs)), \
+            g.name
+
+
+def test_mce_rejects_non_square():
+    from _graphs import random_graph
+    with pytest.raises(ValueError, match="n_u == n_v"):
+        MCE.enumerate(random_graph(4, 6, 0.5, 0))
+
+
+def test_unipartite_graph_embed():
+    g = unipartite_graph(3, [(0, 1), (1, 2), (2, 2)])  # self-loop dropped
+    assert g.n_u == g.n_v == 3
+    es = {tuple(e) for e in g.edges}
+    assert es == {(0, 1), (1, 0), (1, 2), (2, 1)}
+
+
+# ---------------------------------------------------------------------------
+# serving: the three routes, all through the one front door
+# ---------------------------------------------------------------------------
+
+def test_mce_serves_local_pool_with_collect():
+    graphs = _suite()
+    client = MBEClient(MBEOptions(engine="mce", collect=True,
+                                  collect_cap=256))
+    results = client.enumerate_many(graphs)
+    for g, r in zip(graphs, results):
+        assert isinstance(r, CliqueResult)
+        ref = enumerate_maximal_cliques(g)
+        assert r.status == "done" and r.n_max == len(ref), g.name
+        assert not r.truncated
+        assert set(r.cliques) == cliques_to_key_set(ref), g.name
+        assert r.metric == r.n_max
+
+
+def test_mce_big_graph_route():
+    g = random_unipartite(14, 0.35, seed=11)
+    client = MBEClient(MBEOptions(engine="mce", big_graph_threshold=1,
+                                  steps_per_round=64, big_workers=4))
+    r = client.enumerate(g)
+    assert isinstance(r, CliqueResult)
+    assert r.n_max == len(enumerate_maximal_cliques(g))
+    routes = [e["route"] for e in client.routing_log
+              if e["event"] == "route"]
+    assert routes == ["big"]
+
+
+def test_mce_sharded_mesh_route():
+    g = random_unipartite(11, 0.4, seed=12)
+    srv = MBEServer(BucketPolicy(mode="pow2"), engine="mce",
+                    executor=ShardedExecutor(mbe_serve_mesh(1)))
+    rid = srv.admit(g)
+    res = srv.drain()[rid]
+    assert isinstance(res, CliqueResult)
+    assert res.n_max == len(enumerate_maximal_cliques(g))
+
+
+def test_mce_non_square_bucket_padding_is_safe():
+    """pow2 bucketing may pad the V side past the U side; the MCE context
+    only reads U-side widths, so a non-square BUCKET (square graph) must
+    not change results."""
+    g = random_unipartite(9, 0.45, seed=13)   # pow2 bucket pads to 16x16+
+    for mode in ("exact", "pow2"):
+        r = MBEClient(MBEOptions(engine="mce",
+                                 bucket_mode=mode)).enumerate(g)
+        assert r.n_max == len(enumerate_maximal_cliques(g)), mode

@@ -13,6 +13,11 @@ from _hyp import given, settings, st
 from repro.kernels.flash_attention.ops import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 
+# seed-era LM infrastructure suite: quarantined from the tier-1
+# fast lane (pyproject addopts deselects seed_lm); CI's full-suite
+# leg still runs it
+pytestmark = pytest.mark.seed_lm
+
 
 def _rand(shape, dtype, seed):
     rng = np.random.default_rng(seed)

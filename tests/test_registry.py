@@ -1,0 +1,125 @@
+"""Engine registry + engine identity in the serving stack:
+
+* duplicate registration fails loudly (no silent last-wins overwrite);
+* executable-cache keys are engine-qualified — the four builtin engines
+  never collide under an identical (cfg, batch, budget) request;
+* cancel/deadline lifecycle flags come back in each engine's OWN result
+  type (CountResult / CliqueResult), through the same flagged-result
+  path the MBE engines use.
+"""
+import time
+
+import pytest
+from _graphs import random_graph
+
+from repro import CliqueResult, CountResult, engines
+from repro.core.engine import get_engine, list_engines, register_engine
+from repro.data.generators import random_unipartite
+from repro.serving import BucketPolicy, MBEServer
+from repro.serving.cache import ExecutableCache
+
+ALL = ("compact", "count", "dense", "mce")
+
+
+def test_builtins_registered():
+    assert set(ALL) <= set(list_engines())
+    assert engines() == list_engines()          # the repro.engines() alias
+
+
+def test_duplicate_registration_raises():
+    from repro.core.engine_count import CountEngine
+    orig = get_engine("count")
+    with pytest.raises(ValueError, match="already registered"):
+        register_engine(CountEngine())
+    assert get_engine("count") is orig          # registry unharmed
+    assert register_engine(orig) is orig        # same instance: no-op
+    # deliberate replacement is allowed, then restore
+    fresh = CountEngine()
+    try:
+        assert register_engine(fresh, override=True) is fresh
+        assert get_engine("count") is fresh
+    finally:
+        register_engine(orig, override=True)
+    assert get_engine("count") is orig
+
+
+def test_unknown_engine_names_available():
+    with pytest.raises(ValueError) as ei:
+        get_engine("nope")
+    msg = str(ei.value)
+    for name in ALL:
+        assert name in msg
+
+
+# ---------------------------------------------------------------------------
+# engine-qualified executable-cache keys
+# ---------------------------------------------------------------------------
+
+def test_cache_keys_never_collide_across_engines():
+    """The SAME (cfg, batch, budget) requested for all four engines must
+    produce four distinct cache entries (EngineConfig is shared between
+    engines, so an unqualified entry would serve one engine's executable
+    under another's name)."""
+    dense = get_engine("dense")
+    cfg = dense.config(16, 32, 18)              # one bucket, one config
+    cache = ExecutableCache()
+    for name in ALL:
+        cache.get_round(cfg, 4, 64, engine=get_engine(name))
+    assert cache.misses == len(ALL) and cache.hits == 0
+    # identical re-requests hit their own entries, never a neighbor's
+    for name in ALL:
+        cache.get_round(cfg, 4, 64, engine=get_engine(name))
+    assert cache.misses == len(ALL) and cache.hits == len(ALL)
+
+
+def test_dense_keeps_legacy_bare_key():
+    """The dense engine keeps the pre-registry bare-EngineConfig key, so
+    landing the registry did not invalidate existing caches."""
+    dense = get_engine("dense")
+    cfg = dense.config(16, 32, 18)
+    cache = ExecutableCache()
+    cache.get_round(cfg, 4, None)               # engine omitted = dense
+    cache.get_round(cfg, 4, None, engine=dense)
+    assert (cache.misses, cache.hits) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle flags in engine-typed results
+# ---------------------------------------------------------------------------
+
+def test_cancel_returns_count_result():
+    srv = MBEServer(BucketPolicy(mode="pow2", steps_per_round=8),
+                    engine="count", engine_params=dict(count_pq=(2, 3)))
+    rid = srv.admit(random_graph(10, 20, 0.2, 0))
+    assert srv.cancel(rid) is True
+    res = srv.reap()[rid]
+    assert isinstance(res, CountResult)
+    assert res.cancelled and res.status == "cancelled"
+    assert res.count == 0 and res.metric == 0
+    assert (res.p, res.q) == (2, 3)             # cfg identity preserved
+
+
+def test_cancel_returns_clique_result():
+    srv = MBEServer(BucketPolicy(mode="pow2", steps_per_round=8),
+                    engine="mce")
+    rid = srv.admit(random_unipartite(10, 0.3, seed=1))
+    assert srv.cancel(rid) is True
+    res = srv.reap()[rid]
+    assert isinstance(res, CliqueResult)
+    assert res.cancelled and res.status == "cancelled"
+    assert res.n_max == 0 and res.cliques is None
+
+
+@pytest.mark.parametrize("engine,g,rtype", [
+    ("count", random_graph(10, 20, 0.2, 2), CountResult),
+    ("mce", random_unipartite(10, 0.3, seed=3), CliqueResult),
+])
+def test_deadline_returns_typed_timed_out(engine, g, rtype):
+    srv = MBEServer(BucketPolicy(mode="pow2", steps_per_round=8),
+                    engine=engine)
+    rid = srv.admit(g, deadline_s=1e-6)
+    time.sleep(0.01)                            # let the deadline pass
+    res = srv.drain()[rid]
+    assert isinstance(res, rtype)
+    assert res.timed_out and res.status == "timed_out"
+    assert res.metric == 0

@@ -15,6 +15,11 @@ from repro.models import model as M
 from repro.sharding import axes as A
 from repro.sharding.auto import make_rules
 
+# seed-era LM infrastructure suite: quarantined from the tier-1
+# fast lane (pyproject addopts deselects seed_lm); CI's full-suite
+# leg still runs it
+pytestmark = pytest.mark.seed_lm
+
 
 class _FakeMesh:
     """Only .shape / axis names are consulted by make_rules' guards."""

@@ -17,6 +17,11 @@ from repro.training.optimizer import (adamw, apply_updates,
                                       global_norm)
 from repro.training.step import loss_fn, make_train_step
 
+# seed-era LM infrastructure suite: quarantined from the tier-1
+# fast lane (pyproject addopts deselects seed_lm); CI's full-suite
+# leg still runs it
+pytestmark = pytest.mark.seed_lm
+
 
 def _setup(arch="qwen3-1.7b", seed=0):
     cfg = get_smoke(arch)
