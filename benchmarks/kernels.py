@@ -1,6 +1,6 @@
 """Kernel microbenchmark: the fused step-kernel path vs the unfused ops.
 
-Three levels, all emitted into one ``--json`` artifact (``BENCH_6.json``
+Four levels, all emitted into one ``--json`` artifact (``BENCH_8.json``
 is the committed baseline — the perf trajectory for the enumeration hot
 step):
 
@@ -19,6 +19,14 @@ step):
   unroll (the multi-step compiled-segment knob — backed by the
   VMEM-resident segment kernel on the pallas path): polls, wall,
   steps/sec.
+* **segment_pool level** — a B-lane worker pool driven through
+  ``run_batch`` at pool sizes x ``steps_per_call``: ``pool`` = the
+  multi-lane resident pool kernel (ONE launch advances every lane a
+  segment), ``vmap`` = the legacy vmap-of-single-lane layout
+  (``resident_lanes=0``), plus the jnp reference.  All variants are
+  asserted byte-identical per lane in-run; ``--regress`` additionally
+  enforces pool >= ~0.8x vmap steps/s at pool sizes >= 8 so a pool-path
+  slowdown hard-fails CI.
 
 On CPU the pallas impl runs in **interpret mode**, so parity (or worse)
 is expected there — the artifact records ``backend`` and carries BOTH
@@ -32,12 +40,13 @@ Slowdowns beyond ``--regress-tol`` HARD-FAIL when the baseline was
 recorded on the same backend; cross-backend comparisons only warn (an
 interpret-mode CPU wall says nothing about a TPU wall).
 
-  python -m benchmarks.kernels --json BENCH_6.json
-  python -m benchmarks.kernels --smoke --regress BENCH_6.json
+  python -m benchmarks.kernels --json BENCH_8.json
+  python -m benchmarks.kernels --smoke --regress BENCH_8.json
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -221,17 +230,123 @@ def bench_segments(g, steps_per_round: int, unrolls: list[int],
 
 
 # ---------------------------------------------------------------------------
+# segment_pool level: multi-lane pool kernel vs vmap-of-single-lane
+# ---------------------------------------------------------------------------
+
+def _pool_state(cfg, n_u: int, lanes: int):
+    """B-lane batch over disjoint root chunks (equal t_len, ragged
+    n_tasks) — the distributed runner's per-device worker layout."""
+    chunks = np.array_split(np.arange(n_u, dtype=np.int32), lanes)
+    t_len = max(len(c) for c in chunks)
+    states = []
+    for c in chunks:
+        t = np.full(t_len, -1, dtype=np.int32)
+        t[: len(c)] = c
+        states.append(ed.init_state(cfg, t)._replace(
+            n_tasks=jnp.int32(len(c))))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def bench_segment_pool(g, steps_per_round: int, pools: list[int],
+                       unrolls: list[int], repeats: int) -> list:
+    eng = get_engine("dense")
+    rows = []
+    for pool in pools:
+        for unroll in unrolls:
+            ref = None
+            for variant, impl, lanes_knob in (
+                    ("pool", "pallas", "auto"),
+                    ("vmap", "pallas", 0),
+                    ("vmap", "jnp", 0)):
+                cfg = dataclasses.replace(
+                    eng.make_config(g, kernel_impl=impl),
+                    resident_lanes=lanes_knob)
+                if variant == "pool":
+                    assert ed.pool_lanes(cfg, pool) == pool, \
+                        f"pool gate rejected B={pool} on {g.name}"
+                ctx = eng.make_context(g, cfg)
+                s0 = _pool_state(cfg, g.n_u, pool)
+                runner = jax.jit(lambda s, c=ctx, cf=cfg, u=unroll:
+                                 ed.run_batch(c, cf, s,
+                                              max_steps=steps_per_round,
+                                              unroll=u))
+
+                def drive(s):
+                    polls = 0
+                    while not bool(jnp.all(ed._done(s))):
+                        s = runner(s)
+                        polls += 1
+                    return jax.block_until_ready(s), polls
+
+                drive(s0)                   # compile + warm
+                walls, polls = [], 0
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    out, polls = drive(s0)
+                    walls.append(time.perf_counter() - t0)
+                wall = min(walls)
+                key = (np.asarray(out.n_max).tolist(),
+                       np.asarray(out.cs).tolist(),
+                       np.asarray(out.steps).tolist())
+                if ref is None:
+                    ref = key
+                assert key == ref, (f"pool={pool} x{unroll} "
+                                    f"{variant}/{impl} diverged per lane")
+                steps = int(np.asarray(out.steps, dtype=np.int64).sum())
+                rows.append(dict(
+                    level="segment_pool", graph=g.name, pool=pool,
+                    steps_per_round=steps_per_round,
+                    steps_per_call=unroll, variant=variant, impl=impl,
+                    polls=polls, steps=steps, wall_s=round(wall, 4),
+                    steps_per_s=round(steps / wall, 1)))
+                print(f"[kernels] segment_pool {g.name:12s} B={pool:2d} "
+                      f"x{unroll:2d}/call {variant:4s}/{impl:6s}: "
+                      f"{polls:4d} polls, {wall:8.4f}s "
+                      f"({steps / wall:10.1f} steps/s)")
+    return rows
+
+
+def pool_parity_check(rows: list, min_pool: int = 8,
+                      floor: float = 0.8) -> int:
+    """The acceptance gate for the multi-lane pool kernel: at pool sizes
+    >= ``min_pool`` the one-launch pool path must hold >= ``floor`` x
+    the vmap-of-single-lane steps/s ON THE SAME RUN (both pallas, same
+    backend, so the comparison is launch-overhead apples to apples).
+    Returns the number of failures."""
+    by_key = {}
+    for r in rows:
+        if r.get("level") == "segment_pool" and r["impl"] == "pallas":
+            by_key[(r["pool"], r["steps_per_call"], r["variant"])] = \
+                r["steps_per_s"]
+    failures = 0
+    for (pool, spc, variant), v in sorted(by_key.items()):
+        if variant != "pool" or pool < min_pool:
+            continue
+        ref = by_key.get((pool, spc, "vmap"))
+        if not ref:
+            continue
+        ratio = v / ref
+        bad = ratio < floor
+        print(f"[kernels] pool parity B={pool:2d} x{spc:2d}/call: "
+              f"pool {v:.1f} vs vmap {ref:.1f} steps/s "
+              f"({ratio:.2f}x){'  FAIL' if bad else ''}")
+        failures += bad
+    return failures
+
+
+# ---------------------------------------------------------------------------
 # --regress: wall-time comparison against a committed baseline artifact
 # ---------------------------------------------------------------------------
 
 def regress_check(rows: list, backend: str, baseline_path: str,
                   tol: float) -> int:
     """Compare current op-level wall times against ``baseline_path`` per
-    ``(op, variant, impl, n, w)`` key.  Returns the number of HARD
-    failures: slowdowns beyond ``tol`` x with both runs on the same
-    backend.  Cross-backend slowdowns (or keys missing on either side)
-    only warn — the artifact schema carries both impls precisely so runs
-    from different platforms can coexist in one trajectory."""
+    ``(op, variant, impl, n, w)`` key, and segment_pool-level wall times
+    per ``(pool, steps_per_call, variant, impl)``.  Returns the number
+    of HARD failures: slowdowns beyond ``tol`` x with both runs on the
+    same backend.  Cross-backend slowdowns (or keys missing on either
+    side) only warn — the artifact schema carries both impls precisely
+    so runs from different platforms can coexist in one trajectory."""
     with open(baseline_path) as f:
         base = json.load(f)
     base_backend = base.get("summary", {}).get("backend")
@@ -239,6 +354,11 @@ def regress_check(rows: list, backend: str, baseline_path: str,
     base_walls = {
         (r["op"], r["variant"], r["impl"], r["n"], r["w"]): r["wall_us"]
         for r in base.get("rows", []) if r.get("level") == "op"}
+    base_pool = {
+        (r["pool"], r["steps_per_call"], r["variant"], r["impl"]):
+            r["wall_s"]
+        for r in base.get("rows", [])
+        if r.get("level") == "segment_pool"}
     failures = compared = 0
     # the full per-key ratio table is printed on PASS too — a silent
     # "0 failures" hides drift creeping toward the tolerance
@@ -260,6 +380,22 @@ def regress_check(rows: list, backend: str, baseline_path: str,
         print(f"  {key[0]:<14} {key[1]:<10} {key[2]:<7} {key[3]:>5} "
               f"{key[4]:>3} {ref:>9.1f} {r['wall_us']:>9.1f} "
               f"{ratio:>5.2f}x{tag}")
+        failures += bad and same
+    for r in rows:
+        if r.get("level") != "segment_pool":
+            continue
+        key = (r["pool"], r["steps_per_call"], r["variant"], r["impl"])
+        ref = base_pool.get(key)
+        if ref is None or ref <= 0:
+            continue
+        compared += 1
+        ratio = r["wall_s"] / ref
+        bad = ratio > tol
+        tag = ("" if not bad
+               else "  FAIL" if same else "  warn (cross-backend)")
+        print(f"  {'segment_pool':<14} {key[2]:<10} {key[3]:<7} "
+              f"B={key[0]:>3} {key[1]:>3} {ref * 1e3:>9.1f} "
+              f"{r['wall_s'] * 1e3:>9.1f} {ratio:>5.2f}x{tag}")
         failures += bad and same
     print(f"[kernels] regress vs {baseline_path}: {compared} keys "
           f"compared (baseline backend={base_backend}, current={backend}"
@@ -314,6 +450,15 @@ def main() -> int:
     rows += engine_rows
     rows += bench_segments(graphs[0], args.steps_per_round,
                            [1, 4] if args.smoke else [1, 4, 16], repeats)
+    # smoke keeps the pool grid a subset of the full grid — and the SAME
+    # graph — so CI's --regress always finds its segment_pool keys in
+    # the baseline and the wall ratios compare like with like
+    pool_graph = random_bipartite(16, 32, p=0.3, seed=0, name="rand-16x32")
+    rows += bench_segment_pool(
+        pool_graph, args.steps_per_round,
+        pools=[1, 8] if args.smoke else [1, 4, 8, 16],
+        unrolls=[1, 16] if args.smoke else [1, 4, 16],
+        repeats=repeats)
 
     # headline: per-impl engine-level steps/sec (geomean over graphs x
     # engines) + the fused:unfused ratio — the number a TPU run moves
@@ -338,8 +483,10 @@ def main() -> int:
                       f, indent=2, sort_keys=True)
         print(f"[kernels] wrote {args.json}")
     if args.regress:
-        return 1 if regress_check(rows, summary["backend"], args.regress,
-                                  args.regress_tol) else 0
+        bad = regress_check(rows, summary["backend"], args.regress,
+                            args.regress_tol)
+        bad += pool_parity_check(rows)
+        return 1 if bad else 0
     return 0
 
 

@@ -129,9 +129,11 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
                  mean_latency_s=round(sum(base_lats) / len(base_lats), 4),
                  compiles=n_requests, cache_hits=0, batches=n_requests,
                  pad_lanes=0, occupancy=1.0, idle_lane_steps=0,
-                 # one "poll" per graph: the whole-run jit call
+                 # one "poll" per graph: the whole-run jit call — and
+                 # exactly one kernel-loop launch per poll
                  steps_per_s=round(base_steps / base_wall, 1),
-                 steps_per_poll=round(base_steps / n_requests, 1))]
+                 steps_per_poll=round(base_steps / n_requests, 1),
+                 launches_per_poll=1.0)]
     print(f"[serving] baseline ({engine}): {n_requests} graphs, "
           f"{n_requests} compiles, {base_wall:.2f}s")
 
@@ -167,15 +169,19 @@ def run(n_requests: int = 32, seed: int = 0, max_batch: int = 8,
                    idle_lane_steps=st["idle_lane_steps"],
                    # kernel-level vs scheduler-level wins, separable:
                    # steps/s moves with the kernel path, occupancy and
-                   # steps/poll with the scheduler
+                   # steps/poll with the scheduler, launches/poll with
+                   # the pool-kernel layout (1 launch per segment when
+                   # the multi-lane resident pool is active, B otherwise)
                    steps_per_s=round(st["busy_steps"] / wall, 1),
-                   steps_per_poll=round(st["steps_per_poll"], 1))
+                   steps_per_poll=round(st["steps_per_poll"], 1),
+                   launches_per_poll=round(st["launches_per_poll"], 1))
         rows.append(row)
         print(f"[serving] {mode}: {st['misses']} compiles "
               f"({st['hits']} hits), {st['batches']} batches, "
               f"occupancy {st['occupancy']:.2f}, "
               f"{st['busy_steps'] / wall:.0f} steps/s "
-              f"({st['steps_per_poll']:.0f} steps/poll), "
+              f"({st['steps_per_poll']:.0f} steps/poll, "
+              f"{st['launches_per_poll']:.1f} launches/poll), "
               f"{wall:.2f}s, results byte-identical to per-graph runs")
         if mode in ("linear", "pow2"):
             assert 2 * st["misses"] <= n_requests, \
@@ -261,12 +267,15 @@ def run_skewed(n_requests: int = 12, seed: int = 0, max_batch: int = 4,
                          idle_lane_steps=st["idle_lane_steps"],
                          occupancy=round(st["occupancy"], 3),
                          steps_per_s=round(st["busy_steps"] / wall, 1),
-                         steps_per_poll=round(st["steps_per_poll"], 1)))
+                         steps_per_poll=round(st["steps_per_poll"], 1),
+                         launches_per_poll=round(
+                             st["launches_per_poll"], 1)))
         print(f"[serving-skewed] {label}: occupancy {st['occupancy']:.3f} "
               f"({st['busy_steps']}/{st['total_lane_steps']} lane-steps, "
               f"{st['idle_lane_steps']} idle), "
               f"{st['busy_steps'] / wall:.0f} steps/s "
-              f"({st['steps_per_poll']:.0f} steps/poll), "
+              f"({st['steps_per_poll']:.0f} steps/poll, "
+              f"{st['launches_per_poll']:.1f} launches/poll), "
               f"{st['misses']} compiles, "
               f"{st['batches']} rounds, results identical to per-graph runs")
         if label == "continuous":
@@ -363,6 +372,8 @@ def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
                          occupancy=round(st["occupancy"], 3),
                          steps_per_s=round(st["busy_steps"] / wall, 1),
                          steps_per_poll=round(st["steps_per_poll"], 1),
+                         launches_per_poll=round(
+                             st["launches_per_poll"], 1),
                          big_workers=len(busy), big_workers_busy=spread,
                          big_imbalance=round(st["big_imbalance"], 3),
                          big_busy_per_worker=busy.tolist()))
@@ -391,6 +402,7 @@ def _write_json(path: str, mode: str, rows: list, requests: int) -> None:
         occupancy=head.get("occupancy"),
         steps_per_s=head.get("steps_per_s"),
         steps_per_poll=head.get("steps_per_poll"),
+        launches_per_poll=head.get("launches_per_poll"),
         compiles=head.get("compiles"),
         graphs_per_s=head.get("graphs_per_s"),
         engines_identical=head.get("engines_identical"),

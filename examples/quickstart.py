@@ -61,7 +61,14 @@ for name in mbe_engines:
     assert (r2.n_max, r2.cs) == (res.n_max, res.cs), name
     assert bicliques_to_key_set(r2.bicliques) == \
         bicliques_to_key_set(res.bicliques), name
-print(f"[fig1] engines {mbe_engines} agree byte-identically\n")
+print(f"[fig1] engines {mbe_engines} agree byte-identically")
+
+# pallas path with the multi-lane resident pool: one kernel launch per
+# worker pool per segment instead of one per lane — same bytes out
+rp = MBEClient(MBEOptions(kernel_impl="pallas", resident_lanes="auto",
+                          collect=True, collect_cap=32)).enumerate(g)
+assert (rp.n_max, rp.cs) == (res.n_max, res.cs)
+print("[fig1] resident-pool pallas path agrees byte-identically\n")
 
 # --- the other workloads, same front door ----------------------------------
 # (p,q)-biclique counting: how many 2x2 complete bipartite subgraphs?

@@ -105,6 +105,19 @@ class MBEOptions:
     #                               elsewhere (kernels.dispatch)
     collect: bool = False         # decode bicliques into results
     collect_cap: int = 1          # collect buffer rows per lane
+    resident_lanes: int | str = "auto"   # multi-lane resident pool
+    #                               kernel (kernels.resident_pool) on the
+    #                               pallas+resident path: 'auto' = one
+    #                               launch per pool whenever the per-cell
+    #                               VMEM gate admits it; int k >= 2 caps
+    #                               the pool width; 0/1 pins the legacy
+    #                               one-launch-per-lane vmap layout
+    resident_rebalance: bool = False     # pool path: reassign surplus
+    #                               step budget from finished lanes to
+    #                               busy ones at segment boundaries (the
+    #                               scoreboard rebalance; trajectory
+    #                               intentionally diverges from the
+    #                               fixed-budget vmap path)
 
     # -- shape bucketing / batching (serving.buckets.BucketPolicy) -----
     bucket_mode: str = "pow2"     # 'pow2' | 'linear' | 'exact'
@@ -180,7 +193,9 @@ class MBEOptions:
             executor=self.make_executor(),
             cache_capacity=self.cache_capacity,
             engine=get_engine(self.engine),
-            engine_params=self.engine_params())
+            engine_params=self.engine_params(),
+            resident_lanes=self.resident_lanes,
+            resident_rebalance=self.resident_rebalance)
 
 
 class MBEFuture:

@@ -182,6 +182,15 @@ class Engine(abc.ABC):
                                    unroll=unroll),
             in_axes=(ax, 0))(ctx, s)
 
+    def pool_lanes(self, cfg: EngineConfig, batch: int) -> int:
+        """Pool width this engine's ``run_batch`` would run ``batch``
+        lanes at via a multi-lane resident kernel (one launch per pool),
+        or 0 for the legacy one-launch-per-lane layout.  The cache and
+        executors extend executable keys with ``("pool", width)`` ONLY
+        when this is nonzero, so engines without a pool path keep their
+        legacy keys byte-for-byte."""
+        return 0
+
     # -- collect / decode hooks ----------------------------------------
     def done(self, s) -> jax.Array:
         """Whether a worker state has finished all its tasks (works
@@ -318,6 +327,9 @@ class DenseEngine(Engine):
                   unroll=1):
         return ed.run_batch(ctx, cfg, s, max_steps=max_steps,
                             ctx_batched=ctx_batched, unroll=unroll)
+
+    def pool_lanes(self, cfg, batch):
+        return ed.pool_lanes(cfg, batch)
 
 
 class CompactEngine(Engine):

@@ -63,6 +63,8 @@ from repro.kernels.dispatch import resolve_impl
 from repro.kernels.fused_check.ops import fused_check_packed
 from repro.kernels.fused_select.ops import fused_select_packed
 from repro.kernels.intersect_count.ops import intersect_count
+from repro.kernels.resident_pool.ops import (resident_pool_segment,
+                                             resident_pool_supported)
 from repro.kernels.resident_step.ops import (resident_segment,
                                              resident_supported)
 
@@ -101,6 +103,22 @@ class EngineConfig:
     #                             part of the shared config so it rides
     #                             the executable-cache key like every
     #                             other semantic knob
+    resident_lanes: int | str = "auto"   # pallas+resident path only: back
+    #                             run_batch with the multi-lane pool
+    #                             kernel (kernels.resident_pool — one
+    #                             launch per pool, grid over lanes).
+    #                             'auto' = whenever the per-cell gate
+    #                             passes; int k >= 2 = only for pools up
+    #                             to k lanes; 0/1 = never (legacy
+    #                             vmap-of-single-lane)
+    resident_rebalance: bool = False     # pool path only: at each segment
+    #                             boundary, reassign surplus step budget
+    #                             from finished lanes to busy ones via
+    #                             the kernel's scoreboard (host-side
+    #                             first iteration of in-kernel stealing).
+    #                             Off by default — it intentionally
+    #                             diverges from the fixed-budget vmap
+    #                             trajectory
 
     @property
     def fused(self) -> bool:
@@ -503,6 +521,90 @@ def run(g: GraphContext, cfg: EngineConfig, s: DenseState,
     return jax.lax.while_loop(active, body, s)
 
 
+def pool_lanes(cfg: EngineConfig, batch: int) -> int:
+    """Pool width the multi-lane resident kernel would run ``batch``
+    lanes at, or 0 when the legacy vmap-of-single-lane path applies.
+
+    The pool path needs the resident pallas path active
+    (``fused & resident``), an opted-in ``resident_lanes`` (``'auto'``
+    or an int cap >= the batch), and the per-grid-cell VMEM gate
+    (``resident_pool_supported`` — per-cell state bytes + single-tile
+    adjacency).  The width is all-or-nothing: a pool either advances in
+    one launch or falls back entirely, so compiled executables never mix
+    the two layouts.
+    """
+    if batch <= 0 or not (cfg.fused and cfg.resident):
+        return 0
+    rl = cfg.resident_lanes
+    if rl != "auto":
+        if int(rl) < 2 or batch > int(rl):
+            return 0
+    return batch if resident_pool_supported(cfg, batch) else 0
+
+
+# per-lane donations are clamped well under int32 range before summing,
+# so a pool of default-budget (1 << 30) finished lanes cannot overflow
+# the surplus accumulator
+_REBALANCE_CLAMP = jnp.int32(1 << 24)
+
+
+def _rebalance_budgets(start: jax.Array, bud: jax.Array, st: DenseState,
+                       board: jax.Array) -> jax.Array:
+    """Round-boundary budget rebalance from the pool scoreboard.
+
+    Finished lanes donate their unused budget (``bud - used``, clamped);
+    the surplus is split evenly (floor) over busy lanes, so the total
+    granted never exceeds the total donated — the step budget is
+    conserved.  Finished lanes are frozen at ``used``: their remaining
+    budget reads zero in every later round (no double donation) and the
+    kernel's done guard keeps them from advancing regardless.
+    """
+    used = st.steps - start
+    finished = board[:, 0] > 0
+    rem = jnp.clip(bud - used, 0, _REBALANCE_CLAMP)
+    surplus = jnp.sum(jnp.where(finished, rem, 0))
+    n_busy = jnp.maximum(jnp.sum((~finished).astype(jnp.int32)), 1)
+    grant = surplus // n_busy
+    new_bud = jnp.where(finished, used, bud + grant)
+    return jnp.minimum(new_bud, jnp.int32(1 << 30))
+
+
+def _run_batch_pool(g: GraphContext, cfg: EngineConfig, s: DenseState,
+                    budget: int, ctx_batched: bool,
+                    unroll: int) -> DenseState:
+    """Pool-kernel backing for ``run_batch``: ONE launch advances every
+    lane by an ``unroll``-step segment; the while loop runs until every
+    lane is done or out of budget.
+
+    Byte-identity with the vmap path is structural: vmapping ``run``'s
+    while loop lifts it to a single loop whose condition is ``any(lane
+    active)`` with a masked body, and the pool kernel applies the same
+    per-lane ``~done & (steps - start < budget)`` guard internally —
+    exactly the predicate below, with per-lane ``start``/``budget``
+    columns.  With ``cfg.resident_rebalance`` the budgets become mutable
+    loop state fed from the scoreboard (and the trajectory intentionally
+    diverges from the fixed-budget vmap path).
+    """
+    start = s.steps
+    bud0 = jnp.full_like(start, jnp.int32(budget))
+
+    def cond(carry):
+        st, bud = carry
+        return jnp.any((~_done(st)) & (st.steps - start < bud))
+
+    def body(carry):
+        st, bud = carry
+        st2, board = resident_pool_segment(
+            g, cfg, st, start=start, budget=bud, steps_per_call=unroll,
+            ctx_batched=ctx_batched)
+        if cfg.resident_rebalance:
+            bud = _rebalance_budgets(start, bud, st2, board)
+        return st2, bud
+
+    out, _ = jax.lax.while_loop(cond, body, (s, bud0))
+    return out
+
+
 def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
               max_steps: int | None = None,
               ctx_batched: bool = False, unroll: int = 1) -> DenseState:
@@ -518,11 +620,27 @@ def run_batch(g: GraphContext, cfg: EngineConfig, s: DenseState,
       ``(n_u, n_v, depth)`` bucket, one worker each (the serving layer's
       multi-graph batch: lane b enumerates graph b end-to-end).
 
-    Under ``vmap`` the engine's ``while_loop`` runs until every lane is
-    done, masking finished lanes — one jitted call enumerates the whole
-    batch, and the compiled executable depends only on the bucket shape
-    and ``cfg``, never on the graphs themselves (the serving cache's key).
+    On the resident pallas path the batch is advanced by the multi-lane
+    pool kernel whenever ``pool_lanes`` admits it — one launch per
+    segment for the WHOLE pool instead of B vmapped launches.  Otherwise
+    ``vmap`` lifts the engine's ``while_loop`` to run until every lane
+    is done, masking finished lanes.  Either way one jitted call
+    enumerates the whole batch, and the compiled executable depends only
+    on the bucket shape and ``cfg``, never on the graphs themselves (the
+    serving cache's key).
+
+    The vmap fallback applies a batch-aware residency gate: B concurrent
+    single-lane launches pin B state blocks, so when
+    ``resident_supported(cfg, lanes=B)`` fails the batch drops to the
+    per-step fused kernels (byte-identical, still pallas) instead of
+    overcommitting VMEM.
     """
+    B = s.lvl.shape[0]
+    budget = cfg.max_steps if max_steps is None else max_steps
+    if pool_lanes(cfg, B):
+        return _run_batch_pool(g, cfg, s, budget, ctx_batched, unroll)
+    if cfg.resident_active and not resident_supported(cfg, lanes=B):
+        cfg = dataclasses.replace(cfg, resident=False)
     ax = 0 if ctx_batched else None
     return jax.vmap(
         lambda c, st: run(c, cfg, st, max_steps=max_steps, unroll=unroll),

@@ -1,0 +1,12 @@
+"""Multi-lane VMEM-resident segment kernel: one launch per lane pool."""
+from repro.kernels.resident_pool.kernel import B_DONE, B_LEFT, BOARD_SLOTS
+from repro.kernels.resident_pool.ops import (resident_pool_segment,
+                                             resident_pool_state_bytes,
+                                             resident_pool_supported)
+from repro.kernels.resident_pool.ref import resident_pool_segment_ref
+
+__all__ = [
+    "B_DONE", "B_LEFT", "BOARD_SLOTS",
+    "resident_pool_segment", "resident_pool_state_bytes",
+    "resident_pool_supported", "resident_pool_segment_ref",
+]

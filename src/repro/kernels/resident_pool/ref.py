@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the pool segment: vmap of the single-lane oracle.
+
+``resident_segment_ref`` is itself defined in terms of the dense
+engine's unfused step, so byte-identity of the pool kernel against this
+function IS byte-identity against ``jax.vmap`` over guarded jnp steps —
+exactly the legacy ``run_batch`` path the pool replaces.  The scoreboard
+is recomputed from the before/after states with the same formulas the
+kernel uses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.resident_step.ref import resident_segment_ref
+
+
+def resident_pool_segment_ref(g, cfg, s, *, start, budget,
+                              steps_per_call: int = 1,
+                              ctx_batched: bool = False):
+    """Advance every lane of batched state ``s`` by up to
+    ``steps_per_call`` guarded jnp steps; returns ``(state, board)``."""
+    lanes = s.tasks.shape[0]
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (lanes,))
+    budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (lanes,))
+    ax = 0 if ctx_batched else None
+    s2 = jax.vmap(
+        lambda c, st, st0, bud: resident_segment_ref(
+            c, cfg, st, start=st0, budget=bud,
+            steps_per_call=steps_per_call),
+        in_axes=(ax, 0, 0, 0))(g, s, start, budget)
+    adv = s2.steps - s.steps
+    done = (s2.lvl < 0) & (s2.tpos >= s2.n_tasks)
+    board = jnp.stack([done.astype(jnp.int32), steps_per_call - adv],
+                      axis=1)
+    return s2, board

@@ -31,19 +31,31 @@ from repro.kernels.resident_step.kernel import (
 RESIDENT_STATE_BYTES = 6 * 1024 * 1024
 
 
-def resident_state_bytes(cfg, t_len: int | None = None) -> int:
+def resident_state_bytes(cfg, t_len: int | None = None,
+                         lanes: int = 1) -> int:
     """Bytes of VMEM the resident kernel pins for ``cfg`` (context +
-    state + outputs; 4-byte words throughout)."""
+    state + outputs; 4-byte words throughout).
+
+    ``lanes`` scales the per-lane state/output terms for paths that hold
+    several lanes' residency at once: ``run_batch``'s vmap path launches
+    one kernel per lane concurrently (``lanes = pool width``), while the
+    pool kernel's sequential grid caps concurrency at two cells
+    (``resident_pool_state_bytes``).  The shared context is counted once
+    either way.
+    """
     t = cfg.n_u if t_len is None else t_len
     ctx = cfg.n_u * cfg.wv + 3 * cfg.n_u + cfg.wv + t
     state = cfg.depth * (cfg.wv + cfg.n_u + 3 * cfg.wu + 1)
     out = cfg.collect_cap * (cfg.wv + cfg.wu) + SCAL_SLOTS
-    return 4 * (ctx + 2 * state + 2 * out)   # state/out double-buffered
+    # state/out double-buffered per resident lane
+    return 4 * (ctx + lanes * (2 * state + 2 * out))
 
 
-def resident_supported(cfg, t_len: int | None = None) -> bool:
-    """Whether ``cfg``'s enumeration state fits the residency budget."""
-    return resident_state_bytes(cfg, t_len) <= RESIDENT_STATE_BYTES
+def resident_supported(cfg, t_len: int | None = None,
+                       lanes: int = 1) -> bool:
+    """Whether ``lanes`` concurrent copies of ``cfg``'s enumeration
+    state fit the residency budget."""
+    return resident_state_bytes(cfg, t_len, lanes) <= RESIDENT_STATE_BYTES
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "steps_per_call",

@@ -61,6 +61,16 @@ def main(argv=None) -> dict:
                     choices=["auto", "jnp", "pallas"],
                     help="step-kernel path: fused Pallas kernels vs "
                          "unfused jnp ops ('auto' = pallas on TPU)")
+    ap.add_argument("--resident-lanes",
+                    type=lambda v: v if v == "auto" else int(v),
+                    default="auto",
+                    help="pallas path: multi-lane resident pool kernel — "
+                         "'auto' = one launch per worker pool whenever "
+                         "the VMEM gate admits it, int k caps the pool "
+                         "width, 0/1 pins the legacy vmap layout")
+    ap.add_argument("--resident-rebalance", action="store_true",
+                    help="pool path: rebalance surplus step budget from "
+                         "finished to busy workers at segment boundaries")
     ap.add_argument("--no-work-stealing", action="store_true")
     ap.add_argument("--order", default="deg", choices=["deg", "input"])
     ap.add_argument("--verbose", action="store_true")
@@ -87,6 +97,8 @@ def main(argv=None) -> dict:
         engine=args.engine, order_mode=args.order,
         count_p=args.count_p, count_q=args.count_q,
         kernel_impl=args.kernel_impl,
+        resident_lanes=args.resident_lanes,
+        resident_rebalance=args.resident_rebalance,
         bucket_mode="exact",            # one graph: no padding wanted
         big_graph_threshold=1,          # the whole run IS the big route
         steps_per_round=args.steps_per_round,

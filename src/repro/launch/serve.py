@@ -97,6 +97,8 @@ def serve_mbe(args) -> dict:
         engine=args.engine, count_p=args.count_p, count_q=args.count_q,
         bucket_mode=args.policy,
         kernel_impl=args.kernel_impl,
+        resident_lanes=args.resident_lanes,
+        resident_rebalance=args.resident_rebalance,
         max_batch=args.max_batch, steps_per_round=spr,
         steps_per_call=args.steps_per_call,
         big_graph_threshold=args.big_graph_threshold,
@@ -118,7 +120,8 @@ def serve_mbe(args) -> dict:
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
           f"occupancy {stats['occupancy']:.2f}, "
           f"{stats['busy_steps'] / dt:.0f} steps/s "
-          f"({stats['steps_per_poll']:.0f} steps/poll), "
+          f"({stats['steps_per_poll']:.0f} steps/poll, "
+          f"{stats['launches_per_poll']:.1f} launches/poll), "
           f"{dt:.2f}s ({args.requests / dt:.1f} graphs/s)")
     return dict(requests=args.requests, metric=metric, wall_s=dt, **stats)
 
@@ -153,6 +156,17 @@ def serve(argv=None) -> dict:
                     help="MBE: step-kernel path — 'pallas' = fused "
                          "fused_select/fused_check kernels (interpret "
                          "off-TPU), 'auto' = pallas on TPU, jnp elsewhere")
+    ap.add_argument("--resident-lanes",
+                    type=lambda v: v if v == "auto" else int(v),
+                    default="auto",
+                    help="MBE pallas path: multi-lane resident pool "
+                         "kernel — 'auto' = one launch per pool whenever "
+                         "the VMEM gate admits it, int k caps the pool "
+                         "width, 0/1 pins the legacy vmap layout")
+    ap.add_argument("--resident-rebalance", action="store_true",
+                    help="MBE pool path: rebalance surplus step budget "
+                         "from finished to busy lanes at segment "
+                         "boundaries (scoreboard-driven)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="MBE: serve through ShardedExecutor on a 1-D "
                          "mesh over N host devices (0 = LocalExecutor)")

@@ -142,7 +142,9 @@ class ExecutableCache:
         with their name — ``EngineConfig`` is shared between engines, so
         an unqualified compact entry would collide with the dense
         executable for the same bucket.  Likewise ``unroll=1`` keeps the
-        legacy 3-slot key."""
+        legacy 3-slot key, and a ``("pool", width)`` slot is appended
+        ONLY when the engine's multi-lane pool path is active for this
+        (cfg, batch) — legacy keys stay byte-for-byte stable."""
         eng = engine or DENSE
 
         def build():
@@ -155,6 +157,9 @@ class ExecutableCache:
         head = cfg if eng.name == DENSE.name else (eng.name, cfg)
         key = (head, batch, max_steps) if unroll == 1 \
             else (head, batch, max_steps, unroll)
+        pw = eng.pool_lanes(cfg, batch)
+        if pw:
+            key = key + (("pool", pw),)
         return self.get_entry(key, build)
 
     def get(self, cfg: ed.EngineConfig, batch: int) -> CacheEntry:

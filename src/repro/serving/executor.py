@@ -170,6 +170,14 @@ class Executor(abc.ABC):
         iteration inside the round executable (baked into the cache
         key; byte-identical results)."""
 
+    def launches_per_segment(self, pool: LanePool) -> int:
+        """Kernel launches one compiled segment of this pool costs on the
+        resident pallas path: 1 when the engine's multi-lane pool kernel
+        is active for this (cfg, B), else one per lane (the vmap
+        layout).  The scheduler's ``launches_per_poll`` stat multiplies
+        this by the segments a round actually ran."""
+        return 1 if pool.engine.pool_lanes(pool.cfg, pool.B) else pool.B
+
     # -- demux views ----------------------------------------------------
     def lane(self, pool: LanePool, i: int) -> ed.DenseState:
         """Host-readable view of one lane's state (for demux)."""
@@ -287,6 +295,11 @@ class ShardedExecutor(Executor):
                 cfg), B, budget)
         if unroll != 1:
             key = key + (unroll,)
+        # the per-device shard is what run_batch sees inside shard_map,
+        # so the pool path (and the key extension) is per-device-width
+        pw = pool.engine.pool_lanes(cfg, wpd)
+        if pw:
+            key = key + (("pool", pw),)
 
         def build():
             dist = dd.DistConfig(
@@ -308,6 +321,11 @@ class ShardedExecutor(Executor):
             wall_s=wall, compile_s=compile_s,
             adv=np.asarray(telem["busy_steps"]),
             pending=np.asarray(telem["pending"]))
+
+    def launches_per_segment(self, pool: LanePool) -> int:
+        wpd = pool.B // self.n_devices
+        per_dev = 1 if pool.engine.pool_lanes(pool.cfg, wpd) else wpd
+        return self.n_devices * per_dev
 
     def placement(self, n_lanes: int) -> str:
         wpd = n_lanes // self.n_devices

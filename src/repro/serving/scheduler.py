@@ -224,8 +224,8 @@ class _LanePool:
     def run_round(self, server: "MBEServer") -> None:
         """One bounded executor round over all lanes; occupancy
         accounting."""
-        tel = server.executor.run_round(self.pool, server.cache,
-                                        server._round_budget(),
+        budget = server._round_budget()
+        tel = server.executor.run_round(self.pool, server.cache, budget,
                                         unroll=server.policy.steps_per_call)
         exec_s = max(tel.wall_s - tel.compile_s, 0.0)
         adv = tel.adv                                   # per-lane steps
@@ -234,6 +234,18 @@ class _LanePool:
         server._n_rounds += 1
         server._busy_steps += busy
         server._total_lane_steps += self.B * crit
+        # launch accounting: the round's critical path ran ceil(crit/spc)
+        # compiled segments, each costing launches_per_segment kernel
+        # dispatches (1 per pool on the multi-lane path, B on vmap)
+        spc = max(server.policy.steps_per_call, 1)
+        segments = (crit + spc - 1) // spc
+        server._n_launches += \
+            segments * server.executor.launches_per_segment(self.pool)
+        if server.resident_rebalance and budget is not None:
+            # steps a lane ran beyond its own round budget came from
+            # donated surplus (the scoreboard rebalance)
+            server._rebalanced_steps += int(np.maximum(adv - budget,
+                                                       0).sum())
         for i, r in enumerate(self.reqs):
             if r is None:
                 continue
@@ -313,7 +325,9 @@ class MBEServer:
                  cache_capacity: int | None =
                  ExecutableCache.DEFAULT_CAPACITY,
                  engine: str | Engine = "dense",
-                 engine_params: dict | None = None):
+                 engine_params: dict | None = None,
+                 resident_lanes: int | str = "auto",
+                 resident_rebalance: bool = False):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
@@ -321,6 +335,8 @@ class MBEServer:
         self.order_mode = order_mode
         self.impl = impl
         self.kernel_impl = kernel_impl
+        self.resident_lanes = resident_lanes
+        self.resident_rebalance = resident_rebalance
         self.max_graph_steps = max_graph_steps
         self.executor = executor or LocalExecutor()
         self.engine = get_engine(engine)
@@ -338,6 +354,8 @@ class MBEServer:
         self._n_pad_lanes = 0
         self._busy_steps = 0
         self._total_lane_steps = 0
+        self._n_launches = 0
+        self._rebalanced_steps = 0
         self._n_cancelled = 0
         self._n_timed_out = 0
         self._sinks: list = []
@@ -412,6 +430,8 @@ class MBEServer:
             bucket.n_u, bucket.n_v, bucket.depth,
             collect_cap=self.collect_cap, order_mode=self.order_mode,
             impl=self.impl, kernel_impl=self.kernel_impl,
+            resident_lanes=self.resident_lanes,
+            resident_rebalance=self.resident_rebalance,
             **self.engine_params)
 
     def _round_budget(self) -> int | None:
@@ -507,6 +527,15 @@ class MBEServer:
         self._n_rounds += 1
         self._busy_steps += busy
         self._total_lane_steps += slot.lane.n_workers * crit
+        # launch accounting mirrors the pool rounds: inside shard_map
+        # each device advances wpd workers, in ONE pool launch per
+        # segment when the multi-lane kernel is active, else wpd
+        spc = max(self.policy.steps_per_call, 1)
+        segments = (crit + spc - 1) // spc
+        n_dev = int(slot.lane.mesh.shape[slot.lane.axis])
+        wpd = slot.lane.n_workers // n_dev
+        pw = self.engine.pool_lanes(slot.lane.cfg, wpd)
+        self._n_launches += segments * n_dev * (1 if pw else wpd)
         if self._big_busy_per_worker is None:
             self._big_busy_per_worker = np.zeros(slot.lane.n_workers,
                                                  np.int64)
@@ -760,6 +789,15 @@ class MBEServer:
                     steps_per_call=self.policy.steps_per_call,
                     steps_per_poll=(self._busy_steps / self._n_rounds
                                     if self._n_rounds else 0.0),
+                    # the pool-kernel knob + its launch-amortization and
+                    # rebalance ledgers (launches counts kernel dispatches
+                    # on the resident path: 1 per segment per pool when
+                    # the multi-lane kernel is active, 1 per lane on vmap)
+                    resident_lanes=self.resident_lanes,
+                    launches=self._n_launches,
+                    launches_per_poll=(self._n_launches / self._n_rounds
+                                       if self._n_rounds else 0.0),
+                    rebalanced_steps=self._rebalanced_steps,
                     executor=self.executor.name,
                     engine=self.engine.name,
                     cancelled=self._n_cancelled,
