@@ -390,13 +390,18 @@ def run_mixed_mesh(n_small: int = 16, seed: int = 0, max_batch: int = 8,
     return rows
 
 
-def _write_json(path: str, mode: str, rows: list, requests: int) -> None:
+def _write_json(path: str, mode: str, rows: list, requests: int,
+                seed: int = 0) -> None:
     """Machine-readable bench artifact: rows + a flat summary of the
-    headline series (the last row = the configuration under test)."""
+    headline series (the last row = the configuration under test).
+    ``seed`` is recorded so the artifact names the exact stream it
+    measured — re-running with the recorded seed reproduces the same
+    request mix (the trace-replay CI smoke relies on this)."""
     head = rows[-1]
     summary = dict(
         mode=mode,
         requests=requests,
+        seed=seed,
         engine=head.get("engine"),
         wall_s=head.get("wall_s"),
         occupancy=head.get("occupancy"),
@@ -471,7 +476,7 @@ def main() -> int:
         requests = args.requests
     _print_table(rows)
     if args.json:
-        _write_json(args.json, mode, rows, requests)
+        _write_json(args.json, mode, rows, requests, seed=args.seed)
     return 0
 
 

@@ -1,0 +1,290 @@
+"""SLO overload harness: admission control vs FIFO under deadline
+pressure, plus the trace record → replay fidelity check.
+
+Two arms serve the SAME overload stream — one shape bucket, every
+request carrying the same tight ``deadline_s`` — through the same
+warmed-up serving stack:
+
+* **fifo** — no admission: every request queues, the scheduler's
+  reactive deadline path expires them (pending requests die unserved;
+  in-flight requests are evicted mid-round, their compile/step budget
+  already spent).
+* **shed** — ``AdmissionPolicy(shed_on_deadline=True)`` with a cost
+  model calibrated from a recorded warmup trace: requests whose
+  simulated completion exceeds their deadline are refused at admit time
+  (typed ``rejected`` results, zero counters).
+
+The harness asserts the SLO subsystem's core claim: shedding strictly
+reduces the ``timed_out`` count and the wasted step budget (engine
+steps spent on requests that did not finish as ``done``) relative to
+FIFO admit-everything, without reducing the goodput (requests finished
+``done``).
+
+It also closes the loop on the simulator: the warmup phase records a
+JSONL trace, ``serving.slo.replay`` re-serves it host-side, and the
+predicted mean service/latency must land within ``TOLERANCE_RATIO`` of
+the measured means (and predicted occupancy within ``TOLERANCE_OCC``
+absolute) — the stated-tolerance acceptance gate, also wired into CI.
+
+Both arms run against a server warmed through ``reset_stats()``: warmup
+primes the executable cache (compiles land in the warmup phase), then
+counters reset so the measured phase reports per-phase numbers.
+
+Usage:
+  python benchmarks/slo.py                       # asserts + table
+  python benchmarks/slo.py --requests 24 --deadline-s 0.5 \
+      --json benchmarks/artifacts/slo.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.api import MBEClient, MBEOptions
+from repro.data.generators import dense_small
+from repro.serving.buckets import BucketPolicy
+from repro.serving.slo import (AdmissionPolicy, CostModel, TraceReader,
+                               candidate_policies, frontier, sweep)
+from repro.serving.slo.simulate import compare_trace, replay
+
+# stated tolerances for the replay fidelity gate: predicted/measured
+# mean ratios within [1/RATIO, RATIO]; occupancy within +-OCC absolute.
+# Loose on purpose — the cost model is three scalars, the host is
+# shared CI hardware; the gate catches structural model breakage
+# (x10 drift), not jitter.
+TOLERANCE_RATIO = 3.0
+TOLERANCE_OCC = 0.25
+
+
+def overload_stream(n_requests: int, seed: int) -> list:
+    """One-bucket overload: same 12x24 dense shape, different graphs —
+    maximal queueing on one lane pool, which is what makes deadlines
+    bind and the backlog estimate meaningful."""
+    rng = np.random.default_rng(seed)
+    return [dense_small(12, 24, p=0.5, seed=int(rng.integers(1 << 30)),
+                        name=f"ovl{i}")
+            for i in range(n_requests)]
+
+
+def _options(seed: int, max_batch: int, steps_per_round: int,
+             **extra) -> MBEOptions:
+    return MBEOptions(max_batch=max_batch,
+                      steps_per_round=steps_per_round, **extra)
+
+
+def calibrate(seed: int, max_batch: int, steps_per_round: int,
+              trace_path: str) -> tuple[CostModel, dict]:
+    """Warmup + calibration serve: record a trace of a deadline-free
+    serve of the same stream shape, calibrate the cost model from its
+    poll ledger, and run the replay fidelity check on it."""
+    graphs = overload_stream(8, seed=seed + 1)
+    client = MBEClient(_options(seed, max_batch, steps_per_round,
+                                trace_path=trace_path))
+    t0 = time.perf_counter()
+    client.enumerate_many(graphs)
+    wall = time.perf_counter() - t0
+    stats = client.stats()
+    client.server.close_trace()
+    reader = TraceReader(trace_path)
+    cost = reader.cost_model()
+    rep = replay(reader.requests, BucketPolicy(
+        max_batch=max_batch, steps_per_round=steps_per_round),
+        cost, polls=reader.polls())
+    cmp = compare_trace(reader.requests, rep)
+    fidelity = dict(
+        n=cmp["n"], wall_s=wall,
+        measured_mean_service_s=cmp["measured_mean_service_s"],
+        predicted_mean_service_s=cmp["predicted_mean_service_s"],
+        service_ratio=cmp["service_ratio"],
+        measured_mean_latency_s=cmp["measured_mean_latency_s"],
+        predicted_mean_latency_s=cmp["predicted_mean_latency_s"],
+        latency_ratio=cmp["latency_ratio"],
+        measured_occupancy=stats["occupancy"],
+        predicted_occupancy=rep.occupancy,
+        tolerance_ratio=TOLERANCE_RATIO, tolerance_occ=TOLERANCE_OCC)
+    return cost, fidelity
+
+
+def serve_arm(name: str, graphs: list, deadline_s: float, seed: int,
+              max_batch: int, steps_per_round: int,
+              admission: AdmissionPolicy | None) -> dict:
+    """One measured arm: warm the cache on a same-shape graph, reset
+    counters, then serve the overload stream with per-request
+    deadlines."""
+    client = MBEClient(_options(seed, max_batch, steps_per_round,
+                                admission=admission))
+    # warmup: prime the (bucket, B, budget) executables the measured
+    # phase will hit, so compiles don't eat the deadline budget
+    for k in (1, max_batch):
+        warm = overload_stream(k, seed=seed + 2)
+        client.enumerate_many(warm)
+    client.server.reset_stats()
+    t0 = time.perf_counter()
+    futs = [client.submit(g, deadline_s=deadline_s) for g in graphs]
+    client.drain()
+    results = [f.result() for f in futs]
+    wall = time.perf_counter() - t0
+    stats = client.stats()
+    by_status: dict[str, int] = {}
+    for r in results:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    # wasted budget: engine steps spent on requests that did not finish
+    # (in-flight deadline evictions; rejected rows are 0 by construction)
+    wasted = sum(int(r.steps) for r in results if r.status != "done")
+    return dict(arm=name, requests=len(graphs), wall_s=round(wall, 3),
+                done=by_status.get("done", 0),
+                timed_out=by_status.get("timed_out", 0),
+                rejected=by_status.get("rejected", 0),
+                shed=stats["shed"], wasted_steps=wasted,
+                busy_steps=stats["busy_steps"],
+                occupancy=round(stats["occupancy"], 3),
+                compiles=stats["misses"],
+                mean_done_latency_s=round(
+                    float(np.mean([r.latency_s for r in results
+                                   if r.status == "done"] or [0.0])), 4))
+
+
+def run(n_requests: int, deadline_s: float, seed: int, max_batch: int,
+        steps_per_round: int, trace_path: str | None,
+        do_sweep: bool) -> dict:
+    own_trace = trace_path is None
+    if own_trace:
+        fd, trace_path = tempfile.mkstemp(suffix=".jsonl",
+                                          prefix="slo-trace-")
+        os.close(fd)
+    cost, fidelity = calibrate(seed, max_batch, steps_per_round,
+                               trace_path)
+    print(f"[slo] cost model: wall {cost.steps_per_s:.0f} lane-steps/s, "
+          f"exec {cost.exec_rate:.0f} lane-steps/s, "
+          f"compile {cost.compile_s:.2f}s ({cost.source})")
+    print(f"[slo] replay fidelity: service ratio "
+          f"{fidelity['service_ratio']:.2f}, latency ratio "
+          f"{fidelity['latency_ratio']:.2f}, occupancy "
+          f"{fidelity['predicted_occupancy']:.2f} predicted vs "
+          f"{fidelity['measured_occupancy']:.2f} measured")
+
+    graphs = overload_stream(n_requests, seed=seed)
+    fifo = serve_arm("fifo", graphs, deadline_s, seed, max_batch,
+                     steps_per_round, admission=None)
+    # slack < 1: shed unless the estimate clears the deadline with
+    # margin — near-threshold admits are the ones that burn budget and
+    # then time out in flight anyway (the exact waste shedding exists
+    # to avoid), and the three-scalar estimate is too coarse to cut fine
+    shed = serve_arm("shed", graphs, deadline_s, seed, max_batch,
+                     steps_per_round,
+                     admission=AdmissionPolicy(shed_on_deadline=True,
+                                               shed_slack=0.6,
+                                               cost=cost))
+    rows = [fifo, shed]
+    keys = list(fifo)
+    print("\n" + "  ".join(f"{k:>18}" for k in keys))
+    for r in rows:
+        print("  ".join(f"{str(r[k]):>18}" for k in keys))
+
+    sweep_rows, front = [], []
+    if do_sweep:
+        reader = TraceReader(trace_path)
+        base = BucketPolicy(max_batch=max_batch,
+                            steps_per_round=steps_per_round)
+        sweep_rows = sweep(reader.requests, candidate_policies(base),
+                           cost)
+        front = frontier(sweep_rows)
+        print(f"\n[slo] policy sweep: {len(sweep_rows)} candidates, "
+              f"frontier {len(front)}:")
+        for row in front:
+            print(f"        mode={row['bucket_mode']} "
+                  f"spr={row['steps_per_round']} "
+                  f"B={row['max_batch']}: "
+                  f"latency {row['predicted_mean_latency_s']:.3f}s, "
+                  f"occupancy {row['predicted_occupancy']:.2f}")
+    if own_trace:
+        os.unlink(trace_path)
+    return dict(fifo=fifo, shed=shed, fidelity=fidelity,
+                sweep=sweep_rows, frontier=front,
+                cost=dict(steps_per_s=cost.steps_per_s,
+                          service_steps_per_s=cost.service_steps_per_s,
+                          compile_s=cost.compile_s, source=cost.source))
+
+
+def check(out: dict) -> list[str]:
+    """The acceptance asserts; returns human-readable failures."""
+    fifo, shed, fid = out["fifo"], out["shed"], out["fidelity"]
+    fails = []
+    if fifo["timed_out"] == 0:
+        fails.append("FIFO arm never timed out — the stream is not "
+                     "overloaded; raise --requests or lower --deadline-s")
+    if shed["timed_out"] >= fifo["timed_out"]:
+        fails.append(f"shed did not reduce timed_out: "
+                     f"{shed['timed_out']} >= {fifo['timed_out']}")
+    if shed["wasted_steps"] >= fifo["wasted_steps"] \
+            and fifo["wasted_steps"] > 0:
+        fails.append(f"shed did not reduce wasted steps: "
+                     f"{shed['wasted_steps']} >= {fifo['wasted_steps']}")
+    if shed["done"] < fifo["done"]:
+        # informational, not a gate: shedding trades tail goodput for
+        # zero waste; a pessimistic estimate on a noisy host can refuse
+        # requests FIFO would have (barely) finished
+        print(f"[slo] note: shed goodput {shed['done']} done < fifo "
+              f"{fifo['done']} (expected under a conservative slack)")
+    for k in ("service_ratio", "latency_ratio"):
+        r = fid[k]
+        if not (1.0 / TOLERANCE_RATIO <= r <= TOLERANCE_RATIO):
+            fails.append(f"replay {k} {r:.2f} outside "
+                         f"[1/{TOLERANCE_RATIO}, {TOLERANCE_RATIO}]")
+    if abs(fid["predicted_occupancy"] - fid["measured_occupancy"]) \
+            > TOLERANCE_OCC:
+        fails.append(f"replay occupancy off by more than "
+                     f"{TOLERANCE_OCC}: {fid['predicted_occupancy']:.2f} "
+                     f"vs {fid['measured_occupancy']:.2f}")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--deadline-s", type=float, default=0.35)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--steps-per-round", type=int, default=16)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="keep the calibration trace at PATH (default: "
+                         "a deleted tempfile); CI uploads it as the "
+                         "trace artifact")
+    ap.add_argument("--sweep", action="store_true",
+                    help="also run the planner's BucketPolicy what-if "
+                         "sweep over the calibration trace and print "
+                         "the latency/occupancy frontier")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the two arms + fidelity + sweep as a "
+                         "machine-readable artifact")
+    args = ap.parse_args()
+    out = run(args.requests, args.deadline_s, args.seed, args.max_batch,
+              args.steps_per_round, args.trace, args.sweep)
+    fails = check(out)
+    if args.json:
+        payload = dict(benchmark="slo", seed=args.seed,
+                       requests=args.requests,
+                       deadline_s=args.deadline_s,
+                       passed=not fails, failures=fails, **out)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[slo] wrote {args.json}")
+    if fails:
+        for msg in fails:
+            print(f"[slo] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print(f"[slo] PASS: shed timed_out {out['shed']['timed_out']} < "
+          f"fifo {out['fifo']['timed_out']}, wasted steps "
+          f"{out['shed']['wasted_steps']} <= "
+          f"{out['fifo']['wasted_steps']}, replay within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

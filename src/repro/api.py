@@ -63,7 +63,8 @@ from repro.core.engine import Engine, get_engine, list_engines
 from repro.core.graph import BipartiteGraph, unipartite_graph
 from repro.core.results import (CliqueResult, CountResult, EngineResult,
                                 MBEResult)
-from repro.serving import (BucketPolicy, ExecutableCache, LocalExecutor,
+from repro.serving import (AdmissionController, AdmissionPolicy,
+                           BucketPolicy, ExecutableCache, LocalExecutor,
                            MBEServer, ShardedExecutor, imbalance)
 
 
@@ -141,6 +142,21 @@ class MBEOptions:
     max_graph_steps: int | None = None       # per-graph step cap
     cache_capacity: int | None = ExecutableCache.DEFAULT_CAPACITY
 
+    # -- SLO layer (serving.slo; DESIGN.md §12) -------------------------
+    admission: AdmissionPolicy | None = None  # admission control in
+    #                               front of the pending queues:
+    #                               bounded-queue backpressure, weighted
+    #                               per-tenant fairness, shed-on-deadline
+    #                               (refused requests complete with
+    #                               status == "rejected" instead of
+    #                               burning compile/step budget).  None
+    #                               = admit everything (byte-identical
+    #                               to the pre-SLO server)
+    trace_path: str | None = None  # record a JSONL request trace
+    #                               (admit/result/poll events) for the
+    #                               replay simulator and policy planner;
+    #                               None = no tracing, no extra branch
+
     # -- placement (serving.executor) ----------------------------------
     mesh: int | str | None = None  # None = one local device; N = 1-D
     #                                serving mesh over N host devices;
@@ -195,7 +211,9 @@ class MBEOptions:
             engine=get_engine(self.engine),
             engine_params=self.engine_params(),
             resident_lanes=self.resident_lanes,
-            resident_rebalance=self.resident_rebalance)
+            resident_rebalance=self.resident_rebalance,
+            admission=self.admission,
+            trace_path=self.trace_path)
 
 
 class MBEFuture:
@@ -314,12 +332,18 @@ class MBEClient:
         self.server.reap()          # stashed results flow through the sink
 
     def submit(self, g: BipartiteGraph, priority: int = 0,
-               deadline_s: float | None = None) -> MBEFuture:
+               deadline_s: float | None = None,
+               tenant: str = "default") -> MBEFuture:
         """Enqueue one graph; returns an ``MBEFuture``.  ``priority``
         reorders placement within a bucket (higher first); ``deadline_s``
-        bounds the request's wall-clock lifetime."""
+        bounds the request's wall-clock lifetime; ``tenant`` is the
+        accounting + fairness identity (``stats()['per_tenant']``, the
+        admission controller's weighted queue shares).  With
+        ``MBEOptions.admission`` set the request may be refused here —
+        its future then resolves to a result with
+        ``status == "rejected"`` (check ``result.reject_reason``)."""
         rid = self.server.admit(g, priority=priority,
-                                deadline_s=deadline_s)
+                                deadline_s=deadline_s, tenant=tenant)
         self._watched.add(rid)
         return MBEFuture(self, rid, g.name)
 

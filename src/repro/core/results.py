@@ -52,10 +52,19 @@ class EngineResult:
     #                             made before eviction
     timed_out: bool = False     # request's deadline expired before it
     #                             finished; same partial-progress contract
+    rejected: bool = False      # refused at admit time by the admission
+    #                             controller (serving.slo.admission):
+    #                             never placed, never compiled — zero
+    #                             counters by construction
+    reject_reason: str = ""     # 'backpressure' | 'fairness' | 'shed'
+    #                             when rejected, else ''
 
     @property
     def status(self) -> str:
-        """Terminal lifecycle state: done | cancelled | timed_out."""
+        """Terminal lifecycle state: done | cancelled | timed_out |
+        rejected."""
+        if self.rejected:
+            return "rejected"
         if self.cancelled:
             return "cancelled"
         if self.timed_out:

@@ -87,6 +87,18 @@ def _request_stream(engine_name: str, n_requests: int, seed: int):
     return random_graph_stream(n_requests, seed=seed)
 
 
+def _admission_policy(args):
+    """Build the ``AdmissionPolicy`` requested on the command line, or
+    None when no admission flag was given (the default — the SLO layer
+    stays entirely out of the serving path)."""
+    if args.admit_max_pending is None and not args.admit_shed:
+        return None
+    from repro.serving.slo import AdmissionPolicy
+    return AdmissionPolicy(max_pending=args.admit_max_pending,
+                           shed_on_deadline=args.admit_shed,
+                           shed_slack=args.shed_slack)
+
+
 def serve_mbe(args) -> dict:
     """Serve a synthetic mixed-size request stream through the unified
     client (``repro.api.MBEClient``), with any registered engine."""
@@ -102,15 +114,30 @@ def serve_mbe(args) -> dict:
         max_batch=args.max_batch, steps_per_round=spr,
         steps_per_call=args.steps_per_call,
         big_graph_threshold=args.big_graph_threshold,
-        mesh=args.mesh or None))
+        mesh=args.mesh or None,
+        admission=_admission_policy(args),
+        trace_path=args.trace))
     t0 = time.perf_counter()
-    results = client.enumerate_many(graphs)
+    if args.deadline_s is not None:
+        futs = [client.submit(g, deadline_s=args.deadline_s)
+                for g in graphs]
+        client.drain()
+        results = [f.result() for f in futs]
+    else:
+        results = client.enumerate_many(graphs)
     dt = time.perf_counter() - t0
     stats = client.stats()
     # engine-agnostic headline: bicliques/cliques found, or the count
     metric = sum(r.metric for r in results)
     mode = f"continuous(r={spr})" if args.continuous else "flush"
     _print_routing(client)
+    slo = ""
+    if _admission_policy(args) is not None:
+        slo = (f"admitted {stats['admitted']}, "
+               f"rejected {stats['rejected']} "
+               f"(shed {stats['shed']}, "
+               f"backpressure {stats['rejected_backpressure']}), "
+               f"timed_out {stats['timed_out']}, ")
     print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
           f"engine={stats['engine']}, executor={stats['executor']}, "
           f"kernels={stats['kernel_impl']} "
@@ -118,11 +145,15 @@ def serve_mbe(args) -> dict:
           f"{mode}: metric total {metric}, "
           f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
+          f"{slo}"
           f"occupancy {stats['occupancy']:.2f}, "
           f"{stats['busy_steps'] / dt:.0f} steps/s "
           f"({stats['steps_per_poll']:.0f} steps/poll, "
           f"{stats['launches_per_poll']:.1f} launches/poll), "
           f"{dt:.2f}s ({args.requests / dt:.1f} graphs/s)")
+    if args.trace:
+        client.server.close_trace()
+        print(f"[trace] wrote {args.trace}")
     return dict(requests=args.requests, metric=metric, wall_s=dt, **stats)
 
 
@@ -173,6 +204,26 @@ def serve(argv=None) -> dict:
     ap.add_argument("--big-graph-threshold", type=int, default=None,
                     help="MBE: route graphs with >= K root tasks to the "
                          "work-stealing big-graph lane")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="MBE: record a JSONL request trace "
+                         "(serving.slo.trace schema v1) — replay it with "
+                         "repro.serving.slo.replay / benchmarks/slo.py")
+    ap.add_argument("--admit-max-pending", type=int, default=None,
+                    help="MBE admission control: bounded-queue "
+                         "backpressure — reject (typed 'rejected' "
+                         "result) once this many requests are pending")
+    ap.add_argument("--admit-shed", action="store_true",
+                    help="MBE admission control: shed-on-deadline — "
+                         "reject at admit when the simulated completion "
+                         "time exceeds the request deadline")
+    ap.add_argument("--shed-slack", type=float, default=1.0,
+                    help="MBE shed-on-deadline: admit while "
+                         "est_completion <= deadline * slack (values >1 "
+                         "admit optimistically, <1 shed early)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="MBE: per-request wall-clock deadline in "
+                         "seconds (enables timed_out, and with "
+                         "--admit-shed, at-admit shedding)")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)

@@ -29,6 +29,15 @@ compilation across them.  Four pieces:
   ``repro.core.engine`` (``engine="compact"`` serves the paper's compact
   array); routing decisions land in ``routing_log``.
 
+* ``slo``       — the SLO serving subsystem (DESIGN.md §12): JSONL
+  request tracing (``TraceRecorder``) hooked into admit/poll/demux, a
+  host-side discrete-event replay simulator calibrated from committed
+  bench artifacts (``CostModel``/``simulate``/``replay``), admission
+  control (``AdmissionController``: backpressure, weighted per-tenant
+  fairness, shed-on-deadline → typed ``rejected`` results), and
+  trace-driven ``BucketPolicy`` what-if sweeps (``planner``).  All off
+  by default; disabled, every serving path is byte-identical.
+
 The public entry point over this package is ``repro.api.MBEClient``
 (DESIGN.md §7), which adds futures, priorities, deadlines and
 cancellation on top of ``MBEServer``.
@@ -40,5 +49,10 @@ from repro.serving.cache import CacheEntry, ExecutableCache    # noqa: F401
 from repro.serving.executor import (BigGraphLane, Executor,    # noqa: F401
                                     LanePool, LocalExecutor,
                                     RoundTelemetry, ShardedExecutor)
-from repro.serving.scheduler import (MBEResult, MBEServer,     # noqa: F401
-                                     Request, imbalance)
+from repro.serving.scheduler import (MONOTONIC_STATS,          # noqa: F401
+                                     STATS_SCHEMA, MBEResult,
+                                     MBEServer, Request, imbalance)
+from repro.serving.slo import (AdmissionController,            # noqa: F401
+                               AdmissionPolicy, CostModel,
+                               TraceReader, TraceRecorder,
+                               load_requests)

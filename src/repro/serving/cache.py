@@ -169,3 +169,13 @@ class ExecutableCache:
     def stats(self) -> dict:
         return dict(hits=self.hits, misses=self.misses,
                     entries=len(self._entries), evictions=self.evictions)
+
+    def reset_counters(self) -> None:
+        """Zero the monotonic hit/miss/eviction counters WITHOUT touching
+        the entries themselves (``MBEServer.reset_stats`` uses this to
+        separate warmup compiles from a measured phase — the miss count
+        stays an honest compile count *per phase*; ``entries`` is a gauge
+        and still reports the live executables)."""
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0

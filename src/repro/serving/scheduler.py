@@ -106,6 +106,9 @@ from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_bucket,
                                    plan_route)
 from repro.serving.cache import ExecutableCache
 from repro.serving.executor import BigGraphLane, Executor, LocalExecutor
+from repro.serving.slo.admission import (AdmissionController,
+                                         AdmissionPolicy)
+from repro.serving.slo.trace import TraceRecorder
 
 
 def imbalance(per_worker) -> float:
@@ -123,6 +126,33 @@ def imbalance(per_worker) -> float:
     return float(a.max()) / mean if mean > 0 else 1.0
 
 
+# The stats() contract: every key the dict carries and its type, for all
+# executors (local / sharded) and all routes (lane pool / big graph) and
+# every registered engine.  tests/test_stats_contract.py asserts a served
+# server's stats() matches this schema exactly — add the key HERE when
+# adding a stat, or the contract test fails by design.
+STATS_SCHEMA: dict[str, type | tuple] = dict(
+    batches=int, lanes=int, pad_lanes=int, pending=int, in_flight=int,
+    busy_steps=int, total_lane_steps=int, idle_lane_steps=int,
+    occupancy=float, kernel_impl=str, steps_per_call=int,
+    steps_per_poll=float, resident_lanes=(int, str), launches=int,
+    launches_per_poll=float, rebalanced_steps=int, executor=str,
+    engine=str, cancelled=int, timed_out=int,
+    admitted=int, rejected=int, shed=int, rejected_backpressure=int,
+    rejected_fairness=int, per_tenant=dict,
+    big_busy_per_worker=list, big_imbalance=float,
+    hits=int, misses=int, entries=int, evictions=int)
+
+# Monotonic counters (reset by ``MBEServer.reset_stats``); everything
+# else in STATS_SCHEMA is a gauge or a configuration echo.
+MONOTONIC_STATS = frozenset((
+    "batches", "lanes", "pad_lanes", "busy_steps", "total_lane_steps",
+    "idle_lane_steps", "launches", "rebalanced_steps", "cancelled",
+    "timed_out", "admitted", "rejected", "shed",
+    "rejected_backpressure", "rejected_fairness",
+    "hits", "misses", "evictions"))
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     rid: int
@@ -135,6 +165,9 @@ class Request:
     priority: int = 0           # higher pops first within a bucket queue
     deadline: float | None = None   # absolute perf_counter expiry (admit
     #                             stamp + deadline_s), None = no deadline
+    deadline_s: float | None = None  # the submitted relative budget (for
+    #                             tracing/estimation; deadline is absolute)
+    tenant: str = "default"     # accounting + fairness identity
 
 
 class _PendingQueue:
@@ -234,6 +267,7 @@ class _LanePool:
         server._n_rounds += 1
         server._busy_steps += busy
         server._total_lane_steps += self.B * crit
+        server._exec_wall_s += exec_s
         # launch accounting: the round's critical path ran ceil(crit/spc)
         # compiled segments, each costing launches_per_segment kernel
         # dispatches (1 per pool on the multi-lane path, B on vmap)
@@ -327,7 +361,10 @@ class MBEServer:
                  engine: str | Engine = "dense",
                  engine_params: dict | None = None,
                  resident_lanes: int | str = "auto",
-                 resident_rebalance: bool = False):
+                 resident_rebalance: bool = False,
+                 admission: AdmissionController | AdmissionPolicy
+                 | None = None,
+                 trace_path: str | None = None):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
@@ -341,6 +378,13 @@ class MBEServer:
         self.executor = executor or LocalExecutor()
         self.engine = get_engine(engine)
         self.cache = ExecutableCache(capacity=cache_capacity)
+        # SLO layer (serving.slo): both default OFF — with no controller
+        # and no trace the admit/poll/demux paths take no extra branch
+        # and stay byte-identical to a server built without them
+        self.admission = (AdmissionController(admission)
+                          if isinstance(admission, AdmissionPolicy)
+                          else admission)
+        self.trace = TraceRecorder(trace_path) if trace_path else None
         self.routing_log: list[dict] = []
         self._queues: dict[BucketSpec, _PendingQueue] = {}
         self._pools: dict[BucketSpec, _LanePool] = {}
@@ -354,15 +398,21 @@ class MBEServer:
         self._n_pad_lanes = 0
         self._busy_steps = 0
         self._total_lane_steps = 0
+        self._exec_wall_s = 0.0
         self._n_launches = 0
         self._rebalanced_steps = 0
         self._n_cancelled = 0
         self._n_timed_out = 0
+        self._n_admitted = 0
+        self._n_rejected = 0
+        self._per_tenant: dict[str, dict] = {}
+        self._rid_tenant: dict[int, str] = {}
         self._sinks: list = []
 
     # ------------------------------------------------------------------
     def admit(self, g: BipartiteGraph, priority: int = 0,
-              deadline_s: float | None = None) -> int:
+              deadline_s: float | None = None,
+              tenant: str = "default") -> int:
         """Enqueue one graph; returns the request id used to demux.
 
         If the engine allows it (``Engine.canonicalize``), the graph is
@@ -381,6 +431,16 @@ class MBEServer:
         has not finished when it expires is completed with
         ``timed_out=True`` (pending: never compiled/placed; in-flight:
         lane evicted, counters report the partial progress).
+        ``tenant``: accounting + fairness identity (``stats()``'s
+        ``per_tenant`` split; the admission controller's weighted queue
+        shares).
+
+        With an admission controller attached (``serving.slo``), the
+        request may be REFUSED here — bounded-queue backpressure,
+        per-tenant fairness, or shed-on-deadline — in which case it
+        never queues, never compiles, and its typed terminal result
+        (``status == "rejected"``) is delivered by the next
+        ``poll``/``reap`` like any other flagged result.
         """
         gc = g.canonical() if self.engine.canonicalize else g
         if gc.n_u < 1:
@@ -394,7 +454,34 @@ class MBEServer:
                       swapped=self.engine.canonicalize and g.n_u > g.n_v,
                       t_admit=t0, big=route == "big", priority=priority,
                       deadline=None if deadline_s is None
-                      else t0 + float(deadline_s))
+                      else t0 + float(deadline_s),
+                      deadline_s=deadline_s, tenant=tenant)
+        self._rid_tenant[rid] = tenant
+        if self.admission is not None:
+            decision = self._offer_admission(req)
+            if not decision.admitted:
+                self._n_rejected += 1
+                self._tenant_stat(tenant, "rejected")
+                self._completed[rid] = self._flagged_result(
+                    req, queue_s=0.0, rejected=True,
+                    reject_reason=decision.reason)
+                if self.trace is not None:
+                    self.trace.admit(
+                        rid=rid, name=gc.name, n_u=gc.n_u, n_v=gc.n_v,
+                        engine=self.engine.name, route=route,
+                        bucket=(bucket.n_u, bucket.n_v),
+                        priority=priority, deadline_s=deadline_s,
+                        tenant=tenant, admitted=False,
+                        reason=decision.reason)
+                return rid
+        self._n_admitted += 1
+        self._tenant_stat(tenant, "admitted")
+        if self.trace is not None:
+            self.trace.admit(
+                rid=rid, name=gc.name, n_u=gc.n_u, n_v=gc.n_v,
+                engine=self.engine.name, route=route,
+                bucket=(bucket.n_u, bucket.n_v), priority=priority,
+                deadline_s=deadline_s, tenant=tenant, admitted=True)
         thr = self.policy.big_graph_threshold
         if req.big:
             self._big_queue.append(req)
@@ -418,6 +505,55 @@ class MBEServer:
 
     # legacy name; identical semantics
     submit = admit
+
+    # -- admission (serving.slo) ----------------------------------------
+    def _tenant_stat(self, tenant: str, key: str, n: int = 1) -> None:
+        t = self._per_tenant.setdefault(
+            tenant, dict(admitted=0, rejected=0, completed=0,
+                         cancelled=0, timed_out=0))
+        t[key] += n
+
+    def _tenants_pending(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for q in [*self._queues.values(), self._big_queue]:
+            for r in q:
+                out[r.tenant] = out.get(r.tenant, 0) + 1
+        return out
+
+    def _bucket_backlog_steps(self, bucket: BucketSpec) -> int:
+        """Estimated engine steps queued + in flight ahead of a new
+        request in this bucket: shape-estimated work for every pending
+        request, half the shape estimate for each in-flight lane (the
+        expectation for a lane whose progress is unknown without a
+        device read)."""
+        cost = self.admission.policy.cost
+        est = 0
+        for r in self._queues.get(bucket, ()):
+            est += cost.estimate_steps(r.graph.n_u, r.graph.n_v)
+        pool = self._pools.get(bucket)
+        if pool is not None:
+            for r in pool.reqs:
+                if r is not None:
+                    est += cost.estimate_steps(r.graph.n_u,
+                                               r.graph.n_v) // 2
+        return est
+
+    def _offer_admission(self, req: Request):
+        bucket = req.bucket
+        backlog = len(self._queues.get(bucket, ()))
+        pool = self._pools.get(bucket)
+        lanes = pool.B if pool is not None else \
+            self.executor.plan_lanes(backlog + 1, self.policy)
+        return self.admission.offer(
+            n_u=req.graph.n_u, n_v=req.graph.n_v,
+            bucket=(bucket.n_u, bucket.n_v),
+            route="big" if req.big else "lane", tenant=req.tenant,
+            deadline_s=req.deadline_s,
+            pending=(sum(len(q) for q in self._queues.values())
+                     + len(self._big_queue)),
+            tenants_pending=self._tenants_pending(),
+            backlog_steps=self._bucket_backlog_steps(bucket),
+            lanes=lanes)
 
     # ------------------------------------------------------------------
     def _engine_config(self, bucket: BucketSpec):
@@ -518,7 +654,8 @@ class MBEServer:
             self._start_big()
         slot = self._big
         tel = slot.lane.run_round()
-        slot.service_s += max(tel.wall_s - tel.compile_s, 0.0)
+        exec_s = max(tel.wall_s - tel.compile_s, 0.0)
+        slot.service_s += exec_s
         slot.compile_s += tel.compile_s
         # the big lane enters the same occupancy ledger as the pools:
         # busy = steps actually advanced, total = workers x critical path
@@ -527,6 +664,7 @@ class MBEServer:
         self._n_rounds += 1
         self._busy_steps += busy
         self._total_lane_steps += slot.lane.n_workers * crit
+        self._exec_wall_s += exec_s
         # launch accounting mirrors the pool rounds: inside shard_map
         # each device advances wpd workers, in ONE pool launch per
         # segment when the multi-lane kernel is active, else wpd
@@ -576,12 +714,15 @@ class MBEServer:
                         service_s: float = 0.0, compile_s: float = 0.0,
                         counters: dict | None = None,
                         cancelled: bool = False,
-                        timed_out: bool = False) -> EngineResult:
+                        timed_out: bool = False,
+                        rejected: bool = False,
+                        reject_reason: str = "") -> EngineResult:
         """Terminal result for a request that did not run to completion
-        (cancelled or deadline-expired).  ``counters`` carries the partial
-        progress read from the evicted lane (zeros for never-placed
-        requests); ``Engine.partial`` shapes it into the engine's payload
-        with nothing materialized — a partial collect buffer is not an
+        (cancelled, deadline-expired, or refused at admission).
+        ``counters`` carries the partial progress read from the evicted
+        lane (zeros for never-placed and rejected requests);
+        ``Engine.partial`` shapes it into the engine's payload with
+        nothing materialized — a partial collect buffer is not an
         answer."""
         payload = self.engine.partial(
             counters, cfg=self._engine_config(req.bucket))
@@ -589,12 +730,15 @@ class MBEServer:
             rid=req.rid, name=req.graph.name,
             latency_s=queue_s + service_s + compile_s, queue_s=queue_s,
             service_s=service_s, compile_s=compile_s,
-            cancelled=cancelled, timed_out=timed_out, **payload)
+            cancelled=cancelled, timed_out=timed_out,
+            rejected=rejected, reject_reason=reject_reason, **payload)
         self._n_cancelled += int(cancelled)
         self._n_timed_out += int(timed_out)
         self.routing_log.append(dict(
-            event="cancel" if cancelled else "deadline", rid=req.rid,
-            graph=req.graph.name, executor=self.executor.name))
+            event=("rejected" if rejected else
+                   "cancel" if cancelled else "deadline"), rid=req.rid,
+            graph=req.graph.name, executor=self.executor.name,
+            **(dict(reason=reject_reason) if rejected else {})))
         return res
 
     def _lane_counters(self, lane) -> dict:
@@ -714,10 +858,35 @@ class MBEServer:
             if pool.n_live() == 0 and not queue:
                 del self._pools[bucket]    # fully drained; next wave may
                 #                            plan a different lane count
+        if self.trace is not None:
+            self.trace.poll(
+                busy_steps=self._busy_steps,
+                total_lane_steps=self._total_lane_steps,
+                exec_s=self._exec_wall_s,
+                pending=(sum(len(q) for q in self._queues.values())
+                         + len(self._big_queue)),
+                in_flight=(sum(p.n_live() for p in self._pools.values())
+                           + (1 if self._big is not None else 0)),
+                compiles=self.cache.misses)
 
     def _take_completed(self) -> dict[int, EngineResult]:
         out, self._completed = self._completed, {}
         if out:
+            for rid, res in out.items():
+                tenant = self._rid_tenant.pop(rid, None)
+                if tenant is not None and not res.rejected:
+                    self._tenant_stat(
+                        tenant, "cancelled" if res.cancelled
+                        else "timed_out" if res.timed_out
+                        else "completed")
+                if self.trace is not None:
+                    self.trace.result(
+                        rid=rid, status=res.status,
+                        steps=int(res.steps), nodes=int(res.nodes),
+                        metric=int(res.metric), queue_s=res.queue_s,
+                        service_s=res.service_s,
+                        compile_s=res.compile_s,
+                        latency_s=res.latency_s)
             for sink in self._sinks:
                 sink(out)
         return out
@@ -802,6 +971,23 @@ class MBEServer:
                     engine=self.engine.name,
                     cancelled=self._n_cancelled,
                     timed_out=self._n_timed_out,
+                    # admission ledger (serving.slo): admitted counts
+                    # requests accepted into the queues, rejected the
+                    # ones refused at admit time, split by reason (all
+                    # zero with no controller attached); per_tenant is
+                    # the same ledger split by tenant id
+                    admitted=self._n_admitted,
+                    rejected=self._n_rejected,
+                    shed=(self.admission.rejected_by_reason["shed"]
+                          if self.admission is not None else 0),
+                    rejected_backpressure=(
+                        self.admission.rejected_by_reason["backpressure"]
+                        if self.admission is not None else 0),
+                    rejected_fairness=(
+                        self.admission.rejected_by_reason["fairness"]
+                        if self.admission is not None else 0),
+                    per_tenant={t: dict(c)
+                                for t, c in self._per_tenant.items()},
                     big_busy_per_worker=([] if busy_pw is None
                                          else busy_pw.tolist()),
                     # the big lane's live Fig.-5 balance number (1.0 when
@@ -809,3 +995,51 @@ class MBEServer:
                     big_imbalance=(1.0 if busy_pw is None
                                    else imbalance(busy_pw)),
                     **self.cache.stats())
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative (monotonic) counters so a later
+        ``stats()`` read covers only work served after this call — the
+        overload harness uses it to separate warmup (cache priming,
+        first compiles) from the measured phase.
+
+        Monotonic keys reset here: ``batches``, ``lanes``,
+        ``pad_lanes``, ``busy_steps``, ``total_lane_steps``,
+        ``idle_lane_steps``, ``occupancy``, ``steps_per_poll``,
+        ``launches``, ``launches_per_poll``, ``rebalanced_steps``,
+        ``cancelled``, ``timed_out``, ``admitted``, ``rejected``,
+        ``shed``, ``rejected_backpressure``, ``rejected_fairness``,
+        ``per_tenant``, ``big_busy_per_worker``, ``big_imbalance``, and
+        the cache counters ``hits``/``misses``/``evictions`` (so the
+        miss count stays an honest per-phase compile count).
+
+        Gauges are NOT touched: ``pending``, ``in_flight``, ``entries``
+        (live cache entries), and the configuration echoes
+        (``kernel_impl``, ``steps_per_call``, ``resident_lanes``,
+        ``executor``, ``engine``).  In-flight requests keep their
+        latency accumulators — only the server-level aggregates reset.
+        """
+        self._n_rounds = 0
+        self._n_lanes = 0
+        self._n_pad_lanes = 0
+        self._busy_steps = 0
+        self._total_lane_steps = 0
+        self._exec_wall_s = 0.0
+        self._n_launches = 0
+        self._rebalanced_steps = 0
+        self._n_cancelled = 0
+        self._n_timed_out = 0
+        self._n_admitted = 0
+        self._n_rejected = 0
+        self._per_tenant = {}
+        self._big_busy_per_worker = None
+        if self.admission is not None:
+            self.admission.reset_stats()
+        self.cache.reset_counters()
+
+    def close_trace(self) -> None:
+        """Flush + close the JSONL trace recorder, if one is attached.
+        Safe to call when tracing is off (no-op) and idempotent — drivers
+        call it once the stream is drained so the artifact is complete
+        before anything reads it back (``serving.slo.read_trace``)."""
+        if self.trace is not None:
+            self.trace.close()

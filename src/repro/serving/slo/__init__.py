@@ -1,0 +1,44 @@
+"""SLO serving subsystem: request tracing, trace-replay simulation, and
+admission control (DESIGN.md §12).
+
+``MBEServer`` has had priority/deadline plumbing and rich per-request
+counters since PRs 2–4, but no way to *record* what happened, *predict*
+saturation, or *refuse* work it cannot finish in time.  This package is
+that missing layer — four modules, each usable on its own:
+
+* ``trace``     — ``TraceRecorder``: a JSONL request-trace recorder
+  hooked into ``MBEServer`` admit/poll/demux (arrival time, shape,
+  engine, route, priority, deadline, tenant, and the existing
+  queue_s/service_s/compile_s/occupancy counters per request), plus the
+  reader that merges events back into per-request ``TraceRecord`` rows.
+* ``simulate``  — a fast host-side discrete-event simulator of the
+  buckets → executable-cache → lane-pool pipeline.  Its ``CostModel``
+  (steps/s, compile cost, per-round host overhead) calibrates from
+  committed ``BENCH_*.json`` artifacts or from a measured trace;
+  ``replay`` runs a recorded trace through candidate policies and
+  predicts per-request latency and pool occupancy without touching a
+  device.
+* ``admission`` — ``AdmissionController``: bounded-queue backpressure,
+  weighted per-tenant fairness, and shed-on-deadline (reject at admit
+  time when the simulator's completion estimate exceeds the request's
+  ``deadline_s``, returning a typed ``rejected`` status instead of
+  burning compile/step budget on a guaranteed ``timed_out``).
+* ``planner``   — what-if sweeps: replay one recorded trace under
+  candidate ``BucketPolicy`` settings and report the latency/occupancy
+  Pareto frontier.
+
+Wiring: ``MBEOptions(admission=..., trace_path=...)`` /
+``MBEClient.submit(..., tenant=...)``; with admission disabled and
+tracing off every existing serving path is byte-identical to before
+this package existed.
+"""
+from repro.serving.slo.admission import (AdmissionController,  # noqa: F401
+                                         AdmissionPolicy, Decision)
+from repro.serving.slo.planner import (candidate_policies,     # noqa: F401
+                                       frontier, sweep)
+from repro.serving.slo.simulate import (CostModel, SimReport,  # noqa: F401
+                                        SimRequest, compare_trace,
+                                        replay, simulate)
+from repro.serving.slo.trace import (TraceReader, TraceRecord,  # noqa: F401
+                                     TraceRecorder, load_requests,
+                                     read_trace)

@@ -1,0 +1,393 @@
+"""SLO serving subsystem (DESIGN.md §12): trace round-trip, replay
+simulator, admission control, planner sweeps, and the byte-identity
+guarantee when the whole layer is off.
+
+* the JSONL trace schema survives record -> read -> merge intact, and
+  refuses traces written by a different schema version;
+* the simulator is deterministic, conserves requests, charges one
+  compile per executable identity, and respects priority order;
+* admission layers reject with typed ``rejected`` results — for every
+  registered engine — and per-tenant counters add up;
+* a server with a permissive admission controller and tracing ON
+  returns payloads identical to a bare server (the hooks observe, they
+  never steer);
+* ``reset_stats`` zeros monotonic counters, leaves gauges alone.
+"""
+import dataclasses
+
+import pytest
+from _graphs import random_graph
+
+from repro import MBEClient, MBEOptions
+from repro.core.engine import get_engine, list_engines
+from repro.data.generators import random_graph_stream, random_unipartite
+from repro.serving import BucketPolicy, MBEServer
+from repro.serving.slo import (AdmissionController, AdmissionPolicy,
+                               CostModel, TraceReader, load_requests,
+                               read_trace)
+from repro.serving.slo.planner import (candidate_policies, frontier,
+                                       sweep)
+from repro.serving.slo.simulate import (SimRequest, compare_trace,
+                                        replay, simulate)
+
+
+def _stream(n, seed=0):
+    return random_graph_stream(n, seed=seed)
+
+
+def _serve_traced(tmp_path, n=6, **opts):
+    p = str(tmp_path / "trace.jsonl")
+    client = MBEClient(MBEOptions(max_batch=4, steps_per_round=16,
+                                  trace_path=p, **opts))
+    results = client.enumerate_many(_stream(n))
+    client.server.close_trace()
+    return p, results, client
+
+
+# ---------------------------------------------------------------------------
+# trace record -> read round-trip
+# ---------------------------------------------------------------------------
+
+def test_trace_round_trip(tmp_path):
+    """Every request appears exactly once as admit and once as result;
+    the merged rows carry the measured split and match the delivered
+    results."""
+    p, results, _ = _serve_traced(tmp_path)
+    events = read_trace(p)
+    admits = [e for e in events if e["event"] == "admit"]
+    res_ev = [e for e in events if e["event"] == "result"]
+    polls = [e for e in events if e["event"] == "poll"]
+    assert len(admits) == len(results) == len(res_ev) == 6
+    assert polls, "continuous serve must emit poll events"
+    rows = load_requests(p)
+    assert [r.rid for r in rows] == sorted(r.rid for r in rows)
+    by_rid = {r.rid: r for r in results}
+    for row in rows:
+        res = by_rid[row.rid]
+        assert row.status == res.status == "done"
+        assert row.steps == int(res.steps)
+        assert row.metric == int(res.metric)
+        assert row.latency_s == pytest.approx(res.latency_s, abs=1e-5)
+        assert row.admitted and row.reason == "ok"
+    # poll ledger is cumulative and monotone
+    for a, b in zip(polls, polls[1:]):
+        assert b["busy_steps"] >= a["busy_steps"]
+        assert b["total_lane_steps"] >= a["total_lane_steps"]
+        assert b["exec_s"] >= a["exec_s"]
+
+
+def test_trace_version_gate(tmp_path):
+    """A trace from a different schema version must refuse to load."""
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"event": "meta", "version": 999, "t": 0.0}\n')
+    with pytest.raises(ValueError, match="version"):
+        read_trace(str(p))
+
+
+def test_trace_lazy_no_file(tmp_path):
+    """A trace-configured server that never serves leaves no file."""
+    p = tmp_path / "never.jsonl"
+    MBEServer(BucketPolicy(), trace_path=str(p))
+    assert not p.exists()
+
+
+def test_trace_records_rejections(tmp_path):
+    """Rejected requests land in the trace as admit events with
+    ``admitted=False`` and the typed reason; their result events carry
+    ``status == "rejected"`` with zero counters (they never ran)."""
+    p = str(tmp_path / "rej.jsonl")
+    srv = MBEServer(BucketPolicy(max_batch=4),
+                    admission=AdmissionPolicy(max_pending=1),
+                    trace_path=str(p))
+    for g in _stream(4, seed=1):
+        srv.admit(g)
+    srv.drain()
+    srv.close_trace()
+    rows = load_requests(p)
+    rejected = [r for r in rows if not r.admitted]
+    assert rejected and all(r.reason == "backpressure" for r in rejected)
+    assert all(r.status == "rejected" and r.steps == 0
+               for r in rejected)
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+def _sim_reqs(n=8, steps=64, stagger=0.0):
+    return [SimRequest(rid=i, arrival_s=i * stagger, n_u=10, n_v=20,
+                       steps=steps) for i in range(n)]
+
+
+def test_simulate_deterministic_and_conserving():
+    pol = BucketPolicy(max_batch=4, steps_per_round=16)
+    a = simulate(_sim_reqs(), pol)
+    b = simulate(_sim_reqs(), pol)
+    assert len(a.results) == 8                      # every request lands
+    assert a.wall_s == b.wall_s
+    assert [r.latency_s for r in a.results.values()] \
+        == [r.latency_s for r in b.results.values()]
+    assert 0.0 <= a.occupancy <= 1.0
+    assert a.busy_steps == 8 * 64                   # work conserved
+
+
+def test_simulate_one_compile_per_executable_identity():
+    """All same-bucket requests share one compile; a second bucket costs
+    exactly one more."""
+    pol = BucketPolicy(max_batch=4, steps_per_round=16)
+    one = simulate(_sim_reqs(8), pol)
+    assert one.compiles == 1
+    mixed = _sim_reqs(8) + [SimRequest(rid=100, arrival_s=0.0, n_u=40,
+                                       n_v=80, steps=64)]
+    two = simulate(mixed, pol)
+    assert two.compiles == 2
+
+
+def test_simulate_priority_overtakes():
+    """With one lane, the high-priority latecomer is placed before the
+    earlier low-priority arrivals."""
+    pol = BucketPolicy(max_batch=1, steps_per_round=16)
+    reqs = [SimRequest(rid=i, arrival_s=0.0, n_u=10, n_v=20, steps=64,
+                       priority=(5 if i == 3 else 0)) for i in range(4)]
+    rep = simulate(reqs, pol)
+    others = [rep.results[i].queue_s for i in range(3)]
+    assert rep.results[3].queue_s < max(others)
+
+
+def test_simulate_models_pending_deadline_expiry():
+    pol = BucketPolicy(max_batch=1, steps_per_round=16)
+    cost = CostModel(steps_per_s=1e3, compile_s=0.0)
+    reqs = [SimRequest(rid=i, arrival_s=0.0, n_u=10, n_v=20, steps=500,
+                       deadline_s=0.75) for i in range(4)]
+    rep = simulate(reqs, pol, cost, model_deadlines=True)
+    assert rep.timed_out > 0
+    assert any(not r.timed_out for r in rep.results.values())
+
+
+def test_replay_matches_measured_trace(tmp_path):
+    """Same-policy replay of a real recorded trace predicts the measured
+    mean service and latency within the loose structural tolerance (the
+    benchmarks/slo.py gate, asserted here on a small stream)."""
+    p, _, client = _serve_traced(tmp_path, n=8)
+    reader = TraceReader(p)
+    cost = reader.cost_model()
+    assert cost.source.startswith("trace")
+    rep = replay(reader.requests,
+                 BucketPolicy(max_batch=4, steps_per_round=16),
+                 cost, polls=reader.polls())
+    cmp = compare_trace(reader.requests, rep)
+    assert cmp["n"] == 8
+    assert 0.2 <= cmp["latency_ratio"] <= 5.0
+    assert 0.2 <= cmp["service_ratio"] <= 5.0
+    assert abs(rep.occupancy - reader.occupancy()) < 0.3
+
+
+def test_cost_model_from_bench_artifact(tmp_path):
+    import json
+    p = tmp_path / "BENCH_X.json"
+    p.write_text(json.dumps(dict(rows=[
+        dict(level="engine", steps_per_s=5e4, compile_s=0.5, steps=120,
+             n_u=10, n_v=20),
+        dict(level="engine", steps_per_s=7e4, compile_s=0.3, steps=200,
+             n_u=16, n_v=32),
+        dict(level="serving", steps_per_s=9e9),     # ignored: not engine
+    ])))
+    cost = CostModel.from_bench(str(p))
+    assert cost.steps_per_s == pytest.approx(6e4)
+    assert cost.compile_s == pytest.approx(0.4)
+    assert cost.source.startswith("bench:")
+    with pytest.raises(ValueError, match="engine"):
+        bad = tmp_path / "empty.json"
+        bad.write_text('{"rows": []}')
+        CostModel.from_bench(str(bad))
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_backpressure_bounds_pending():
+    srv = MBEServer(BucketPolicy(max_batch=4),
+                    admission=AdmissionPolicy(max_pending=2))
+    rids = [srv.admit(g) for g in _stream(5, seed=2)]
+    got = srv.drain()
+    statuses = [got[r].status for r in rids]
+    assert statuses.count("rejected") == 3
+    assert statuses.count("done") == 2
+    st = srv.stats()
+    assert st["admitted"] == 2 and st["rejected"] == 3
+    assert st["rejected_backpressure"] == 3 and st["shed"] == 0
+    for r in rids:
+        if got[r].status == "rejected":
+            assert got[r].reject_reason == "backpressure"
+            assert got[r].steps == 0 and got[r].metric == 0
+
+
+def test_fairness_caps_chatty_tenant():
+    """With weighted shares, the chatty tenant hits its cap while the
+    other tenant still gets in — even though the queue has global
+    room."""
+    srv = MBEServer(BucketPolicy(max_batch=4),
+                    admission=AdmissionPolicy(
+                        tenant_weights={"a": 1.0, "b": 1.0},
+                        fairness_pending_cap=4))
+    graphs = _stream(8, seed=3)
+    rids_a = [srv.admit(g, tenant="a") for g in graphs[:6]]
+    rids_b = [srv.admit(g, tenant="b") for g in graphs[6:]]
+    got = srv.drain()
+    a_status = [got[r].status for r in rids_a]
+    assert "rejected" in a_status            # chatty tenant capped
+    assert all(got[r].status == "done" for r in rids_b)
+    pt = srv.stats()["per_tenant"]
+    assert pt["a"]["rejected"] == a_status.count("rejected")
+    assert pt["a"]["admitted"] + pt["a"]["rejected"] == 6
+    assert pt["b"]["admitted"] == 2 and pt["b"]["completed"] == 2
+
+
+def test_shed_on_deadline_rejects_predicted_miss():
+    """A cold bucket + an impossible deadline sheds at admit: the
+    compile charge alone blows the budget.  A request with no deadline
+    never sheds."""
+    cost = CostModel(steps_per_s=1e4, compile_s=10.0)
+    srv = MBEServer(BucketPolicy(max_batch=4),
+                    admission=AdmissionPolicy(shed_on_deadline=True,
+                                              cost=cost))
+    g1, g2 = _stream(2, seed=4)
+    shed_rid = srv.admit(g1, deadline_s=0.001)
+    free_rid = srv.admit(g2)                  # no deadline: admitted
+    got = srv.drain()
+    assert got[shed_rid].status == "rejected"
+    assert got[shed_rid].reject_reason == "shed"
+    assert got[free_rid].status == "done"
+    assert srv.stats()["shed"] == 1
+
+
+def test_rejected_results_typed_per_engine():
+    """Every registered engine delivers rejection through its own result
+    type with zero'd payload counters — the scheduler never branches on
+    the workload."""
+    for name in list_engines():
+        eng = get_engine(name)
+        g = (random_unipartite(10, 0.3, seed=5) if eng.unipartite
+             else random_graph(8, 16, 0.3, 5, canonical=True))
+        srv = MBEServer(BucketPolicy(max_batch=2), engine=name,
+                        admission=AdmissionPolicy(max_pending=0))
+        rid = srv.admit(g)
+        got = srv.reap()
+        res = got[rid]
+        assert isinstance(res, eng.result_type), name
+        assert res.status == "rejected" and res.rejected, name
+        assert res.reject_reason == "backpressure", name
+        assert res.steps == 0 and res.metric == 0, name
+        assert srv.cache.misses == 0, f"{name}: rejection compiled"
+
+
+def test_admission_controller_estimates_monotone():
+    """More backlog ahead -> longer completion estimate; a warm bucket
+    is cheaper than a cold one by exactly the compile charge."""
+    ctl = AdmissionController(AdmissionPolicy(
+        cost=CostModel(steps_per_s=1e4, compile_s=2.0)))
+    kw = dict(n_u=10, n_v=20, bucket=(16, 32), lanes=4)
+    cold_small = ctl.estimate_completion_s(backlog_steps=0, **kw)
+    cold_big = ctl.estimate_completion_s(backlog_steps=10_000, **kw)
+    assert cold_big > cold_small
+    ctl._seen_buckets.add((16, 32))
+    warm = ctl.estimate_completion_s(backlog_steps=0, **kw)
+    assert cold_small - warm == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_planner_sweep_and_frontier(tmp_path):
+    p, _, _ = _serve_traced(tmp_path, n=8)
+    reader = TraceReader(p)
+    base = BucketPolicy(max_batch=4, steps_per_round=16)
+    cands = candidate_policies(base, steps_per_round=(0, 16),
+                               max_batch=(2, 4))
+    rows = sweep(reader.requests, cands, reader.cost_model())
+    assert len(rows) == 4
+    for r in rows:
+        assert r["predicted_mean_latency_s"] >= 0
+        assert 0.0 <= r["predicted_occupancy"] <= 1.0
+    front = frontier(rows)
+    assert 1 <= len(front) <= len(rows)
+    # Pareto property: no frontier row dominated by any sweep row
+    for f in front:
+        for o in rows:
+            better_lat = o["predicted_mean_latency_s"] \
+                < f["predicted_mean_latency_s"]
+            no_worse = (o["predicted_mean_latency_s"]
+                        <= f["predicted_mean_latency_s"]
+                        and o["predicted_occupancy"]
+                        >= f["predicted_occupancy"])
+            assert not (no_worse and (better_lat or o[
+                "predicted_occupancy"] > f["predicted_occupancy"]))
+
+
+def test_candidate_policies_inherit_base():
+    base = BucketPolicy(big_graph_threshold=99, steps_per_call=3)
+    for pol in candidate_policies(base, steps_per_round=(8,),
+                                  max_batch=(2,)):
+        assert pol.big_graph_threshold == 99
+        assert pol.steps_per_call == 3
+
+
+# ---------------------------------------------------------------------------
+# byte-identity when the SLO layer is off (or merely observing)
+# ---------------------------------------------------------------------------
+
+def _payloads(results):
+    return [(r.name, r.status, int(r.metric), int(r.steps),
+             int(r.nodes), int(getattr(r, "cs", 0))) for r in results]
+
+
+def test_slo_off_and_observing_identical_payloads(tmp_path):
+    """Bare server vs trace-recording server vs permissive-admission
+    server: identical enumeration payloads request for request.  The
+    hooks observe; they must never change what is computed."""
+    graphs = _stream(8, seed=6)
+    bare = MBEClient(MBEOptions(max_batch=4, steps_per_round=16))
+    ref = _payloads(bare.enumerate_many(graphs))
+
+    traced = MBEClient(MBEOptions(max_batch=4, steps_per_round=16,
+                                  trace_path=str(tmp_path / "t.jsonl")))
+    assert _payloads(traced.enumerate_many(graphs)) == ref
+
+    permissive = MBEClient(MBEOptions(
+        max_batch=4, steps_per_round=16,
+        admission=AdmissionPolicy(max_pending=10_000)))
+    assert _payloads(permissive.enumerate_many(graphs)) == ref
+    assert permissive.stats()["admitted"] == 8
+    assert permissive.stats()["rejected"] == 0
+
+
+def test_reset_stats_zeros_monotonic_keeps_gauges():
+    client = MBEClient(MBEOptions(max_batch=4, steps_per_round=16))
+    client.enumerate_many(_stream(4, seed=7))
+    st = client.stats()
+    assert st["batches"] > 0 and st["misses"] > 0
+    entries_before = client.server.cache.stats()["entries"]
+    client.server.reset_stats()
+    st2 = client.stats()
+    assert st2["batches"] == 0 and st2["busy_steps"] == 0
+    assert st2["misses"] == 0 and st2["hits"] == 0
+    assert st2["admitted"] == 0 and st2["per_tenant"] == {}
+    assert st2["occupancy"] == 0.0
+    # gauges survive: live executables + config echoes
+    assert client.server.cache.stats()["entries"] == entries_before
+    assert st2["engine"] == st["engine"]
+    assert st2["executor"] == st["executor"]
+    # the next phase counts from zero but reuses warm executables
+    client.enumerate_many(_stream(4, seed=7))
+    st3 = client.stats()
+    assert st3["batches"] > 0
+    assert st3["misses"] == 0 and st3["hits"] > 0   # warm phase
+
+
+def test_admission_policy_frozen_and_default_off():
+    pol = AdmissionPolicy()
+    assert pol.max_pending is None and not pol.shed_on_deadline
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.max_pending = 3

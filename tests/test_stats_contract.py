@@ -1,0 +1,146 @@
+"""The stats()/result-status schema contract (DESIGN.md §12).
+
+``MBEServer.stats()`` is the operational surface dashboards and the
+bench artifacts consume; this suite pins it as a CONTRACT: the key set
+and value types are exactly ``serving.STATS_SCHEMA`` — across every
+registered engine and all three serving routes (local-pool,
+sharded-mesh, big-graph) — so a stats key can never silently appear,
+vanish, or change type underneath a consumer.  Likewise the result
+lifecycle: every terminal result's ``status`` is one of exactly
+{done, cancelled, timed_out, rejected}, and the server's counters add
+up to the delivered statuses (including the admission ledger and the
+per-tenant split).
+"""
+import pytest
+from _graphs import random_graph
+
+from repro.core.engine import get_engine, list_engines
+from repro.data.generators import dense_small, random_unipartite
+from repro.serving import (MONOTONIC_STATS, STATS_SCHEMA, BucketPolicy,
+                           MBEServer, ShardedExecutor)
+from repro.serving.slo import AdmissionPolicy
+from repro.sharding.axes import mbe_serve_mesh
+
+STATUSES = {"done", "cancelled", "timed_out", "rejected"}
+
+
+def _graphs_for(engine_name: str, n: int = 3, big: bool = False):
+    eng = get_engine(engine_name)
+    if eng.unipartite:
+        size = (lambda i: 18) if big else (lambda i: 8 + i)
+        return [random_unipartite(size(i), 0.3, seed=10 + i,
+                                  name=f"uni{i}")
+                for i in range(n)]
+    if big:
+        return [dense_small(18, 30, p=0.4, seed=10 + i, name=f"big{i}")
+                for i in range(n)]
+    return [random_graph(6 + i, 12, 0.3, 10 + i, canonical=True)
+            for i in range(n)]
+
+
+def _assert_schema(stats: dict) -> None:
+    assert set(stats) == set(STATS_SCHEMA), (
+        f"stats keys drifted: extra={set(stats) - set(STATS_SCHEMA)}, "
+        f"missing={set(STATS_SCHEMA) - set(stats)}")
+    for key, typ in STATS_SCHEMA.items():
+        assert isinstance(stats[key], typ), \
+            f"stats[{key!r}] is {type(stats[key]).__name__}, " \
+            f"schema says {typ}"
+
+
+def test_monotonic_keys_are_schema_keys():
+    assert MONOTONIC_STATS <= set(STATS_SCHEMA)
+
+
+@pytest.mark.parametrize("engine", sorted(list_engines()))
+@pytest.mark.parametrize("route", ["local-pool", "sharded-mesh",
+                                   "big-graph"])
+def test_stats_schema_every_engine_every_route(engine, route):
+    """The full cross product: same key set, same types, regardless of
+    workload engine or execution route."""
+    kw = {}
+    pol = dict(max_batch=2)
+    if route == "sharded-mesh":
+        kw["executor"] = ShardedExecutor(mbe_serve_mesh(1))
+    if route == "big-graph":
+        pol["big_graph_threshold"] = 16
+    srv = MBEServer(BucketPolicy(**pol), engine=engine, **kw)
+    _assert_schema(srv.stats())                    # idle server too
+    big = route == "big-graph"
+    rids = [srv.admit(g) for g in _graphs_for(engine, n=2, big=big)]
+    got = srv.drain()
+    stats = srv.stats()
+    _assert_schema(stats)
+    assert all(got[r].status == "done" for r in rids)
+    if big:
+        routes = [e["route"] for e in srv.routing_log
+                  if e["event"] == "route"]
+        assert "big" in routes, "stream never exercised the big route"
+        assert stats["big_busy_per_worker"], \
+            "big route served but the worker ledger is empty"
+
+
+@pytest.mark.parametrize("engine", sorted(list_engines()))
+def test_result_status_schema_and_counter_consistency(engine):
+    """One server, all four terminal statuses, every engine: statuses
+    come from the closed set, counters and the per-tenant ledger add up
+    to the delivered results."""
+    srv = MBEServer(BucketPolicy(max_batch=2), engine=engine,
+                    admission=AdmissionPolicy(max_pending=3))
+    gs = _graphs_for(engine, n=4)
+    r_done = srv.admit(gs[0], tenant="t")
+    r_dead = srv.admit(gs[1], deadline_s=0.0, tenant="t")
+    r_cancel = srv.admit(gs[2], tenant="t")
+    r_reject = srv.admit(gs[3], tenant="t")        # queue full: rejected
+    assert srv.cancel(r_cancel)
+    got = srv.drain()
+    statuses = {rid: got[rid].status for rid in got}
+    assert set(statuses.values()) == STATUSES
+    assert statuses[r_done] == "done"
+    assert statuses[r_dead] == "timed_out"
+    assert statuses[r_cancel] == "cancelled"
+    assert statuses[r_reject] == "rejected"
+    eng = get_engine(engine)
+    for rid, res in got.items():
+        assert isinstance(res, eng.result_type)
+        assert res.status in STATUSES
+        if res.status != "done":                   # flagged: no payload
+            assert res.metric == 0
+        if res.status == "rejected":
+            assert res.reject_reason in ("backpressure", "fairness",
+                                         "shed")
+            assert res.steps == 0
+    stats = srv.stats()
+    _assert_schema(stats)
+    assert stats["cancelled"] == 1
+    assert stats["timed_out"] == 1
+    assert stats["admitted"] == 3
+    assert stats["rejected"] == stats["rejected_backpressure"] == 1
+    assert stats["shed"] == 0 and stats["rejected_fairness"] == 0
+    pt = stats["per_tenant"]["t"]
+    assert pt == dict(admitted=3, rejected=1, completed=1, cancelled=1,
+                      timed_out=1)
+
+
+def test_reset_stats_covers_exactly_the_monotonic_keys():
+    """After ``reset_stats`` every MONOTONIC key reads zero (empty for
+    containers); gauges and configuration echoes keep their values."""
+    srv = MBEServer(BucketPolicy(max_batch=2),
+                    admission=AdmissionPolicy(max_pending=64))
+    srv.admit(random_graph(6, 12, 0.3, 1, canonical=True))
+    srv.drain()
+    before = srv.stats()
+    assert before["batches"] > 0 and before["admitted"] == 1
+    srv.reset_stats()
+    after = srv.stats()
+    _assert_schema(after)
+    for key in MONOTONIC_STATS:
+        assert after[key] == 0, f"monotonic {key} survived reset"
+    # derived-from-monotonic ratios read zero too
+    assert after["occupancy"] == 0.0
+    assert after["steps_per_poll"] == 0.0
+    assert after["per_tenant"] == {}
+    # gauges/echoes survive
+    assert after["entries"] == before["entries"]
+    assert after["engine"] == before["engine"]
+    assert after["kernel_impl"] == before["kernel_impl"]
