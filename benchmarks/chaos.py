@@ -1,0 +1,200 @@
+"""Chaos harness: fault injection vs fault-free serving, gated.
+
+Three arms serve the SAME request stream per (engine, route) cell:
+
+* **baseline**  — no injector, no retry policy: the reference payloads
+  and the reference ``busy_steps`` ledger.
+* **transient** — ≥10% of round launches raise ``TransientLaunchError``
+  (deterministic schedule) under a ``RetryPolicy``.  Gates: zero lost
+  requests, payloads byte-identical to baseline, and ``busy_steps``
+  EXACTLY equal — the functional-launch invariant means a retried
+  transient launch recomputes *nothing*.
+* **failover**  — the same transient chaos plus one persistent
+  ``DeviceLostError`` mid-stream: the server swaps executors and
+  resumes from host-side checkpoints.  Gates: zero lost requests,
+  payloads byte-identical, exactly one failover, and the retry
+  recomputation (``busy_steps`` above baseline) bounded by the
+  checkpoint interval — each resumed lane replays at most
+  ``checkpoint_interval`` rounds:
+
+      extra_busy <= failovers * checkpoint_interval * steps_per_round
+                    * n_requests
+
+A final **disabled** arm re-serves baseline on a fresh bare server and
+asserts ``stats()`` is byte-identical (the whole fault subsystem is
+inert when off) with every fault counter at zero.
+
+The cells cover every registered engine crossed with both executors
+(local vmap pools and the sharded mesh), so recovery is proven generic
+across engine state pytrees and placements.
+
+Usage:
+  python benchmarks/chaos.py                 # all engines x both routes
+  python benchmarks/chaos.py --smoke --json benchmarks/artifacts/chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro.api import MBEClient, MBEOptions
+from repro.serving import FaultPlan, RetryPolicy, ShardedExecutor
+from repro.sharding.axes import mbe_serve_mesh
+
+LAUNCH_RATE = 0.15          # >= the 10% chaos floor
+MAX_BATCH = 2
+STEPS_PER_ROUND = 16
+CHECKPOINT_INTERVAL = 2
+DEVICE_LOST_AT = 4          # launch ordinal of the persistent loss
+
+
+def stream(engine: str, n: int, seed: int) -> list:
+    from repro.core.engine import get_engine
+    from repro.data.generators import random_unipartite
+    if get_engine(engine).unipartite:
+        return [random_unipartite(8 + i % 4, 0.3, seed=seed + i,
+                                  name=f"uni{i}")
+                for i in range(n)]
+    rng = np.random.default_rng(seed)
+    from repro.data.generators import random_graph_stream
+    return [g for g in random_graph_stream(n, seed=seed)]
+
+
+def serve_arm(engine: str, mesh_n: int | None, graphs: list,
+              retry: RetryPolicy | None = None,
+              plan: FaultPlan | None = None) -> dict:
+    opts = MBEOptions(engine=engine, max_batch=MAX_BATCH,
+                      steps_per_round=STEPS_PER_ROUND,
+                      retry=retry, fault_injector=plan)
+    client = MBEClient(opts)
+    if mesh_n is not None:
+        # rebuild the server on the sharded executor (MBEOptions.mesh
+        # builds one too, but an explicit mesh size keeps CI stable)
+        from repro.serving import MBEServer  # noqa: F401 (doc pointer)
+        client = MBEClient(MBEOptions(engine=engine, max_batch=MAX_BATCH,
+                                      steps_per_round=STEPS_PER_ROUND,
+                                      mesh=mesh_n, retry=retry,
+                                      fault_injector=plan))
+    t0 = time.perf_counter()
+    futs = [client.submit(g) for g in graphs]
+    client.drain()
+    results = {f.rid: f.result() for f in futs}
+    wall = time.perf_counter() - t0
+    stats = client.stats()
+    payloads = {f.name: (results[f.rid].status, results[f.rid].metric,
+                         int(results[f.rid].steps),
+                         int(results[f.rid].nodes))
+                for f in futs}
+    return dict(payloads=payloads, stats=stats, wall_s=wall,
+                n_results=len(results))
+
+
+def run_cell(engine: str, route: str, mesh_n: int | None, n: int,
+             seed: int) -> dict:
+    graphs = stream(engine, n, seed)
+    gates: list[str] = []
+
+    def gate(ok: bool, what: str) -> None:
+        gates.append(("PASS " if ok else "FAIL ") + what)
+        if not ok:
+            raise AssertionError(f"[chaos] {engine}/{route}: {what}")
+
+    base = serve_arm(engine, mesh_n, graphs)
+
+    # -- transient arm: zero-cost retries -------------------------------
+    retry = RetryPolicy(max_attempts=6, backoff_s=1e-5,
+                        checkpoint_interval=CHECKPOINT_INTERVAL)
+    trans = serve_arm(engine, mesh_n, graphs, retry=retry,
+                      plan=FaultPlan(seed=seed, launch_rate=LAUNCH_RATE))
+    gate(trans["n_results"] == n, "transient: zero lost requests")
+    gate(trans["payloads"] == base["payloads"],
+         "transient: payloads byte-identical")
+    gate(trans["stats"]["faults_injected"] > 0,
+         "transient: chaos actually fired")
+    gate(trans["stats"]["busy_steps"] == base["stats"]["busy_steps"],
+         "transient: retries recomputed zero steps")
+    gate(trans["stats"]["failed"] == 0 and trans["stats"]["failovers"] == 0,
+         "transient: no quarantine, no failover")
+
+    # -- failover arm: bounded recomputation -----------------------------
+    fail = serve_arm(engine, mesh_n, graphs, retry=retry,
+                     plan=FaultPlan(seed=seed, launch_rate=LAUNCH_RATE,
+                                    device_lost_after=DEVICE_LOST_AT))
+    gate(fail["n_results"] == n, "failover: zero lost requests")
+    gate(fail["payloads"] == base["payloads"],
+         "failover: payloads byte-identical")
+    gate(fail["stats"]["failovers"] == 1, "failover: exactly one swap")
+    extra = fail["stats"]["busy_steps"] - base["stats"]["busy_steps"]
+    bound = (fail["stats"]["failovers"] * CHECKPOINT_INTERVAL
+             * STEPS_PER_ROUND * n)
+    gate(0 <= extra <= bound,
+         f"failover: recompute {extra} steps within bound {bound}")
+
+    # -- disabled arm: the subsystem is inert when off -------------------
+    off = serve_arm(engine, mesh_n, graphs)
+    gate(off["stats"] == base["stats"],
+         "disabled: stats byte-identical to baseline")
+    gate(all(off["stats"][k] == 0 for k in
+             ("retries", "faults_injected", "checkpoints", "quarantined",
+              "failovers", "failed")),
+         "disabled: fault ledger all zero")
+
+    print(f"[chaos] {engine:>8}/{route}: "
+          f"faults {trans['stats']['faults_injected']}+"
+          f"{fail['stats']['faults_injected']}, "
+          f"retries {trans['stats']['retries']}+"
+          f"{fail['stats']['retries']}, "
+          f"failover recompute {extra}/{bound} steps — all gates pass")
+    return dict(engine=engine, route=route, requests=n,
+                base_busy_steps=base["stats"]["busy_steps"],
+                transient_faults=trans["stats"]["faults_injected"],
+                transient_retries=trans["stats"]["retries"],
+                transient_extra_busy=0,
+                failover_faults=fail["stats"]["faults_injected"],
+                failover_retries=fail["stats"]["retries"],
+                failover_checkpoints=fail["stats"]["checkpoints"],
+                failover_extra_busy=extra, recompute_bound=bound,
+                wall_s=round(base["wall_s"] + trans["wall_s"]
+                             + fail["wall_s"] + off["wall_s"], 3),
+                gates=gates)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one engine (dense), both routes, small stream")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="sharded-route mesh size (devices)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the gate artifact as JSON")
+    args = ap.parse_args()
+
+    engines = ["dense"] if args.smoke else ["dense", "compact", "count",
+                                            "mce"]
+    n = 4 if args.smoke else args.requests
+    rows = []
+    for engine in engines:
+        for route, mesh_n in (("local", None), ("sharded", args.mesh)):
+            rows.append(run_cell(engine, route, mesh_n, n, args.seed))
+
+    payload = dict(bench="chaos", launch_rate=LAUNCH_RATE,
+                   checkpoint_interval=CHECKPOINT_INTERVAL,
+                   steps_per_round=STEPS_PER_ROUND,
+                   device_lost_at=DEVICE_LOST_AT, smoke=args.smoke,
+                   rows=rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[chaos] wrote {args.json}")
+    print(f"[chaos] {len(rows)} cells, every gate green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

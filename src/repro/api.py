@@ -44,11 +44,16 @@ the big-graph routing threshold), and it selects the execution path:
   scalar.
 
 Request lifecycle (DESIGN.md §7): pending -> placed -> running ->
-{done, cancelled, timed_out}.  ``MBEFuture.cancel()`` removes a pending
-request before anything compiles, or evicts an in-flight lane via row
-surgery; an expired ``deadline_s`` completes the request with
-``result.timed_out == True``.  Flagged results carry the partial
-counters made before eviction and ``bicliques=None``.
+{done, cancelled, timed_out, failed, step_capped}.  ``MBEFuture.cancel()``
+removes a pending request before anything compiles, or evicts an
+in-flight lane via row surgery; an expired ``deadline_s`` completes the
+request with ``result.timed_out == True``; a request quarantined by the
+fault-tolerance subsystem (``MBEOptions.retry``, DESIGN.md §13)
+completes with ``status == "failed"`` and a ``fail_reason``; a request
+hitting ``max_graph_steps`` completes with ``status == "step_capped"``
+(unless ``strict_step_cap=True`` restores the legacy raise).  Flagged
+results carry the partial counters made before eviction and
+``bicliques=None``.
 
 The client is a facade over one ``MBEServer`` — ``client.server`` is the
 escape hatch, and ``MBEServer.admit/poll/drain/flush/serve`` remain
@@ -64,8 +69,9 @@ from repro.core.graph import BipartiteGraph, unipartite_graph
 from repro.core.results import (CliqueResult, CountResult, EngineResult,
                                 MBEResult)
 from repro.serving import (AdmissionController, AdmissionPolicy,
-                           BucketPolicy, ExecutableCache, LocalExecutor,
-                           MBEServer, ShardedExecutor, imbalance)
+                           BucketPolicy, ExecutableCache, FaultPlan,
+                           LocalExecutor, MBEServer, RetryPolicy,
+                           ShardedExecutor, imbalance)
 
 
 def engines() -> list[str]:
@@ -157,6 +163,24 @@ class MBEOptions:
     #                               replay simulator and policy planner;
     #                               None = no tracing, no extra branch
 
+    # -- fault tolerance (serving.faults/recovery; DESIGN.md §13) -------
+    retry: RetryPolicy | None = None     # retry / checkpoint / quarantine
+    #                               / failover policy.  None (default) =
+    #                               no recovery machinery, byte-identical
+    #                               serving; a failed round then raises as
+    #                               it always did
+    fault_injector: FaultPlan | None = None  # deterministic fault
+    #                               injection for chaos testing: wraps the
+    #                               executor in a FaultInjector driven by
+    #                               the plan's seed + rates.  None = no
+    #                               wrapper at all
+    strict_step_cap: bool = False  # True restores the legacy behaviour of
+    #                               max_graph_steps: evict capped lanes
+    #                               then RAISE RuntimeError.  False (the
+    #                               new default) completes capped requests
+    #                               with status == "step_capped" carrying
+    #                               their partial counters
+
     # -- placement (serving.executor) ----------------------------------
     mesh: int | str | None = None  # None = one local device; N = 1-D
     #                                serving mesh over N host devices;
@@ -213,7 +237,10 @@ class MBEOptions:
             resident_lanes=self.resident_lanes,
             resident_rebalance=self.resident_rebalance,
             admission=self.admission,
-            trace_path=self.trace_path)
+            trace_path=self.trace_path,
+            retry=self.retry,
+            fault_injector=self.fault_injector,
+            strict_step_cap=self.strict_step_cap)
 
 
 class MBEFuture:

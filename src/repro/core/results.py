@@ -58,13 +58,25 @@ class EngineResult:
     #                             counters by construction
     reject_reason: str = ""     # 'backpressure' | 'fairness' | 'shed'
     #                             when rejected, else ''
+    failed: bool = False        # request could not be computed: quarantined
+    #                             as poison after exhausting retries, or
+    #                             unrecoverable executor failure; counters
+    #                             are the progress before the failure
+    fail_reason: str = ""       # human-readable cause when failed, else ''
+    step_capped: bool = False   # request exceeded max_graph_steps and was
+    #                             evicted (scheduler.enforce_step_cap);
+    #                             counters are the progress at eviction
 
     @property
     def status(self) -> str:
         """Terminal lifecycle state: done | cancelled | timed_out |
-        rejected."""
+        rejected | failed | step_capped."""
         if self.rejected:
             return "rejected"
+        if self.failed:
+            return "failed"
+        if self.step_capped:
+            return "step_capped"
         if self.cancelled:
             return "cancelled"
         if self.timed_out:

@@ -87,6 +87,27 @@ def _request_stream(engine_name: str, n_requests: int, seed: int):
     return random_graph_stream(n_requests, seed=seed)
 
 
+def _retry_policy(args):
+    """Build the ``RetryPolicy`` requested on the command line, or None
+    when ``--retry 0`` (the default — no recovery machinery at all)."""
+    if not args.retry:
+        return None
+    from repro.serving import RetryPolicy
+    return RetryPolicy(max_attempts=args.retry,
+                       checkpoint_interval=args.checkpoint_interval)
+
+
+def _fault_plan(args):
+    """Build the chaos-testing ``FaultPlan``, or None when no fault flag
+    was given (no injector wrapper at all)."""
+    if not args.fault_launch_rate and args.fault_device_lost_at is None:
+        return None
+    from repro.serving import FaultPlan
+    return FaultPlan(seed=args.fault_seed,
+                     launch_rate=args.fault_launch_rate,
+                     device_lost_after=args.fault_device_lost_at)
+
+
 def _admission_policy(args):
     """Build the ``AdmissionPolicy`` requested on the command line, or
     None when no admission flag was given (the default — the SLO layer
@@ -116,7 +137,10 @@ def serve_mbe(args) -> dict:
         big_graph_threshold=args.big_graph_threshold,
         mesh=args.mesh or None,
         admission=_admission_policy(args),
-        trace_path=args.trace))
+        trace_path=args.trace,
+        retry=_retry_policy(args),
+        fault_injector=_fault_plan(args),
+        strict_step_cap=args.strict_step_cap))
     t0 = time.perf_counter()
     if args.deadline_s is not None:
         futs = [client.submit(g, deadline_s=args.deadline_s)
@@ -138,6 +162,14 @@ def serve_mbe(args) -> dict:
                f"(shed {stats['shed']}, "
                f"backpressure {stats['rejected_backpressure']}), "
                f"timed_out {stats['timed_out']}, ")
+    ft = ""
+    if _retry_policy(args) is not None or _fault_plan(args) is not None:
+        ft = (f"faults {stats['faults_injected']}, "
+              f"retries {stats['retries']}, "
+              f"checkpoints {stats['checkpoints']}, "
+              f"quarantined {stats['quarantined']}, "
+              f"failovers {stats['failovers']}, "
+              f"failed {stats['failed']}, ")
     print(f"[serve-mbe] {args.requests} graphs, policy={args.policy}, "
           f"engine={stats['engine']}, executor={stats['executor']}, "
           f"kernels={stats['kernel_impl']} "
@@ -145,7 +177,7 @@ def serve_mbe(args) -> dict:
           f"{mode}: metric total {metric}, "
           f"{stats['batches']} rounds, "
           f"{stats['misses']} compiles ({stats['hits']} cache hits), "
-          f"{slo}"
+          f"{slo}{ft}"
           f"occupancy {stats['occupancy']:.2f}, "
           f"{stats['busy_steps'] / dt:.0f} steps/s "
           f"({stats['steps_per_poll']:.0f} steps/poll, "
@@ -224,6 +256,27 @@ def serve(argv=None) -> dict:
                     help="MBE: per-request wall-clock deadline in "
                          "seconds (enables timed_out, and with "
                          "--admit-shed, at-admit shedding)")
+    ap.add_argument("--retry", type=int, default=0,
+                    help="MBE fault tolerance: retry failed round "
+                         "launches up to N attempts (with checkpointing, "
+                         "quarantine and failover; 0 = recovery off)")
+    ap.add_argument("--checkpoint-interval", type=int, default=4,
+                    help="MBE fault tolerance: polls between lane-state "
+                         "checkpoints (0 = no checkpointing)")
+    ap.add_argument("--fault-launch-rate", type=float, default=0.0,
+                    help="MBE chaos testing: inject transient launch "
+                         "faults at this per-launch rate (deterministic "
+                         "per-site schedule from --fault-seed)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="MBE chaos testing: fault-schedule seed")
+    ap.add_argument("--fault-device-lost-at", type=int, default=None,
+                    help="MBE chaos testing: the Nth launch raises a "
+                         "persistent DeviceLostError (exercises "
+                         "checkpoint-restore failover)")
+    ap.add_argument("--strict-step-cap", action="store_true",
+                    help="MBE: restore the legacy max_graph_steps "
+                         "behaviour (evict + raise) instead of typed "
+                         "status=='step_capped' results")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)

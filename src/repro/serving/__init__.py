@@ -29,6 +29,18 @@ compilation across them.  Four pieces:
   ``repro.core.engine`` (``engine="compact"`` serves the paper's compact
   array); routing decisions land in ``routing_log``.
 
+* ``faults`` / ``recovery`` — the fault-tolerance subsystem (DESIGN.md
+  §13): a deterministic seed-driven ``FaultInjector`` that wraps any
+  ``Executor`` (transient launch faults, persistent device loss,
+  corrupted done-mask reads, compile failures — per-site schedules, so
+  chaos runs reproduce), and the recovery half the scheduler wires in:
+  ``RetryPolicy`` (bounded deadline-aware backoff with deterministic
+  jitter), ``CheckpointStore`` (per-request host-side lane-state
+  snapshots every K polls), poison quarantine (bisect a repeatedly
+  failing pool down to the culprit request → typed ``failed`` result),
+  and degraded-mode failover onto a fallback executor.  All off by
+  default; disabled, every serving path is byte-identical.
+
 * ``slo``       — the SLO serving subsystem (DESIGN.md §12): JSONL
   request tracing (``TraceRecorder``) hooked into admit/poll/demux, a
   host-side discrete-event replay simulator calibrated from committed
@@ -49,6 +61,12 @@ from repro.serving.cache import CacheEntry, ExecutableCache    # noqa: F401
 from repro.serving.executor import (BigGraphLane, Executor,    # noqa: F401
                                     LanePool, LocalExecutor,
                                     RoundTelemetry, ShardedExecutor)
+from repro.serving.faults import (DeviceLostError, FaultError,  # noqa: F401
+                                  FaultInjector, FaultPlan,
+                                  InjectedCompileError, PoisonError,
+                                  TransientLaunchError)
+from repro.serving.recovery import (CheckpointStore,           # noqa: F401
+                                    RetryPolicy, verified_read)
 from repro.serving.scheduler import (MONOTONIC_STATS,          # noqa: F401
                                      STATS_SCHEMA, MBEResult,
                                      MBEServer, Request, imbalance)

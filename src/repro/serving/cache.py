@@ -60,14 +60,26 @@ class CacheEntry:
     (timed into ``compile_s``), then runs the compiled executable; later
     calls go straight to the compiled object.  ``compile_s`` stays 0.0
     until the first call and is never charged twice.
+
+    A FAILED compile commits nothing: ``_compiled`` stays ``None``,
+    ``compile_s`` stays 0.0, and the owning ``ExecutableCache`` is told
+    (via the ``on_failed`` hook) to drop the entry and roll back its miss
+    count — so a compile failure can neither leave a poisoned entry in
+    the cache nor inflate the compile counter.  If the SAME entry object
+    is later called again and compiles successfully (a retry), the
+    ``on_compiled`` hook re-commits it, so the cache and its counters end
+    up exactly as if the failure never happened.
     """
 
-    __slots__ = ("_jit", "_compiled", "compile_s")
+    __slots__ = ("_jit", "_compiled", "compile_s", "_on_compiled",
+                 "_on_failed")
 
-    def __init__(self, fn):
+    def __init__(self, fn, on_compiled=None, on_failed=None):
         self._jit = fn
         self._compiled = None
         self.compile_s = 0.0
+        self._on_compiled = on_compiled
+        self._on_failed = on_failed
 
     @property
     def compiled(self) -> bool:
@@ -76,8 +88,16 @@ class CacheEntry:
     def __call__(self, ctx: ed.GraphContext, s: ed.DenseState):
         if self._compiled is None:
             t0 = time.perf_counter()
-            self._compiled = self._jit.lower(ctx, s).compile()
+            try:
+                compiled = self._jit.lower(ctx, s).compile()
+            except Exception:
+                if self._on_failed is not None:
+                    self._on_failed(self)
+                raise
             self.compile_s = time.perf_counter() - t0
+            self._compiled = compiled
+            if self._on_compiled is not None:
+                self._on_compiled(self)
         return self._compiled(ctx, s)
 
     def timed_call(self, ctx: ed.GraphContext, s: ed.DenseState):
@@ -112,19 +132,51 @@ class ExecutableCache:
         """Generic keyed lookup: on miss, ``build()`` must return a jitted
         ``(ctx, state) -> ...`` function which is wrapped in a lazily
         AOT-compiled ``CacheEntry``.  Executors use this to register their
-        backend-specific round functions under backend-qualified keys."""
+        backend-specific round functions under backend-qualified keys.
+
+        Compile-failure safety: the entry is inserted (and the miss
+        counted) here, but if its first AOT compile RAISES the entry is
+        evicted and the miss rolled back (``_discard``), so a failed
+        compile never leaves a poisoned entry and the miss count stays an
+        honest count of successful compiles.  A later request for the
+        key builds afresh; a retry of the same entry object re-commits on
+        success (``_commit``)."""
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
             self._entries.move_to_end(key)      # LRU touch
             return entry
         self.misses += 1
-        entry = CacheEntry(build())
+        entry = CacheEntry(build(),
+                           on_compiled=lambda e: self._commit(key, e),
+                           on_failed=lambda e: self._discard(key, e))
         self._entries[key] = entry
         if self.capacity is not None and len(self._entries) > self.capacity:
             self._entries.popitem(last=False)   # drop the coldest
             self.evictions += 1
         return entry
+
+    def _discard(self, key, entry: CacheEntry) -> None:
+        """Compile failed: drop the entry (only if it is still the
+        resident one — it may have been LRU-evicted meanwhile) and roll
+        back the miss, so ``misses`` never counts a failed compile."""
+        if self._entries.get(key) is entry:
+            del self._entries[key]
+            self.misses = max(self.misses - 1, 0)
+
+    def _commit(self, key, entry: CacheEntry) -> None:
+        """Successful compile: ensure the entry holds a slot (it is a
+        no-op on the normal path where ``get_entry`` already inserted it;
+        it re-inserts after a failure rollback when the same entry object
+        was retried and succeeded).  If ANOTHER entry took the key in the
+        meantime, the incumbent wins — no overwrite, no double count."""
+        if key in self._entries:
+            return
+        self.misses += 1
+        self._entries[key] = entry
+        if self.capacity is not None and len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
 
     def get_round(self, cfg: ed.EngineConfig, batch: int,
                   max_steps: int | None = None,

@@ -1,0 +1,146 @@
+"""Retry, checkpoint and read-verification primitives (DESIGN.md §13).
+
+The recovery contract exploits two structural facts of the serving stack:
+
+1. **Launches are functional.**  Every executor assigns ``pool.state``
+   only AFTER a successful ``timed_call`` — a raised launch leaves the
+   pool's device state exactly as it was, so retrying a transient launch
+   fault costs ZERO recomputation and is byte-identical by construction.
+2. **Engine states are pytrees.**  A lane's entire in-flight search state
+   is a small fixed-shape pytree (cuMBE's non-recursive compact arrays),
+   so ``CheckpointStore`` can snapshot it host-side generically across
+   every registered engine, and a failed-over executor can resume the
+   lane from the snapshot: the engine is deterministic, so replaying the
+   ≤K rounds since the last checkpoint reproduces the identical result.
+
+``RetryPolicy`` is the knob surface: bounded attempts, exponential
+backoff with *deterministic* jitter (seeded per ``(site, attempt)`` so
+chaos runs reproduce), deadline-awareness (a retry never sleeps past the
+earliest live deadline), and ``failover`` gating the degraded-mode
+executor swap.  Like the SLO layer, everything here is OFF by default —
+``MBEServer(retry=None)`` takes no extra branch on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro.serving.faults import FaultError, u01
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How the scheduler responds to a failed round launch."""
+
+    max_attempts: int = 3           # total tries per round (1 = no retry)
+    backoff_s: float = 0.001        # base sleep before attempt 2
+    backoff_mult: float = 2.0       # exponential growth per attempt
+    max_backoff_s: float = 0.25     # backoff ceiling
+    jitter: float = 0.5             # +- fraction of the base delay
+    seed: int = 0                   # jitter schedule seed (deterministic)
+    checkpoint_interval: int = 4    # polls between lane snapshots
+    #                                 (0 = no checkpointing: failover
+    #                                 restarts requests from scratch)
+    failover: bool = True           # swap executors on DeviceLostError
+    retry_on: tuple = (FaultError,)     # exception types worth retrying
+
+    def delay_s(self, site: str, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based count of failures so
+        far) at ``site``, with deterministic jitter in
+        ``[1 - jitter, 1 + jitter] x base`` — seeded per (site, attempt)
+        so two identical runs sleep identically."""
+        base = min(self.backoff_s * self.backoff_mult ** (attempt - 1),
+                   self.max_backoff_s)
+        u = u01(f"{self.seed}:{site}:{attempt}")
+        return base * (1.0 - self.jitter + 2.0 * self.jitter * u)
+
+
+@dataclasses.dataclass
+class LaneSnapshot:
+    """One lane's host-side checkpoint: the engine state pytree (NumPy
+    leaves — device-independent, so it restores onto ANY executor) plus
+    the request's latency attribution at snapshot time."""
+
+    state: object
+    queue_s: float
+    service_s: float
+    compile_s: float
+
+
+class CheckpointStore:
+    """Per-request lane snapshots, keyed by rid.
+
+    Keying by rid (not by lane index) is what makes restore safe against
+    the scheduler's churn: a lane demuxed and refilled after the snapshot
+    belongs to a DIFFERENT rid, so restoring can never resurrect an
+    already-delivered result — only the current occupant's own snapshot
+    is ever offered back.
+    """
+
+    def __init__(self):
+        self._snaps: dict[int, LaneSnapshot] = {}
+        self.taken = 0                  # monotonic snapshot count
+
+    def put(self, rid: int, state, *, queue_s: float, service_s: float,
+            compile_s: float) -> None:
+        """Snapshot one lane: leaves are materialized host-side as NumPy
+        (a device-array checkpoint would die with its device)."""
+        self._snaps[rid] = LaneSnapshot(
+            state=jax.tree.map(np.asarray, state), queue_s=queue_s,
+            service_s=service_s, compile_s=compile_s)
+        self.taken += 1
+
+    def get(self, rid: int) -> LaneSnapshot | None:
+        return self._snaps.get(rid)
+
+    def pop(self, rid: int) -> LaneSnapshot | None:
+        return self._snaps.pop(rid, None)
+
+    def __len__(self) -> int:
+        return len(self._snaps)
+
+    def rids(self) -> list[int]:
+        return sorted(self._snaps)
+
+
+def verified_read(read, max_reads: int = 12, votes: int = 3):
+    """Read until one VALUE has been returned ``votes`` times — the
+    corrupted-read recovery primitive.  Transient read corruption flips a
+    value on one read independently of the next, so the true value
+    accumulates repeats while corrupted variants scatter; the first value
+    to collect ``votes`` identical reads (in ANY positions, not
+    consecutive) wins.  Votes need not be consecutive because an
+    alternating corrupt/clean/corrupt stream must not starve the clean
+    value of credit; and ``votes=3`` (not 2) because two corruptions can
+    collide on the same flipped bit — a three-way collision is what it
+    takes to out-vote the truth.  Returns ``(value, mismatches)`` where
+    ``mismatches`` counts reads disagreeing with their predecessor (0 on
+    the clean path, which costs ``votes`` reads).  After ``max_reads``
+    the modal value wins (corruption that persistent is
+    indistinguishable from truth).
+
+    The verification is statistical, and weakest on single-lane pools:
+    there a corrupted read can only ever produce ONE wrong value (the
+    lone bit flipped), so every corruption votes for the same impostor
+    and at per-read corruption rates ≳10%% it can collect ``votes``
+    before the truth does.  Real transient read corruption is orders of
+    magnitude rarer; chaos tests pin a seed, which makes the outcome
+    reproducible either way."""
+    counts: dict[bytes, int] = {}
+    first: dict[bytes, object] = {}
+    prev_key = None
+    mismatches = 0
+    for _ in range(max_reads):
+        cur = read()
+        key = np.asarray(cur).tobytes()
+        if prev_key is not None and key != prev_key:
+            mismatches += 1
+        prev_key = key
+        counts[key] = counts.get(key, 0) + 1
+        first.setdefault(key, cur)
+        if counts[key] >= votes:
+            return cur, mismatches
+    modal = max(counts, key=lambda k: counts[k])
+    return first[modal], mismatches

@@ -106,6 +106,9 @@ from repro.serving.buckets import (BucketPolicy, BucketSpec, plan_bucket,
                                    plan_route)
 from repro.serving.cache import ExecutableCache
 from repro.serving.executor import BigGraphLane, Executor, LocalExecutor
+from repro.serving.faults import DeviceLostError, FaultInjector, FaultPlan
+from repro.serving.recovery import (CheckpointStore, RetryPolicy,
+                                    verified_read)
 from repro.serving.slo.admission import (AdmissionController,
                                          AdmissionPolicy)
 from repro.serving.slo.trace import TraceRecorder
@@ -141,6 +144,8 @@ STATS_SCHEMA: dict[str, type | tuple] = dict(
     admitted=int, rejected=int, shed=int, rejected_backpressure=int,
     rejected_fairness=int, per_tenant=dict,
     big_busy_per_worker=list, big_imbalance=float,
+    failed=int, step_capped=int, retries=int, faults_injected=int,
+    checkpoints=int, quarantined=int, failovers=int,
     hits=int, misses=int, entries=int, evictions=int)
 
 # Monotonic counters (reset by ``MBEServer.reset_stats``); everything
@@ -150,6 +155,8 @@ MONOTONIC_STATS = frozenset((
     "idle_lane_steps", "launches", "rebalanced_steps", "cancelled",
     "timed_out", "admitted", "rejected", "shed",
     "rejected_backpressure", "rejected_fairness",
+    "failed", "step_capped", "retries", "faults_injected",
+    "checkpoints", "quarantined", "failovers",
     "hits", "misses", "evictions"))
 
 
@@ -244,22 +251,37 @@ class _LanePool:
             r = queue.popleft()
             idx.append(i)
             ctxs.append(server.engine.make_context(r.graph, self.cfg))
-            states.append(server.engine.fresh_lane_state(self.cfg,
-                                                         r.graph.n_u))
+            snap = server._resume.pop(r.rid, None)
+            if snap is not None:
+                # failover / quarantine-exoneration resume: the lane
+                # restarts from its last host-side checkpoint instead of
+                # from scratch (engines are deterministic, so replaying
+                # the <=K rounds since the snapshot is byte-identical);
+                # the latency attribution picks up where it left off
+                states.append(snap.state)
+                self._queue_s[i] = snap.queue_s
+                self._service_s[i] = snap.service_s
+                self._compile_s[i] = snap.compile_s
+            else:
+                states.append(server.engine.fresh_lane_state(
+                    self.cfg, r.graph.n_u))
+                self._queue_s[i] = time.perf_counter() - r.t_admit
+                self._service_s[i] = 0.0
+                self._compile_s[i] = 0.0
             self.reqs[i] = r
-            self._queue_s[i] = time.perf_counter() - r.t_admit
-            self._service_s[i] = 0.0
-            self._compile_s[i] = 0.0
         if idx:
             server.executor.install(self.pool, idx, states, ctxs)
         return len(idx)
 
-    def run_round(self, server: "MBEServer") -> None:
+    def run_round(self, server: "MBEServer") -> bool:
         """One bounded executor round over all lanes; occupancy
-        accounting."""
+        accounting.  Returns False when the round was consumed by the
+        recovery layer instead (retries exhausted -> quarantine): the
+        pool's occupants were requeued or failed, nothing to demux."""
         budget = server._round_budget()
-        tel = server.executor.run_round(self.pool, server.cache, budget,
-                                        unroll=server.policy.steps_per_call)
+        tel = server._run_pool_round(self, budget)
+        if tel is None:
+            return False
         exec_s = max(tel.wall_s - tel.compile_s, 0.0)
         adv = tel.adv                                   # per-lane steps
         busy = int(adv.sum())
@@ -285,9 +307,14 @@ class _LanePool:
                 continue
             self._service_s[i] += exec_s
             self._compile_s[i] += tel.compile_s
+        return True
 
     def enforce_step_cap(self, server: "MBEServer") -> None:
-        """Evict-then-raise for lanes that blew ``max_graph_steps``.
+        """Terminate lanes that blew ``max_graph_steps`` with a typed
+        ``status="step_capped"`` result (the ``rejected``/``timed_out``
+        pattern): a runaway graph never aborts the caller's ``poll()``.
+        ``MBEServer(strict_step_cap=True)`` preserves the historical
+        evict-then-raise instead.
 
         Called AFTER demux, so results computed in the offending round are
         already delivered; eviction (dummy state surgery) frees the slot
@@ -296,26 +323,39 @@ class _LanePool:
         cap = server.max_graph_steps
         if cap is None:
             return
-        done = server.executor.done_mask(self.pool)
+        done = server._pool_done_mask(self)
         steps = server.executor.steps(self.pool)
         dead = [i for i, r in enumerate(self.reqs)
                 if r is not None and not done[i] and int(steps[i]) >= cap]
         if not dead:
             return
-        names = [f"request {self.reqs[i].rid} ({self.reqs[i].graph.name})"
-                 for i in dead]
+        if server.strict_step_cap:
+            names = [f"request {self.reqs[i].rid} "
+                     f"({self.reqs[i].graph.name})" for i in dead]
+            for i in dead:
+                server.executor.evict(self.pool, i)
+                self.reqs[i] = None
+            raise RuntimeError(
+                f"{'; '.join(names)} exceeded max_graph_steps={cap} "
+                f"without finishing; evicted (other requests remain "
+                f"servable)")
         for i in dead:
+            r = self.reqs[i]
+            counters = server._lane_counters(
+                server.executor.lane(self.pool, i))
             server.executor.evict(self.pool, i)
             self.reqs[i] = None
-        raise RuntimeError(
-            f"{'; '.join(names)} exceeded max_graph_steps={cap} without "
-            f"finishing; evicted (other requests remain servable)")
+            server._completed[r.rid] = server._flagged_result(
+                r, queue_s=self._queue_s[i],
+                service_s=self._service_s[i],
+                compile_s=self._compile_s[i], counters=counters,
+                step_capped=True)
 
     def demux(self, server: "MBEServer") -> dict[int, EngineResult]:
         """Decode every finished lane into a result and free its slot.
         The payload comes from ``Engine.finish`` — the scheduler never
         names a concrete result class."""
-        done = server.executor.done_mask(self.pool)
+        done = server._pool_done_mask(self)
         results: dict[int, EngineResult] = {}
         for i, r in enumerate(self.reqs):
             if r is None or not done[i]:
@@ -364,7 +404,11 @@ class MBEServer:
                  resident_rebalance: bool = False,
                  admission: AdmissionController | AdmissionPolicy
                  | None = None,
-                 trace_path: str | None = None):
+                 trace_path: str | None = None,
+                 retry: RetryPolicy | None = None,
+                 fault_injector: FaultPlan | None = None,
+                 strict_step_cap: bool = False,
+                 failover_executor: Executor | None = None):
         self.policy = policy or BucketPolicy()
         self.collect_cap = collect_cap
         self.collect = collect
@@ -375,7 +419,23 @@ class MBEServer:
         self.resident_lanes = resident_lanes
         self.resident_rebalance = resident_rebalance
         self.max_graph_steps = max_graph_steps
+        self.strict_step_cap = strict_step_cap
         self.executor = executor or LocalExecutor()
+        # fault/recovery subsystem (serving.faults / serving.recovery):
+        # both OFF by default — with no plan and no retry policy the
+        # admit/poll/demux paths take no extra branch and stay
+        # byte-identical to a server built without them
+        self.retry = retry
+        self.failover_executor = failover_executor
+        self._injectors: list[FaultInjector] = []
+        if fault_injector is not None:
+            self.executor = FaultInjector(self.executor, fault_injector)
+            self._injectors.append(self.executor)
+        self._ckpt = CheckpointStore() if retry is not None else None
+        self._resume: dict[int, object] = {}    # rid -> LaneSnapshot to
+        #                                         restore at next placement
+        self._poll_i = 0
+        self._failed_over = False
         self.engine = get_engine(engine)
         self.cache = ExecutableCache(capacity=cache_capacity)
         # SLO layer (serving.slo): both default OFF — with no controller
@@ -403,6 +463,14 @@ class MBEServer:
         self._rebalanced_steps = 0
         self._n_cancelled = 0
         self._n_timed_out = 0
+        self._n_failed = 0
+        self._n_step_capped = 0
+        self._n_retries = 0
+        self._n_checkpoints = 0
+        self._n_quarantined = 0
+        self._n_failovers = 0
+        self._faults_base = 0       # reset_stats marker into the
+        #                             injectors' cumulative fault count
         self._n_admitted = 0
         self._n_rejected = 0
         self._per_tenant: dict[str, dict] = {}
@@ -510,7 +578,8 @@ class MBEServer:
     def _tenant_stat(self, tenant: str, key: str, n: int = 1) -> None:
         t = self._per_tenant.setdefault(
             tenant, dict(admitted=0, rejected=0, completed=0,
-                         cancelled=0, timed_out=0))
+                         cancelled=0, timed_out=0, failed=0,
+                         step_capped=0))
         t[key] += n
 
     def _tenants_pending(self) -> dict[str, int]:
@@ -647,13 +716,35 @@ class MBEServer:
     def _poll_big(self) -> None:
         """Advance the big-graph lane one work-stealing round: place the
         next queued big request if the lane is free, run a round, demux on
-        completion, enforce the step cap (evict-then-raise)."""
+        completion, enforce the step cap (typed ``step_capped`` result,
+        or evict-then-raise under ``strict_step_cap``)."""
         if self._big is None:
             if not self._big_queue:
                 return
             self._start_big()
         slot = self._big
-        tel = slot.lane.run_round()
+        try:
+            tel = self._with_retry("big", slot.lane.run_round,
+                                   deadline=slot.req.deadline)
+        except DeviceLostError:
+            raise
+        except (self.retry.retry_on if self.retry is not None
+                else ()) as e:
+            # retries exhausted and the lane is alone on its route: the
+            # big graph IS the poison — fail it, keep serving the queue
+            self._n_quarantined += 1
+            counters = self.engine.stacked_counters(slot.lane.state)
+            self._big = None
+            self._completed[slot.req.rid] = self._flagged_result(
+                slot.req, queue_s=slot.queue_s,
+                service_s=slot.service_s, compile_s=slot.compile_s,
+                counters=counters, failed=True,
+                fail_reason=f"big-graph round failed "
+                            f"{self.retry.max_attempts}x: {e}")
+            if self.trace is not None:
+                self.trace.recovery(action="quarantine",
+                                    detail=f"big rid={slot.req.rid}")
+            return
         exec_s = max(tel.wall_s - tel.compile_s, 0.0)
         slot.service_s += exec_s
         slot.compile_s += tel.compile_s
@@ -686,11 +777,18 @@ class MBEServer:
         cap = self.max_graph_steps
         if cap is not None and slot.lane.max_worker_steps() >= cap:
             rid, name = slot.req.rid, slot.req.graph.name
+            if self.strict_step_cap:
+                self._big = None    # evict: the lane is dropped whole
+                raise RuntimeError(
+                    f"request {rid} ({name}) exceeded "
+                    f"max_graph_steps={cap} without finishing; evicted "
+                    f"(other requests remain servable)")
+            counters = self.engine.stacked_counters(slot.lane.state)
             self._big = None        # evict: the lane is dropped whole
-            raise RuntimeError(
-                f"request {rid} ({name}) exceeded max_graph_steps={cap} "
-                f"without finishing; evicted (other requests remain "
-                f"servable)")
+            self._completed[rid] = self._flagged_result(
+                slot.req, queue_s=slot.queue_s,
+                service_s=slot.service_s, compile_s=slot.compile_s,
+                counters=counters, step_capped=True)
 
     def _demux_big(self, slot: _BigSlot) -> EngineResult:
         """Merge the work-stealing workers into one result via
@@ -716,14 +814,17 @@ class MBEServer:
                         cancelled: bool = False,
                         timed_out: bool = False,
                         rejected: bool = False,
-                        reject_reason: str = "") -> EngineResult:
+                        reject_reason: str = "",
+                        failed: bool = False,
+                        fail_reason: str = "",
+                        step_capped: bool = False) -> EngineResult:
         """Terminal result for a request that did not run to completion
-        (cancelled, deadline-expired, or refused at admission).
-        ``counters`` carries the partial progress read from the evicted
-        lane (zeros for never-placed and rejected requests);
-        ``Engine.partial`` shapes it into the engine's payload with
-        nothing materialized — a partial collect buffer is not an
-        answer."""
+        (cancelled, deadline-expired, refused at admission, quarantined
+        as poison, or step-capped).  ``counters`` carries the partial
+        progress read from the evicted lane (zeros for never-placed and
+        rejected requests); ``Engine.partial`` shapes it into the
+        engine's payload with nothing materialized — a partial collect
+        buffer is not an answer."""
         payload = self.engine.partial(
             counters, cfg=self._engine_config(req.bucket))
         res = self.engine.make_result(
@@ -731,14 +832,22 @@ class MBEServer:
             latency_s=queue_s + service_s + compile_s, queue_s=queue_s,
             service_s=service_s, compile_s=compile_s,
             cancelled=cancelled, timed_out=timed_out,
-            rejected=rejected, reject_reason=reject_reason, **payload)
+            rejected=rejected, reject_reason=reject_reason,
+            failed=failed, fail_reason=fail_reason,
+            step_capped=step_capped, **payload)
         self._n_cancelled += int(cancelled)
         self._n_timed_out += int(timed_out)
+        self._n_failed += int(failed)
+        self._n_step_capped += int(step_capped)
         self.routing_log.append(dict(
             event=("rejected" if rejected else
-                   "cancel" if cancelled else "deadline"), rid=req.rid,
+                   "cancel" if cancelled else
+                   "failed" if failed else
+                   "step-cap" if step_capped else "deadline"),
+            rid=req.rid,
             graph=req.graph.name, executor=self.executor.name,
-            **(dict(reason=reject_reason) if rejected else {})))
+            **(dict(reason=reject_reason) if rejected else
+               dict(reason=fail_reason) if failed else {})))
         return res
 
     def _lane_counters(self, lane) -> dict:
@@ -833,14 +942,263 @@ class MBEServer:
                 compile_s=big.compile_s, counters=counters,
                 timed_out=True)
 
+    # -- recovery (serving.faults / serving.recovery) -------------------
+    def _pool_done_mask(self, lanepool: _LanePool) -> np.ndarray:
+        """The scheduler's one done-mask read point.  With a retry policy
+        attached, the read is VERIFIED (two consecutive agreeing reads)
+        so a transiently corrupted scoreboard read cannot demux an
+        unfinished lane or strand a finished one; without one, it is the
+        plain single read (byte-identical off path)."""
+        if self.retry is None:
+            return self.executor.done_mask(lanepool.pool)
+        mask, mismatches = verified_read(
+            lambda: self.executor.done_mask(lanepool.pool))
+        if mismatches and self.trace is not None:
+            self.trace.fault(site="done_mask", kind="corrupted-read")
+        return mask
+
+    def _with_retry(self, site: str, fn, deadline: float | None = None):
+        """Run ``fn`` under the retry policy: on a retryable fault, sleep
+        the policy's deterministic backoff and try again, up to
+        ``max_attempts`` total tries.  Deadline-aware: the backoff sleep
+        is clamped so a retry never sleeps past ``deadline`` (the
+        earliest live deadline at the site) — an expiring request times
+        out on schedule instead of burning its budget in backoff.
+        ``DeviceLostError`` is never retried here (the executor is gone;
+        the poll-level failover handles it)."""
+        pol = self.retry
+        if pol is None:
+            return fn()
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                return fn()
+            except DeviceLostError:
+                raise
+            except pol.retry_on as e:
+                if self.trace is not None:
+                    self.trace.fault(site=site, kind=type(e).__name__)
+                if attempt >= pol.max_attempts:
+                    raise
+                delay = pol.delay_s(site, attempt)
+                if deadline is not None:
+                    delay = min(delay,
+                                max(deadline - time.perf_counter(), 0.0))
+                self._n_retries += 1
+                if self.trace is not None:
+                    self.trace.retry(site=site, attempt=attempt,
+                                     delay_s=delay)
+                if delay > 0:
+                    time.sleep(delay)
+
+    def _run_pool_round(self, lanepool: _LanePool, budget):
+        """One executor round with the recovery ladder: transient faults
+        are retried in place (launches are functional — a raised launch
+        committed no state, so the retry recomputes NOTHING); retries
+        exhausted hands the pool to quarantine bisection; device-lost
+        propagates to the poll-level failover.  Returns the round's
+        telemetry, or None when quarantine consumed the round."""
+        def run():
+            return self.executor.run_round(
+                lanepool.pool, self.cache, budget,
+                unroll=self.policy.steps_per_call)
+
+        if self.retry is None:
+            return run()
+        deadlines = [r.deadline for r in lanepool.reqs
+                     if r is not None and r.deadline is not None]
+        site = f"pool[{lanepool.bucket.n_u}x{lanepool.bucket.n_v}]"
+        try:
+            return self._with_retry(
+                site, run, deadline=min(deadlines) if deadlines else None)
+        except DeviceLostError:
+            raise
+        except self.retry.retry_on as e:
+            self._quarantine(lanepool, e)
+            return None
+
+    def _probe_fails(self, lanepool: _LanePool, reqs: list[Request],
+                     budget) -> bool:
+        """Quarantine probe: install ``reqs`` fresh into the (emptied)
+        pool, run one round under the retry policy, evict again.  True
+        means the group still fails after retries — the poison is in this
+        group.  Probe work is throwaway (the survivors restart from their
+        checkpoints/fresh on requeue), so it enters no occupancy ledger."""
+        idx = list(range(len(reqs)))
+        states = [self.engine.fresh_lane_state(lanepool.cfg, r.graph.n_u)
+                  for r in reqs]
+        ctxs = [self.engine.make_context(r.graph, lanepool.cfg)
+                for r in reqs]
+        self.executor.install(lanepool.pool, idx, states, ctxs)
+        try:
+            self._with_retry(
+                "quarantine-probe",
+                lambda: self.executor.run_round(
+                    lanepool.pool, self.cache, budget,
+                    unroll=self.policy.steps_per_call))
+            return False
+        except DeviceLostError:
+            raise
+        except self.retry.retry_on:
+            return True
+        finally:
+            for i in idx:
+                self.executor.evict(lanepool.pool, i)
+
+    def _quarantine(self, lanepool: _LanePool, err: Exception) -> None:
+        """A pool failed ``max_attempts`` consecutive launches: isolate
+        the poisoned request by group-testing bisection.  All live lanes
+        are evicted; candidate halves are probed with FRESH restarts (a
+        failing probe narrows to that half), exonerated requests are
+        requeued (resuming from their checkpoints when available), and
+        the isolated request — confirmed by a final solo probe — finishes
+        as a typed ``status="failed"`` result.  If the solo probe passes,
+        the group failure was a transient streak: everyone is requeued
+        and nobody is failed."""
+        bucket = lanepool.bucket
+        queue = self._queues.setdefault(bucket, _PendingQueue())
+        suspects: list[Request] = []
+        for i, r in enumerate(lanepool.reqs):
+            if r is None:
+                continue
+            suspects.append(r)
+            self.executor.evict(lanepool.pool, i)
+            lanepool.reqs[i] = None
+        self.routing_log.append(dict(
+            event="quarantine", bucket=(bucket.n_u, bucket.n_v),
+            suspects=[r.rid for r in suspects],
+            executor=self.executor.name, reason=str(err)))
+        if self.trace is not None:
+            self.trace.recovery(
+                action="quarantine",
+                detail=f"bucket={bucket.n_u}x{bucket.n_v} "
+                       f"suspects={[r.rid for r in suspects]}")
+        budget = self._round_budget()
+        cand, cleared = suspects, []
+        while len(cand) > 1:
+            half, rest = cand[: len(cand) // 2], cand[len(cand) // 2:]
+            if self._probe_fails(lanepool, half, budget):
+                cleared.extend(rest)
+                cand = half
+            else:
+                cleared.extend(half)
+                cand = rest
+        poison = cand[0] if cand else None
+        if poison is not None and len(suspects) > 1 \
+                and not self._probe_fails(lanepool, [poison], budget):
+            cleared.append(poison)      # transient streak, not poison:
+            poison = None               # nobody gets failed
+        for r in cleared:
+            snap = self._ckpt.get(r.rid) if self._ckpt is not None \
+                else None
+            if snap is not None:
+                self._resume[r.rid] = snap
+            queue.append(r)
+        if poison is None:
+            return
+        self._n_quarantined += 1
+        self._completed[poison.rid] = self._flagged_result(
+            poison, queue_s=time.perf_counter() - poison.t_admit,
+            failed=True,
+            fail_reason=f"quarantined: pool round failed "
+                        f"{self.retry.max_attempts}x and bisection "
+                        f"isolated this request ({err})")
+
+    def _maybe_checkpoint(self) -> None:
+        """Every ``checkpoint_interval`` polls, snapshot every live
+        lane's engine state host-side (keyed by rid).  Engine states are
+        pytrees, so this is one generic ``np.asarray`` tree-map per lane
+        regardless of engine; the big-graph lane is not checkpointed (its
+        worker state is mesh-shaped — failover restarts it fresh)."""
+        pol = self.retry
+        if pol is None or self._ckpt is None \
+                or pol.checkpoint_interval <= 0:
+            return
+        self._poll_i += 1
+        if self._poll_i % pol.checkpoint_interval:
+            return
+        for pool in self._pools.values():
+            for i, r in enumerate(pool.reqs):
+                if r is None:
+                    continue
+                self._ckpt.put(
+                    r.rid, self.executor.lane(pool.pool, i),
+                    queue_s=pool._queue_s[i],
+                    service_s=pool._service_s[i],
+                    compile_s=pool._compile_s[i])
+                self._n_checkpoints += 1
+        if self.trace is not None:
+            self.trace.recovery(action="checkpoint",
+                                detail=f"{len(self._ckpt)} lane(s)")
+
+    def _failover(self, err: Exception) -> None:
+        """Persistent executor failure: swap to the degraded-mode
+        executor (``failover_executor``, default a fresh
+        ``LocalExecutor``), requeue every in-flight request — lane
+        requests resume from their host-side checkpoints (NumPy leaves
+        are device-independent), the big-graph request restarts fresh —
+        and record the event in ``routing_log``/``stats()``.  If the dead
+        executor was fault-injected, the injector follows (transient
+        chaos continues) with its device-lost clock disarmed."""
+        self._n_failovers += 1
+        self._failed_over = True
+        old_name = self.executor.name
+        inner = self.failover_executor or LocalExecutor()
+        if isinstance(self.executor, FaultInjector):
+            new_exec = self.executor.for_failover(inner)
+            self._injectors.append(new_exec)
+        else:
+            new_exec = inner
+        self.executor = new_exec
+        for bucket, pool in list(self._pools.items()):
+            q = self._queues.setdefault(bucket, _PendingQueue())
+            for r in pool.reqs:
+                if r is None:
+                    continue
+                snap = self._ckpt.get(r.rid) if self._ckpt is not None \
+                    else None
+                if snap is not None:
+                    self._resume[r.rid] = snap
+                q.append(r)
+        self._pools.clear()             # the dead executor's arrays are
+        #                                 gone with it
+        if self._big is not None:
+            self._big_queue.append(self._big.req)
+            self._big = None
+        self.routing_log.append(dict(
+            event="failover", was=old_name, now=self.executor.name,
+            reason=str(err)))
+        if self.trace is not None:
+            self.trace.recovery(
+                action="failover",
+                detail=f"{old_name} -> {self.executor.name}: {err}")
+
     # ------------------------------------------------------------------
     def _poll_once(self) -> None:
+        """One scheduling round, wrapped in the device-lost failover: a
+        ``DeviceLostError`` escaping the round (persistent executor
+        failure) triggers ONE failover — in-flight work requeued with
+        checkpoint resume, executor swapped — and the poll re-runs on the
+        new executor, so the caller never sees the loss.  Without a retry
+        policy (or with ``failover=False``, or after the one failover) the
+        error propagates as before."""
+        try:
+            self._poll_inner()
+        except DeviceLostError as e:
+            if self.retry is None or not self.retry.failover \
+                    or self._failed_over:
+                raise
+            self._failover(e)
+            self._poll_inner()
+
+    def _poll_inner(self) -> None:
         """One scheduling round: expire deadlines, advance the big-graph
         lane, then for every bucket with work, refill free lanes from its
         queue, run one bounded round, demux completions into the stash,
-        then enforce the step cap (evict-then-raise).  Demuxing BEFORE the
-        cap check — and stashing rather than returning — means a raise can
-        never lose a computed result."""
+        then enforce the step cap.  Demuxing BEFORE the cap check — and
+        stashing rather than returning — means an exception can never
+        lose a computed result."""
         self._expire_deadlines()
         self._poll_big()
         for bucket in self._buckets_with_work():
@@ -852,12 +1210,13 @@ class MBEServer:
                 del self._pools[bucket]
                 continue
             self._n_pad_lanes += pool.B - pool.n_live()
-            pool.run_round(self)
-            self._completed.update(pool.demux(self))
-            pool.enforce_step_cap(self)
+            if pool.run_round(self):
+                self._completed.update(pool.demux(self))
+                pool.enforce_step_cap(self)
             if pool.n_live() == 0 and not queue:
                 del self._pools[bucket]    # fully drained; next wave may
                 #                            plan a different lane count
+        self._maybe_checkpoint()
         if self.trace is not None:
             self.trace.poll(
                 busy_steps=self._busy_steps,
@@ -873,12 +1232,14 @@ class MBEServer:
         out, self._completed = self._completed, {}
         if out:
             for rid, res in out.items():
+                if self._ckpt is not None:      # delivered: snapshot and
+                    self._ckpt.pop(rid)         # any pending resume are
+                    self._resume.pop(rid, None)  # dead weight
                 tenant = self._rid_tenant.pop(rid, None)
                 if tenant is not None and not res.rejected:
+                    st = res.status
                     self._tenant_stat(
-                        tenant, "cancelled" if res.cancelled
-                        else "timed_out" if res.timed_out
-                        else "completed")
+                        tenant, "completed" if st == "done" else st)
                 if self.trace is not None:
                     self.trace.result(
                         rid=rid, status=res.status,
@@ -971,6 +1332,19 @@ class MBEServer:
                     engine=self.engine.name,
                     cancelled=self._n_cancelled,
                     timed_out=self._n_timed_out,
+                    # fault/recovery ledger (serving.faults/.recovery):
+                    # all zero when the subsystem is off; faults_injected
+                    # sums every injector this server has owned (the
+                    # pre-failover one included), minus the reset base
+                    failed=self._n_failed,
+                    step_capped=self._n_step_capped,
+                    retries=self._n_retries,
+                    faults_injected=(sum(i.n_injected
+                                         for i in self._injectors)
+                                     - self._faults_base),
+                    checkpoints=self._n_checkpoints,
+                    quarantined=self._n_quarantined,
+                    failovers=self._n_failovers,
                     # admission ledger (serving.slo): admitted counts
                     # requests accepted into the queues, rejected the
                     # ones refused at admit time, split by reason (all
@@ -1008,6 +1382,8 @@ class MBEServer:
         ``launches``, ``launches_per_poll``, ``rebalanced_steps``,
         ``cancelled``, ``timed_out``, ``admitted``, ``rejected``,
         ``shed``, ``rejected_backpressure``, ``rejected_fairness``,
+        ``failed``, ``step_capped``, ``retries``, ``faults_injected``,
+        ``checkpoints``, ``quarantined``, ``failovers``,
         ``per_tenant``, ``big_busy_per_worker``, ``big_imbalance``, and
         the cache counters ``hits``/``misses``/``evictions`` (so the
         miss count stays an honest per-phase compile count).
@@ -1028,6 +1404,13 @@ class MBEServer:
         self._rebalanced_steps = 0
         self._n_cancelled = 0
         self._n_timed_out = 0
+        self._n_failed = 0
+        self._n_step_capped = 0
+        self._n_retries = 0
+        self._n_checkpoints = 0
+        self._n_quarantined = 0
+        self._n_failovers = 0
+        self._faults_base = sum(i.n_injected for i in self._injectors)
         self._n_admitted = 0
         self._n_rejected = 0
         self._per_tenant = {}

@@ -235,6 +235,9 @@ class SimReport:
     compiles: int
     rounds: int
     timed_out: int
+    skipped_events: int = 0     # trace events the simulator does not
+    #                             model (fault / retry / recovery, schema
+    #                             v2): counted, never crashed on
 
     @property
     def occupancy(self) -> float:
@@ -429,12 +432,25 @@ def simulate(requests: list[SimRequest],
 # trace replay
 # ---------------------------------------------------------------------------
 
+#: terminal statuses the replay simulator does not model: the request
+#: never ran to completion, so its measured step count is partial (or
+#: absent) and replaying it would distort the occupancy ledger.
+#: ``failed`` / ``step_capped`` are schema-v2 statuses (fault-tolerance
+#: subsystem, DESIGN.md §13); v1 traces simply never carry them.
+UNREPLAYABLE_STATUSES = (None, "cancelled", "rejected", "failed",
+                         "step_capped")
+
+#: schema-v2 event kinds the simulator counts instead of modelling.
+UNMODELLED_EVENTS = frozenset(("fault", "retry", "recovery"))
+
+
 def replay(records: list[TraceRecord],
            policy: BucketPolicy | None = None,
            cost: CostModel | None = None,
            admitted_only: bool = True,
            model_deadlines: bool = False,
-           polls: list[dict] | None = None) -> SimReport:
+           polls: list[dict] | None = None,
+           events: list[dict] | None = None) -> SimReport:
     """Replay a recorded trace through the simulator.
 
     Each request's work is its *measured* step count, so replay isolates
@@ -443,13 +459,25 @@ def replay(records: list[TraceRecord],
     round-trip smoke asserts this), and under a *different* policy it
     answers the what-if question the planner sweeps.  Pass the trace's
     ``polls`` (``TraceReader.polls()``) to calibrate the default cost
-    model from the per-round ledger instead of the per-request sums."""
+    model from the per-round ledger instead of the per-request sums.
+
+    Schema-v2 traces may carry fault / retry / recovery events and
+    ``failed`` / ``step_capped`` terminal statuses.  The simulator does
+    not model faults: those rows are skipped (their measured work is
+    partial) and, when the raw ``events`` are passed, the unmodelled
+    event kinds are tallied into ``SimReport.skipped_events`` — so old
+    and new traces both replay, and a caller can see how much of the
+    trace the prediction ignored."""
     cost = cost or CostModel.from_trace(records, polls=polls)
     reqs = [SimRequest.from_record(r, cost) for r in records
             if (r.admitted or not admitted_only) and r.route != "big"
-            and r.status not in (None, "cancelled", "rejected")]
-    return simulate(reqs, policy=policy, cost=cost,
-                    model_deadlines=model_deadlines)
+            and r.status not in UNREPLAYABLE_STATUSES]
+    report = simulate(reqs, policy=policy, cost=cost,
+                      model_deadlines=model_deadlines)
+    if events:
+        report.skipped_events = sum(
+            1 for e in events if e.get("event") in UNMODELLED_EVENTS)
+    return report
 
 
 def compare_trace(records: list[TraceRecord],

@@ -2,7 +2,7 @@
 
 A *trace* is an append-only JSONL file of scheduler events — one JSON
 object per line, every line carrying ``event`` and a monotonic timestamp
-``t`` measured in seconds from the recorder's birth.  Three event kinds:
+``t`` measured in seconds from the recorder's birth.  Event kinds:
 
 * ``admit``  — one per request, at admission: arrival time, submitted
   shape, engine, bucket, route taken, priority, deadline, tenant, and
@@ -15,9 +15,18 @@ object per line, every line carrying ``event`` and a monotonic timestamp
   ledger (``busy_steps`` / ``total_lane_steps``), live request gauges,
   and the executable-cache compile count, so occupancy and saturation
   can be re-plotted over time after the fact.
+* ``fault`` / ``retry`` / ``recovery`` — the fault-tolerance subsystem's
+  ledger (schema version 2, DESIGN.md §13): one ``fault`` per observed
+  fault (site + exception kind), one ``retry`` per backoff-and-retry
+  (site, attempt ordinal, slept delay), one ``recovery`` per recovery
+  action (``checkpoint`` / ``quarantine`` / ``failover`` + detail).
+  Absent entirely when no retry policy or injector is attached.
 
 The schema is versioned (``meta`` line, ``TRACE_VERSION``) and flat —
 every value is a JSON scalar — so traces stay greppable and diffable.
+The reader accepts every version in ``SUPPORTED_TRACE_VERSIONS``
+(version-1 traces predate the fault events and still load; the replay
+simulator skips-and-counts event kinds it does not model).
 ``read_trace`` returns raw event dicts; ``load_requests`` merges each
 request's admit + result pair into one ``TraceRecord`` row, which is the
 unit the replay simulator (``repro.serving.slo.simulate``) and the
@@ -33,7 +42,8 @@ import dataclasses
 import json
 import time
 
-TRACE_VERSION = 1
+TRACE_VERSION = 2           # v2: + fault / retry / recovery events
+SUPPORTED_TRACE_VERSIONS = frozenset((1, 2))
 
 
 class TraceRecorder:
@@ -102,6 +112,23 @@ class TraceRecorder:
                    exec_s=round(exec_s, 6), pending=pending,
                    in_flight=in_flight, compiles=compiles)
 
+    # -- fault-tolerance events (schema v2, DESIGN.md §13) --------------
+    def fault(self, *, site: str, kind: str) -> None:
+        """One observed fault: where it surfaced and the exception kind
+        (or ``corrupted-read`` for a caught scoreboard corruption)."""
+        self.write("fault", site=site, kind=kind)
+
+    def retry(self, *, site: str, attempt: int, delay_s: float) -> None:
+        """One backoff-and-retry: the site, the attempt ordinal that just
+        failed, and the (deadline-clamped) backoff actually slept."""
+        self.write("retry", site=site, attempt=attempt,
+                   delay_s=round(delay_s, 6))
+
+    def recovery(self, *, action: str, detail: str = "") -> None:
+        """One recovery action: ``checkpoint`` | ``quarantine`` |
+        ``failover``, with a human-readable detail string."""
+        self.write("recovery", action=action, detail=detail)
+
 
 @dataclasses.dataclass(frozen=True)
 class TraceRecord:
@@ -146,10 +173,11 @@ def read_trace(path: str) -> list[dict]:
             rec = json.loads(line)
             if rec.get("event") == "meta":
                 v = rec.get("version")
-                if v != TRACE_VERSION:
+                if v not in SUPPORTED_TRACE_VERSIONS:
                     raise ValueError(
                         f"trace {path!r} has schema version {v}, "
-                        f"reader speaks {TRACE_VERSION}")
+                        f"reader speaks "
+                        f"{sorted(SUPPORTED_TRACE_VERSIONS)}")
                 continue
             out.append(rec)
     return out

@@ -99,8 +99,9 @@ def test_local_big_lane_work_stealing_on_one_device():
 
 
 def test_big_lane_respects_step_cap():
-    """A runaway routed-big graph is evicted with the same evict-then-raise
-    contract as lane-pool requests; the server stays serviceable."""
+    """A runaway routed-big graph completes with the same typed
+    ``step_capped`` result as lane-pool requests; the server stays
+    serviceable and other requests are unaffected."""
     heavy = dense_small(16, 32, p=0.55, seed=3, name="runaway")
     light = random_graph(8, 20, 0.2, 0, canonical=True)
     assert int(ed.enumerate_dense(light).steps) < 256    # light fits the cap
@@ -108,14 +109,28 @@ def test_big_lane_respects_step_cap():
                                  big_graph_threshold=14),
                     max_graph_steps=256,
                     executor=LocalExecutor(big_workers=2))
-    srv.admit(heavy)
+    rid_h = srv.admit(heavy)
     rid_l = srv.admit(light)
+    got = srv.drain()
+    assert srv.stats()["in_flight"] == 0         # big lane evicted
+    assert got[rid_h].status == "step_capped"
+    assert got[rid_h].bicliques is None
+    assert rid_l in got                          # light request still served
+    assert got[rid_l].n_max == int(ed.enumerate_dense(light).n_max)
+
+
+def test_big_lane_strict_step_cap_raises():
+    """``strict_step_cap=True`` keeps the legacy evict-then-raise contract
+    on the big-graph route too."""
+    heavy = dense_small(16, 32, p=0.55, seed=3, name="runaway")
+    srv = MBEServer(BucketPolicy(mode="pow2", steps_per_round=64,
+                                 big_graph_threshold=14),
+                    max_graph_steps=256, strict_step_cap=True,
+                    executor=LocalExecutor(big_workers=2))
+    srv.admit(heavy)
     with pytest.raises(RuntimeError, match="max_graph_steps"):
         srv.drain()
     assert srv.stats()["in_flight"] == 0         # big lane evicted
-    got = srv.drain()                            # light request still served
-    assert rid_l in got
-    assert got[rid_l].n_max == int(ed.enumerate_dense(light).n_max)
 
 
 # ---------------------------------------------------------------------------

@@ -373,30 +373,54 @@ def test_truncated_false_when_not_collecting():
     assert not r.truncated
 
 
-def test_poisoned_chunk_preserves_other_buckets_requests():
-    """An in-flight batch blowing its step budget must NOT lose the other
-    buckets' queued requests (the old flush() cleared the whole pending
-    list up front)."""
-    poison = _random_graph(4, 12, 0.5, 7)        # bucket (4, 16), runs first
+def test_runaway_chunk_preserves_other_buckets_requests():
+    """A batch blowing its step budget must NOT lose the other buckets'
+    queued requests (the old flush() cleared the whole pending list up
+    front, and the old cap contract raised mid-drain).  With typed
+    ``step_capped`` results (PR-10) every request — runaway or not —
+    gets a terminal result and the server drains clean."""
+    runaway = _random_graph(4, 12, 0.5, 7)       # bucket (4, 16), runs first
     others = [_random_graph(12, 20, 0.3, s) for s in range(3)]  # (16, 32)
     srv = MBEServer(BucketPolicy(mode="pow2", max_batch=4,
                                  steps_per_round=4),
                     max_graph_steps=4)
-    srv.submit(poison)
+    rid_r = srv.admit(runaway)
+    rids_o = [srv.admit(g) for g in others]
+    got = srv.drain()
+    assert got[rid_r].status == "step_capped"
+    assert got[rid_r].step_capped and got[rid_r].bicliques is None
+    for rid in rids_o:                 # every request delivered, none lost
+        assert rid in got
+        assert got[rid].status in ("done", "step_capped")
+    st_ = srv.stats()
+    assert st_["step_capped"] == sum(
+        1 for r in got.values() if r.status == "step_capped") >= 1
+    assert st_["pending"] == 0 and st_["in_flight"] == 0
+
+
+def test_strict_step_cap_restores_the_legacy_raise():
+    """``strict_step_cap=True`` is the escape hatch for callers that want
+    a blown step budget to be loud: evict the runaway, then raise."""
+    runaway = _random_graph(4, 12, 0.5, 7)
+    others = [_random_graph(12, 20, 0.3, s) for s in range(3)]
+    srv = MBEServer(BucketPolicy(mode="pow2", max_batch=4,
+                                 steps_per_round=4),
+                    max_graph_steps=4, strict_step_cap=True)
+    srv.submit(runaway)
     for g in others:
         srv.submit(g)
     with pytest.raises(RuntimeError, match="max_graph_steps"):
         srv.flush()
     st_ = srv.stats()
     assert st_["pending"] == len(others)         # unserved requests survive
-    assert st_["in_flight"] == 0                 # the poisoned lane evicted
+    assert st_["in_flight"] == 0                 # the runaway lane evicted
 
 
 def test_completed_results_survive_step_cap_eviction():
     """A lane finishing in the SAME round another lane blows the step cap
-    must not lose its computed result: demux happens before the cap check
-    and results are stashed across the raise; the runaway is evicted so
-    the server stays serviceable."""
+    must not lose its computed result: demux happens before the cap
+    check, so the finisher's payload is delivered intact alongside the
+    runaway's typed ``step_capped`` result."""
     from repro.data.generators import dense_small
     runaway = dense_small(14, 28, p=0.55, seed=3, name="runaway")
     light = _random_graph(9, 17, 0.08, 1)        # finishes within one round
@@ -405,12 +429,11 @@ def test_completed_results_survive_step_cap_eviction():
                     max_graph_steps=64)
     rid_r = srv.admit(runaway)
     rid_l = srv.admit(light)
-    with pytest.raises(RuntimeError, match="max_graph_steps"):
-        srv.drain()
+    got = srv.drain()
     assert srv.stats()["in_flight"] == 0         # runaway evicted
-    got = srv.poll()                             # stashed result delivered
-    assert set(got) == {rid_l}
-    assert rid_r not in got
+    assert got[rid_r].status == "step_capped"
+    assert got[rid_r].steps >= 64                # partial counters kept
+    assert got[rid_l].status == "done"
     assert got[rid_l].n_max == int(ed.enumerate_dense(light).n_max)
 
 

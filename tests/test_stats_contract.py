@@ -7,9 +7,10 @@ registered engine and all three serving routes (local-pool,
 sharded-mesh, big-graph) — so a stats key can never silently appear,
 vanish, or change type underneath a consumer.  Likewise the result
 lifecycle: every terminal result's ``status`` is one of exactly
-{done, cancelled, timed_out, rejected}, and the server's counters add
-up to the delivered statuses (including the admission ledger and the
-per-tenant split).
+{done, cancelled, timed_out, rejected, failed, step_capped}, and the
+server's counters add up to the delivered statuses (including the
+admission ledger, the per-tenant split, and the fault-tolerance
+counters of DESIGN.md §13).
 """
 import pytest
 from _graphs import random_graph
@@ -17,11 +18,17 @@ from _graphs import random_graph
 from repro.core.engine import get_engine, list_engines
 from repro.data.generators import dense_small, random_unipartite
 from repro.serving import (MONOTONIC_STATS, STATS_SCHEMA, BucketPolicy,
-                           MBEServer, ShardedExecutor)
+                           FaultPlan, MBEServer, RetryPolicy,
+                           ShardedExecutor)
 from repro.serving.slo import AdmissionPolicy
 from repro.sharding.axes import mbe_serve_mesh
 
-STATUSES = {"done", "cancelled", "timed_out", "rejected"}
+STATUSES = {"done", "cancelled", "timed_out", "rejected", "failed",
+            "step_capped"}
+
+#: the fault-tolerance counters PR-10 added to the contract
+FAULT_COUNTERS = {"retries", "faults_injected", "checkpoints",
+                  "quarantined", "failovers", "failed", "step_capped"}
 
 
 def _graphs_for(engine_name: str, n: int = 3, big: bool = False):
@@ -95,7 +102,8 @@ def test_result_status_schema_and_counter_consistency(engine):
     assert srv.cancel(r_cancel)
     got = srv.drain()
     statuses = {rid: got[rid].status for rid in got}
-    assert set(statuses.values()) == STATUSES
+    assert set(statuses.values()) == {"done", "cancelled", "timed_out",
+                                      "rejected"}
     assert statuses[r_done] == "done"
     assert statuses[r_dead] == "timed_out"
     assert statuses[r_cancel] == "cancelled"
@@ -119,7 +127,70 @@ def test_result_status_schema_and_counter_consistency(engine):
     assert stats["shed"] == 0 and stats["rejected_fairness"] == 0
     pt = stats["per_tenant"]["t"]
     assert pt == dict(admitted=3, rejected=1, completed=1, cancelled=1,
-                      timed_out=1)
+                      timed_out=1, failed=0, step_capped=0)
+
+
+def test_fault_counters_are_contract_keys():
+    """PR-10's fault-tolerance counters are part of the schema, counted
+    as monotonic (so ``reset_stats`` zeros them), and read 0 on a server
+    with no recovery machinery attached."""
+    assert FAULT_COUNTERS <= set(STATS_SCHEMA)
+    assert FAULT_COUNTERS <= MONOTONIC_STATS
+    srv = MBEServer(BucketPolicy(max_batch=2))
+    srv.admit(random_graph(6, 12, 0.3, 1, canonical=True))
+    srv.drain()
+    stats = srv.stats()
+    for key in FAULT_COUNTERS:
+        assert stats[key] == 0, f"{key} nonzero with recovery disabled"
+
+
+def test_fault_counters_move_and_reset_under_chaos():
+    """Under an injector + retry policy the fault counters move, the
+    delivered statuses stay in the closed set, and ``reset_stats``
+    rebaselines ``faults_injected`` (the injector's own count keeps
+    growing; the stat is per measured phase)."""
+    def chaos_server():
+        return MBEServer(
+            BucketPolicy(max_batch=2, steps_per_round=16),
+            retry=RetryPolicy(max_attempts=4, backoff_s=1e-5,
+                              checkpoint_interval=2),
+            fault_injector=FaultPlan(seed=2, launch_rate=0.25))
+
+    srv = chaos_server()
+    gs = [random_graph(6 + i, 12, 0.3, 20 + i, canonical=True)
+          for i in range(3)]
+    for g in gs:
+        srv.admit(g)
+    got = srv.drain()
+    assert all(r.status in STATUSES for r in got.values())
+    stats = srv.stats()
+    _assert_schema(stats)
+    assert stats["faults_injected"] > 0
+    assert stats["retries"] > 0
+    assert stats["checkpoints"] > 0
+    srv.reset_stats()
+    after = srv.stats()
+    for key in FAULT_COUNTERS:
+        assert after[key] == 0, f"monotonic {key} survived reset"
+
+    # chaos determinism: an identical second run injects the identical
+    # fault sequence and delivers identical payloads
+    srv2 = chaos_server()
+    [srv2.admit(g) for g in gs]
+    got2 = srv2.drain()
+    srv3 = chaos_server()
+    [srv3.admit(g) for g in gs]
+    got3 = srv3.drain()
+    assert sorted(got2) == sorted(got3)
+    for rid in got2:
+        assert got2[rid].status == got3[rid].status
+        assert got2[rid].metric == got3[rid].metric
+        assert got2[rid].steps == got3[rid].steps
+    assert srv2._injectors[0].log == srv3._injectors[0].log
+    s2, s3 = srv2.stats(), srv3.stats()
+    for key in ("faults_injected", "retries", "quarantined", "failovers",
+                "failed", "step_capped"):
+        assert s2[key] == s3[key], key
 
 
 def test_reset_stats_covers_exactly_the_monotonic_keys():
